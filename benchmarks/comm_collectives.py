@@ -1,0 +1,66 @@
+"""Infrastructure-level verification of the paper's communication claim.
+
+Reads the dry-run artifacts for the SAME (arch, shape, mesh) lowered under
+the three algorithms (fedgda_gt / local_sgda / sync_gda) and compares the
+EXECUTED collective bytes per round from the trip-count-scaled HLO census.
+
+Expected (DESIGN.md §2): per round, Local SGDA moves ~1 model of traffic,
+FedGDA-GT ~2x that (tracked gradient + aggregate), sync GDA ~K x.  Rounds
+to eps come from benchmarks/fig1; total = product."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+
+def _coll_bytes(rec):
+    tot = 0
+    for kind, s in rec.get("census", {}).get("collectives_executed", {}).items():
+        f = 2.0 if kind == "all-reduce" else 1.0
+        tot += f * s["bytes"]
+    return tot
+
+
+def run(rows=None, dryrun_dir: str = "experiments/dryrun"):
+    rows = [] if rows is None else rows
+    combos = {}
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(path))
+        if rec["kind"] != "train":
+            continue
+        algo = rec.get("algorithm") or "fedgda_gt"
+        key = (rec["arch"], rec["shape"], rec["mesh"])
+        combos.setdefault(key, {})[algo] = rec
+    for (arch, shape, mesh), algos in sorted(combos.items()):
+        if len(algos) < 2:
+            continue
+        base = _coll_bytes(algos.get("local_sgda", {})) or None
+        for algo, rec in sorted(algos.items()):
+            b = _coll_bytes(rec)
+            rows.append(
+                {
+                    "arch": arch,
+                    "shape": shape,
+                    "mesh": mesh,
+                    "algorithm": algo,
+                    "collective_GiB_per_round": f"{b / 2**30:.3f}",
+                    "vs_local_sgda": f"{b / base:.2f}x" if base else "",
+                }
+            )
+    if rows:
+        emit(
+            rows,
+            ["arch", "shape", "mesh", "algorithm",
+             "collective_GiB_per_round", "vs_local_sgda"],
+            "per-round collective traffic by algorithm (HLO census)",
+        )
+    else:
+        print("\n# ==== comm_collectives: no multi-algorithm dry-runs found ====")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

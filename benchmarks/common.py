@@ -1,0 +1,39 @@
+"""Shared helpers for the benchmark drivers."""
+from __future__ import annotations
+
+import csv
+import io
+import os
+import sys
+import time
+from typing import Dict, Iterable, List
+
+
+def emit(rows: List[Dict], header: Iterable[str], title: str) -> None:
+    """Print one benchmark table as CSV with a title banner."""
+    print(f"\n# ==== {title} ====")
+    w = csv.DictWriter(sys.stdout, fieldnames=list(header))
+    w.writeheader()
+    for r in rows:
+        w.writerow({k: r.get(k, "") for k in header})
+    sys.stdout.flush()
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3):
+    """Median wall time of fn(*args) in microseconds (host-level; the
+    numbers contextualize CPU runs, not TPU projections)."""
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def out_dir() -> str:
+    d = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
+    os.makedirs(d, exist_ok=True)
+    return d

@@ -1,0 +1,242 @@
+"""Roofline analysis (deliverable g) — three terms per (arch x shape x mesh),
+derived from the dry-run artifacts in experiments/dryrun/.
+
+  compute   = executed_dot_flops / peak_flops          [census, exact trip-scaled]
+  memory    = analytic streaming bytes / HBM bandwidth [documented model below]
+  collective= traffic-weighted executed collective bytes / ICI link bw
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+The census numbers come from the partitioned (per-device) HLO with while
+bodies scaled by their known_trip_count (repro.launch.hlo_census), so the
+compute and collective terms are per-chip executed quantities.  The memory
+term is analytic: XLA's "bytes accessed" has the same scan-body-once issue
+and double-counts fusion-internal traffic, so we model HBM streaming
+explicitly:
+
+  train   : (K+1) grad evals x 3 passes over the local param shard
+            (fwd read, bwd read, grad write) + 2 update passes
+            + activation traffic 12 bytes/elem x T_chip x d x L_eff
+  prefill : 2 passes over param shard + activations + KV-cache write
+  decode  : 1 pass over ACTIVE param shard + full KV-cache read per token
+
+Collective traffic factors (ring algorithms, result-shape census):
+  all-reduce 2x, all-gather/reduce-scatter/all-to-all/permute 1x.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, INPUT_SHAPES
+from repro.models import init_params
+
+from .common import emit
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+BYTES = 2  # bf16
+
+TRAFFIC_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_PARAM_CACHE: Dict[str, Dict[str, float]] = {}
+
+
+def param_counts(arch: str) -> Dict[str, float]:
+    """Exact total and ACTIVE (top-k experts only) parameter counts."""
+    if arch in _PARAM_CACHE:
+        return _PARAM_CACHE[arch]
+    cfg = ARCHS[arch]
+    tree = jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg, jnp.bfloat16)
+    )
+    total = 0
+    active = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        total += n
+        keys = [getattr(p, "key", "") for p in path]
+        if cfg.num_experts and "moe" in keys and keys[-1] in ("gate", "up", "down"):
+            active += n * cfg.top_k / cfg.num_experts
+        else:
+            active += n
+    _PARAM_CACHE[arch] = {"total": float(total), "active": float(active)}
+    return _PARAM_CACHE[arch]
+
+
+def _mesh_dims(mesh: str) -> Dict[str, int]:
+    if mesh == "16x16":
+        return {"chips": 256, "data": 16, "model": 16, "pod": 1}
+    return {"chips": 512, "data": 16, "model": 16, "pod": 2}
+
+
+def _shards(cfg, md) -> Dict[str, int]:
+    """How many ways params are sharded / how many agents (DESIGN.md §4)."""
+    if cfg.fed_mode == "A":
+        m = md["data"] * md["pod"]
+        param_shards = md["model"]
+    else:  # B: agents over pod; experts+model sharded over (data, model)
+        m = md["pod"]
+        param_shards = md["data"] * md["model"]
+    return {"agents": m, "param_shards": param_shards}
+
+
+def analytic_memory_bytes(rec: Dict, cfg, counts) -> float:
+    """Streaming HBM bytes per chip per step (model in module docstring)."""
+    md = _mesh_dims(rec["mesh"])
+    sh = _shards(cfg, md)
+    shape = INPUT_SHAPES[rec["shape"]]
+    p_shard = counts["total"] * BYTES / sh["param_shards"]
+    p_shard_active = counts["active"] * BYTES / sh["param_shards"]
+    L = cfg.num_layers
+    d = cfg.d_model
+    if rec["kind"] == "train":
+        K = rec.get("num_local_steps") or 4
+        t_chip = shape.global_batch * shape.seq_len / md["chips"]
+        act = 12.0 * t_chip * d * L
+        return (K + 1) * (3.0 * p_shard_active) + 2.0 * p_shard + act
+    if rec["kind"] == "prefill":
+        t_chip = shape.global_batch * shape.seq_len / md["chips"]
+        kv = 2.0 * t_chip * cfg.num_kv_heads * cfg.head_dim * L * BYTES
+        act = 8.0 * t_chip * d * L
+        return 2.0 * p_shard_active + act + kv
+    # decode: one token; full KV (or SSM state) read dominates
+    b_chip = max(1.0, shape.global_batch / (md["data"] * md["pod"]))
+    kv_bytes = 0.0
+    for kind in cfg.layer_types:
+        if kind in ("attn", "moe"):
+            kv_bytes += 2 * shape.seq_len * cfg.num_kv_heads * cfg.head_dim * BYTES
+        elif kind == "local":
+            kv_bytes += (
+                2 * min(shape.seq_len, cfg.sliding_window)
+                * cfg.num_kv_heads * cfg.head_dim * BYTES
+            )
+        else:  # ssm: O(1) recurrent state
+            kv_bytes += (cfg.d_inner * max(cfg.ssm_state, 1) * 4)
+    if cfg.shared_attn_every:
+        n_shared = cfg.num_layers // cfg.shared_attn_every
+        kv_bytes += n_shared * 2 * shape.seq_len * cfg.num_kv_heads * cfg.head_dim * BYTES
+    kv_bytes /= md["model"]  # KV heads / state sharded over model axis
+    return p_shard_active + b_chip * kv_bytes
+
+
+def model_flops(rec: Dict, counts) -> float:
+    """'Useful' FLOPs per chip: 6 N_active D (train) / 2 N_active D (serve)."""
+    md = _mesh_dims(rec["mesh"])
+    shape = INPUT_SHAPES[rec["shape"]]
+    n_act = counts["active"]
+    if rec["kind"] == "train":
+        K = rec.get("num_local_steps") or 4
+        d_tokens = shape.global_batch * shape.seq_len * K
+        return 6.0 * n_act * d_tokens / md["chips"]
+    if rec["kind"] == "prefill":
+        return 2.0 * n_act * shape.global_batch * shape.seq_len / md["chips"]
+    return 2.0 * n_act * shape.global_batch / md["chips"]
+
+
+def collective_seconds(census: Dict) -> float:
+    total = 0.0
+    for kind, s in census.get("collectives_executed", {}).items():
+        total += TRAFFIC_FACTOR.get(kind, 1.0) * s["bytes"]
+    return total / ICI_BW
+
+
+def suggestion(dom: str, rec: Dict, cfg) -> str:
+    if dom == "collective":
+        if rec["kind"] == "train":
+            return (
+                "shard params over fewer model ways / keep agent copies "
+                "resident to remove in-loop all-gathers"
+            )
+        return "reduce tensor-parallel degree or overlap collectives with compute"
+    if dom == "memory":
+        if rec["kind"] == "decode":
+            return "quantize KV cache / shrink active params per token (batch more)"
+        return "increase per-chip batch or cut activation traffic (better fusion)"
+    return "compute-bound: raise MFU via larger MXU-aligned tiles / less remat"
+
+
+def analyze(rec: Dict) -> Optional[Dict]:
+    cfg = ARCHS[rec["arch"]]
+    counts = param_counts(rec["arch"])
+    census = rec.get("census") or {}
+    flops_exec = census.get("executed_dot_flops")
+    if flops_exec is None:
+        return None
+    t_comp = flops_exec / PEAK_FLOPS
+    t_mem = analytic_memory_bytes(rec, cfg, counts) / HBM_BW
+    t_coll = collective_seconds(census)
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(rec, counts)
+    bound = max(terms.values())
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "compute_s": f"{t_comp:.4e}",
+        "memory_s": f"{t_mem:.4e}",
+        "collective_s": f"{t_coll:.4e}",
+        "dominant": dom,
+        "model_flops": f"{mf:.3e}",
+        "useful_ratio": f"{mf / max(flops_exec, 1.0):.3f}",
+        "roofline_frac": f"{(mf / PEAK_FLOPS) / max(bound, 1e-12):.3f}",
+        "fix": suggestion(dom, rec, cfg),
+    }
+
+
+HEADER = [
+    "arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+    "dominant", "model_flops", "useful_ratio", "roofline_frac", "fix",
+]
+
+
+def run(rows=None, dryrun_dir: str = "experiments/dryrun", meshes=("16x16",)):
+    rows = [] if rows is None else rows
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(path))
+        if rec["mesh"] not in meshes:
+            continue
+        if rec.get("algorithm") not in (None, "fedgda_gt"):
+            continue
+        row = analyze(rec)
+        if row:
+            rows.append(row)
+    emit(rows, HEADER, f"roofline terms per (arch x shape), mesh={','.join(meshes)}")
+
+    # the §Perf optimized variants, when present (experiments/perf2)
+    opt_rows = []
+    for path in sorted(glob.glob("experiments/perf2/*.json")):
+        rec = json.load(open(path))
+        if rec["mesh"] not in meshes:
+            continue
+        row = analyze(rec)
+        if row:
+            tags = os.path.basename(path).split("__")[3:]
+            row["arch"] = row["arch"] + " [" + "+".join(t.removesuffix(".json") for t in tags) + "]"
+            opt_rows.append(row)
+    if opt_rows:
+        emit(opt_rows, HEADER, "roofline terms, §Perf OPTIMIZED variants")
+        rows.extend(opt_rows)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    meshes = ("16x16", "2x16x16") if "--all-meshes" in sys.argv else ("16x16",)
+    run(meshes=meshes)

@@ -1,0 +1,59 @@
+"""Benchmark driver: one table per paper figure/claim + the roofline.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run fig1 roofline   # subset
+
+Tables:
+  fig1        — quadratic game convergence (paper Fig 1)
+  fig2        — robust regression under heterogeneity (paper Fig 2)
+  fig3        — Local SGDA fixed-point bias vs K (paper Fig 3 / App C)
+  generalization — Theorem-2 bound vs measured gap (paper Sec 4)
+  comm        — bytes-to-accuracy, star-topology model (paper headline)
+  collectives — per-round collective traffic by algorithm (HLO census)
+  kernels     — Pallas kernels vs ref oracles
+  roofline    — three-term roofline per (arch x shape) (deliverable g)
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    want = set(a for a in sys.argv[1:] if not a.startswith("-"))
+    from . import (
+        comm_collectives,
+        comm_efficiency,
+        fig1_quadratic,
+        fig2_robust_regression,
+        fig3_fixed_point,
+        generalization,
+        kernels,
+        roofline,
+    )
+
+    suites = {
+        "fig1": fig1_quadratic.run,
+        "fig2": fig2_robust_regression.run,
+        "fig3": fig3_fixed_point.run,
+        "generalization": generalization.run,
+        "comm": comm_efficiency.run,
+        "collectives": comm_collectives.run,
+        "kernels": kernels.run,
+        "roofline": roofline.run,
+    }
+    summary = []
+    for name, fn in suites.items():
+        if want and name not in want:
+            continue
+        t0 = time.perf_counter()
+        fn()
+        summary.append((name, time.perf_counter() - t0))
+    print("\n# ==== summary ====")
+    print("benchmark,seconds")
+    for name, dt in summary:
+        print(f"{name},{dt:.1f}")
+
+
+if __name__ == "__main__":
+    main()

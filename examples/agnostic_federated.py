@@ -1,0 +1,54 @@
+"""Agnostic Federated Learning (paper Appendix A.2 / Mohri et al.) with
+FedGDA-GT: learn a model that is minimax-fair over agent distributions.
+
+x = regression model, y = mixture weights lambda on the simplex; the
+adversary shifts weight onto the worst-served agents, and the saddle point
+equalizes their risks.
+
+    PYTHONPATH=src python examples/agnostic_federated.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import make_fedgda_gt_round
+from repro.problems import (
+    make_agnostic_problem,
+    per_agent_risks,
+    uniform_lambda,
+)
+
+M, DIM, T = 5, 8, 1500
+
+
+def main() -> None:
+    prob = make_agnostic_problem(
+        jax.random.PRNGKey(0), dim=DIM, num_samples=80, num_agents=M, shift=4.0
+    )
+    rnd = jax.jit(make_fedgda_gt_round(prob.loss, 5, 2e-3, proj_y=prob.proj_y))
+    frozen = jax.jit(
+        make_fedgda_gt_round(prob.loss, 5, 2e-3, proj_y=lambda y: uniform_lambda(M))
+    )
+    x0, y0 = jnp.zeros(DIM), uniform_lambda(M)
+    xa, ya = x0, y0
+    xu, yu = x0, y0
+    for t in range(T):
+        xa, ya = rnd(xa, ya, prob.agent_data)
+        xu, yu = frozen(xu, yu, prob.agent_data)
+    ra = np.asarray(per_agent_risks(prob, xa))
+    ru = np.asarray(per_agent_risks(prob, xu))
+    print("agents have CONFLICTING true models (disagreement grows with i)\n")
+    print(f"{'agent':>6} {'uniform-FL risk':>16} {'agnostic risk':>14} {'lambda*':>9}")
+    for i in range(M):
+        print(f"{i:6d} {ru[i]:16.4f} {ra[i]:14.4f} {float(ya[i]):9.4f}")
+    print(f"\nworst-agent risk:  uniform={ru.max():.4f}  agnostic={ra.max():.4f}")
+    print(f"risk spread:       uniform={ru.max()-ru.min():.4f}  "
+          f"agnostic={ra.max()-ra.min():.4f}")
+    print("\nthe agnostic model trades mean risk for worst-case fairness —")
+    print("solved by the SAME FedGDA-GT round as every other problem here.")
+
+
+if __name__ == "__main__":
+    main()

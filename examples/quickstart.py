@@ -1,0 +1,60 @@
+"""Quickstart: the paper in 60 seconds.
+
+Solves the Section-5.1 federated quadratic minimax game with the three
+algorithms the paper compares — centralized GDA, Local SGDA and FedGDA-GT —
+and prints the optimality gap every few hundred rounds.  FedGDA-GT is the
+only one that is simultaneously accurate (exact limit) and cheap
+(K local steps per communication round).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import (
+    make_fedgda_gt_round,
+    make_local_sgda_round,
+    run_rounds,
+    tree_sq_dist,
+)
+from repro.problems import make_quadratic_problem, quadratic_minimax_point
+
+
+def main() -> None:
+    # 20 heterogeneous agents, d = 50 (the paper's own setup)
+    prob = make_quadratic_problem(
+        jax.random.PRNGKey(0), dim=50, num_samples=500, num_agents=20
+    )
+    x_star, y_star = quadratic_minimax_point(prob)
+
+    def gap(x, y):
+        return {"gap": tree_sq_dist(x, x_star) + tree_sq_dist(y, y_star)}
+
+    K, eta, T = 20, 1e-4, 2000
+    algos = {
+        "centralized GDA   (communicates every step)":
+            make_local_sgda_round(prob.loss, 1, eta, eta),
+        "Local SGDA  K=20  (biased fixed point)":
+            make_local_sgda_round(prob.loss, K, eta, eta),
+        "FedGDA-GT   K=20  (this paper)":
+            make_fedgda_gt_round(prob.loss, K, eta),
+    }
+    x0 = jnp.zeros(50)
+    print(f"rounds={T}  local steps K={K}  eta={eta}\n")
+    for name, rnd in algos.items():
+        (_, _), m = run_rounds(jax.jit(rnd), x0, x0, prob.agent_data, T, gap)
+        g = m["gap"]
+        marks = "  ".join(
+            f"t={t}: {float(g[t]):.1e}" for t in (0, 100, 500, 1000, T - 1)
+        )
+        print(f"{name}\n  {marks}\n")
+    print("FedGDA-GT converges linearly to the EXACT minimax point with a")
+    print("constant stepsize; Local SGDA plateaus at its bias floor;")
+    print("centralized GDA matches FedGDA-GT's limit but needs K x more")
+    print("communication rounds (Theorem 1).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Paper Section 5.2 — robust linear regression under gross contamination.
+
+Reproduces Figure 2: FedGDA-GT vs Local SGDA at three heterogeneity levels
+alpha in {1, 5, 20}, printing robust-loss trajectories and each method's
+distance from the centralized projected-GDA reference solution.
+
+    PYTHONPATH=src python examples/robust_regression.py
+"""
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import make_fedgda_gt_round, make_local_sgda_round
+from repro.problems import make_robust_regression_problem, robust_loss
+
+DIM, N, M, K, T = 20, 100, 10, 10, 400
+
+
+def stable_eta(prob) -> float:
+    a = prob.agent_data["a"]
+    H = 2 * jnp.einsum("mnd,mne->de", a, a) / (a.shape[0] * a.shape[1])
+    return 0.1 / float(jnp.linalg.eigvalsh(H + jnp.eye(DIM))[-1])
+
+
+def main() -> None:
+    for alpha in (1.0, 5.0, 20.0):
+        prob = make_robust_regression_problem(
+            jax.random.PRNGKey(0), dim=DIM, num_samples=N, num_agents=M,
+            alpha=alpha,
+        )
+        eta = stable_eta(prob)
+        r_gt = jax.jit(make_fedgda_gt_round(prob.loss, K, eta, proj_y=prob.proj_y))
+        r_ls = jax.jit(
+            make_local_sgda_round(prob.loss, K, eta, eta, proj_y=prob.proj_y)
+        )
+        z = jnp.zeros(DIM)
+        xg, yg, xl, yl = z, z, z, z
+        print(f"\n== alpha={alpha} (eta={eta:.2e}) ==")
+        print(f"{'round':>6} {'robust_loss GT':>16} {'robust_loss LS':>16}")
+        for t in range(T + 1):
+            if t % (T // 4) == 0:
+                print(
+                    f"{t:6d} {float(robust_loss(prob, xg)):16.4f} "
+                    f"{float(robust_loss(prob, xl)):16.4f}"
+                )
+            if t < T:
+                xg, yg = r_gt(xg, yg, prob.agent_data)
+                xl, yl = r_ls(xl, yl, prob.agent_data)
+        # reference: centralized projected GDA with the same step budget
+        r_c = jax.jit(
+            make_local_sgda_round(prob.loss, 1, eta, eta, proj_y=prob.proj_y)
+        )
+        xc, yc = z, z
+        for _ in range(T * K):
+            xc, yc = r_c(xc, yc, prob.agent_data)
+        print(
+            f"   dist to centralized solution: "
+            f"GT={float(jnp.linalg.norm(xg - xc)):.2e}  "
+            f"LS={float(jnp.linalg.norm(xl - xc)):.2e}"
+        )
+
+
+if __name__ == "__main__":
+    main()

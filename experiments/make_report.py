@@ -1,0 +1,94 @@
+"""Regenerate the machine-derived tables of EXPERIMENTS.md from the dry-run
+artifacts.  Usage:  PYTHONPATH=src:. python experiments/make_report.py"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks.roofline import analyze  # noqa: E402
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+
+def dryrun_table(dirname="experiments/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        rec = json.load(open(path))
+        if rec.get("algorithm") not in (None, "fedgda_gt"):
+            continue
+        ma = rec["memory_analysis"]
+        coll = rec.get("census", {}).get("collectives_executed", {})
+        coll_gib = sum(v["bytes"] for v in coll.values()) / 2**30
+        rows.append(
+            (
+                rec["arch"], SHAPE_ORDER.get(rec["shape"], 9), rec["shape"],
+                rec["mesh"],
+                f"{rec['lower_s']:.1f}", f"{rec['compile_s']:.1f}",
+                f"{ma.get('argument_size_in_bytes', 0)/2**30:.2f}",
+                f"{ma.get('temp_size_in_bytes', 0)/2**30:.2f}",
+                f"{rec.get('census', {}).get('executed_dot_flops', 0):.2e}",
+                f"{coll_gib:.1f}",
+            )
+        )
+    rows.sort()
+    out = [
+        "| arch | shape | mesh | lower s | compile s | args GiB/dev | temp GiB/dev | exec dot FLOPs/dev | coll GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        out.append("| " + " | ".join([r[0], r[2], *r[3:]]) + " |")
+    return "\n".join(out)
+
+
+def roofline_table(dirname="experiments/dryrun"):
+    out = [
+        "| arch | shape | compute s | memory s | collective s | dominant | MODEL_FLOPS/dev | useful ratio | roofline frac | what would move the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        rec = json.load(open(path))
+        if rec["mesh"] != "16x16":
+            continue
+        if rec.get("algorithm") not in (None, "fedgda_gt"):
+            continue
+        r = analyze(rec)
+        if not r:
+            continue
+        out.append(
+            "| {arch} | {shape} | {compute_s} | {memory_s} | {collective_s} "
+            "| {dominant} | {model_flops} | {useful_ratio} | {roofline_frac} "
+            "| {fix} |".format(**r)
+        )
+    return "\n".join(out)
+
+
+def perf_rows(paths):
+    out = []
+    for label, path in paths:
+        if not os.path.exists(path):
+            continue
+        rec = json.load(open(path))
+        r = analyze(rec)
+        coll = rec.get("census", {}).get("collectives_executed", {})
+        coll_gib = sum(v["bytes"] for v in coll.values()) / 2**30
+        temp = rec["memory_analysis"].get("temp_size_in_bytes", 0) / 2**30
+        out.append(
+            f"| {label} | {r['compute_s']} | {r['collective_s']} "
+            f"| {coll_gib:.0f} | {temp:.0f} | {r['useful_ratio']} |"
+        )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("## generated: dry-run table\n")
+        print(dryrun_table())
+    if which in ("all", "roofline"):
+        print("\n## generated: roofline table (single-pod 16x16)\n")
+        print(roofline_table())

@@ -1,0 +1,53 @@
+"""Minimal pytree checkpointing (npz-based, dependency-free).
+
+Layout: <dir>/ckpt_<step>.npz holding flattened leaves plus a treedef pickle.
+Good enough for the single-host examples; on a real cluster this would be
+swapped for tensorstore/orbax behind the same three functions.
+"""
+from __future__ import annotations
+
+import io
+import os
+import pickle
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+
+def save_checkpoint(directory: str, step: int, tree: Pytree) -> str:
+    os.makedirs(directory, exist_ok=True)
+    leaves, treedef = jax.tree.flatten(tree)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    arrays = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    buf = io.BytesIO()
+    np.savez(buf, treedef=np.frombuffer(pickle.dumps(treedef), dtype=np.uint8), **arrays)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(buf.getvalue())
+    os.replace(tmp, path)  # atomic publish
+    return path
+
+
+def restore_checkpoint(path: str) -> Pytree:
+    with np.load(path) as z:
+        treedef = pickle.loads(z["treedef"].tobytes())
+        n = len([k for k in z.files if k.startswith("leaf_")])
+        leaves = [z[f"leaf_{i}"] for i in range(n)]
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def latest_checkpoint(directory: str) -> Optional[Tuple[int, str]]:
+    if not os.path.isdir(directory):
+        return None
+    best = None
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"ckpt_(\d+)\.npz", name)
+        if m:
+            step = int(m.group(1))
+            if best is None or step > best[0]:
+                best = (step, os.path.join(directory, name))
+    return best

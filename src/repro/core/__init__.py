@@ -1,0 +1,49 @@
+"""Core federated minimax algorithms (the paper's contribution)."""
+from .types import (
+    MinimaxProblem,
+    SaddleField,
+    grad_xy,
+    identity_proj,
+    tree_broadcast_agents,
+    tree_mean_over_agents,
+    tree_sq_dist,
+)
+from .projections import l2_ball_proj, box_proj, simplex_proj
+from .gda import make_gda_step, run_rounds
+from .local_sgda import make_local_sgda_round, make_scheduled_local_sgda_round
+from .fedgda_gt import make_fedgda_gt_round, communication_bytes_per_round
+from .fixed_point import (
+    APPENDIX_C_MINIMAX_POINT,
+    appendix_c_fixed_point,
+    prop1_residual,
+)
+from .generalization import (
+    empirical_rademacher,
+    lemma3_vc_bound,
+    theorem2_bound,
+)
+
+__all__ = [
+    "MinimaxProblem",
+    "SaddleField",
+    "grad_xy",
+    "identity_proj",
+    "tree_broadcast_agents",
+    "tree_mean_over_agents",
+    "tree_sq_dist",
+    "l2_ball_proj",
+    "box_proj",
+    "simplex_proj",
+    "make_gda_step",
+    "run_rounds",
+    "make_local_sgda_round",
+    "make_scheduled_local_sgda_round",
+    "make_fedgda_gt_round",
+    "communication_bytes_per_round",
+    "APPENDIX_C_MINIMAX_POINT",
+    "appendix_c_fixed_point",
+    "prop1_residual",
+    "empirical_rademacher",
+    "lemma3_vc_bound",
+    "theorem2_bound",
+]

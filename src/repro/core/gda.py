@@ -1,0 +1,73 @@
+"""Centralized (projected) Gradient Descent Ascent — the paper's baseline.
+
+x^{t+1} = Proj_X(x^t - eta_x * grad_x f(x^t, y^t))
+y^{t+1} = Proj_Y(y^t + eta_y * grad_y f(x^t, y^t))
+
+with f(x,y) = (1/m) sum_i f_i(x,y).  Equivalent to Local SGDA with K=1
+(Section 3.1 of the paper).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .types import (
+    LossFn,
+    ProjFn,
+    Pytree,
+    grad_xy,
+    identity_proj,
+)
+
+
+def make_gda_step(
+    loss: LossFn,
+    eta_x: float,
+    eta_y: float,
+    proj_x: ProjFn = identity_proj,
+    proj_y: ProjFn = identity_proj,
+) -> Callable:
+    """One centralized GDA step over agent-stacked data."""
+    gfn = grad_xy(loss)
+
+    def step(x: Pytree, y: Pytree, agent_data: Pytree):
+        g = jax.vmap(gfn, in_axes=(None, None, 0))(x, y, agent_data)
+        gx = jax.tree.map(lambda u: jnp.mean(u, axis=0), g.gx)
+        gy = jax.tree.map(lambda u: jnp.mean(u, axis=0), g.gy)
+        x1 = proj_x(jax.tree.map(lambda u, v: u - eta_x * v, x, gx))
+        y1 = proj_y(jax.tree.map(lambda u, v: u + eta_y * v, y, gy))
+        return x1, y1
+
+    return step
+
+
+def run_rounds(
+    round_fn: Callable,
+    x0: Pytree,
+    y0: Pytree,
+    agent_data: Pytree,
+    num_rounds: int,
+    metric_fn: Optional[Callable] = None,
+):
+    """Run `round_fn(x, y, agent_data) -> (x, y)` for num_rounds via lax.scan.
+
+    Returns final (x, y) and stacked per-round metrics (metric_fn(x, y),
+    evaluated on the *input* of each round, plus once at the end).
+    """
+
+    def body(carry, _):
+        x, y = carry
+        meas = metric_fn(x, y) if metric_fn is not None else None
+        x1, y1 = round_fn(x, y, agent_data)
+        return (x1, y1), meas
+
+    (x, y), metrics = jax.lax.scan(body, (x0, y0), None, length=num_rounds)
+    if metric_fn is not None:
+        final = metric_fn(x, y)
+        metrics = jax.tree.map(
+            lambda hist, last: jnp.concatenate([hist, last[None]]), metrics, final
+        )
+    return (x, y), metrics

@@ -1,0 +1,100 @@
+"""Local SGDA (Algorithm 1, Deng & Mahdavi 2021) with full local gradients.
+
+One communication round:
+  each agent i starts from the server model (x^t, y^t) and performs K
+  local GDA steps using ONLY its own gradient; the server then averages.
+
+With constant stepsizes this has *incorrect* fixed points for K >= 2
+(Proposition 1) — implemented here both as the paper's baseline and as the
+subject of the fixed-point analysis in `fixed_point.py`.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .types import (
+    LossFn,
+    ProjFn,
+    Pytree,
+    grad_xy,
+    identity_proj,
+    tree_broadcast_agents,
+    tree_mean_over_agents,
+)
+
+
+def make_local_sgda_round(
+    loss: LossFn,
+    num_local_steps: int,
+    eta_x: float,
+    eta_y: float,
+    proj_x: ProjFn = identity_proj,
+    proj_y: ProjFn = identity_proj,
+    constrain_agents=None,
+) -> Callable:
+    """Returns round(x, y, agent_data) -> (x, y) implementing Algorithm 1."""
+    gfn = grad_xy(loss)
+    vgrad = jax.vmap(gfn, in_axes=(0, 0, 0))
+
+    def round(x: Pytree, y: Pytree, agent_data: Pytree):
+        m = jax.tree.leaves(agent_data)[0].shape[0]
+        xs = tree_broadcast_agents(x, m)
+        ys = tree_broadcast_agents(y, m)
+        if constrain_agents is not None:
+            xs, ys = constrain_agents(xs, ys)
+
+        def inner(carry, _):
+            xs, ys = carry
+            g = vgrad(xs, ys, agent_data)
+            xs = jax.tree.map(lambda u, v: u - eta_x * v, xs, g.gx)
+            ys = jax.tree.map(lambda u, v: u + eta_y * v, ys, g.gy)
+            return (xs, ys), None
+
+        (xs, ys), _ = jax.lax.scan(
+            inner, (xs, ys), None, length=num_local_steps
+        )
+        x1 = proj_x(tree_mean_over_agents(xs))
+        y1 = proj_y(tree_mean_over_agents(ys))
+        return x1, y1
+
+    return round
+
+
+def make_scheduled_local_sgda_round(
+    loss: LossFn,
+    num_local_steps: int,
+    proj_x: ProjFn = identity_proj,
+    proj_y: ProjFn = identity_proj,
+) -> Callable:
+    """Local SGDA with the stepsize as a CALL-TIME argument:
+    round(x, y, agent_data, eta) -> (x, y).
+
+    This is the regime of [25, 26]: with a diminishing eta_t, Local SGDA
+    converges to the exact solution — sublinearly (the accurate-but-slow
+    branch of the paper's tradeoff, cf. the constant-stepsize bias floor
+    of Proposition 1).  One jitted program serves every round because eta
+    is traced, not baked in."""
+    gfn = grad_xy(loss)
+    vgrad = jax.vmap(gfn, in_axes=(0, 0, 0))
+
+    def round(x: Pytree, y: Pytree, agent_data: Pytree, eta):
+        m = jax.tree.leaves(agent_data)[0].shape[0]
+        xs = tree_broadcast_agents(x, m)
+        ys = tree_broadcast_agents(y, m)
+
+        def inner(carry, _):
+            xs, ys = carry
+            g = vgrad(xs, ys, agent_data)
+            xs = jax.tree.map(lambda u, v: u - eta * v, xs, g.gx)
+            ys = jax.tree.map(lambda u, v: u + eta * v, ys, g.gy)
+            return (xs, ys), None
+
+        (xs, ys), _ = jax.lax.scan(
+            inner, (xs, ys), None, length=num_local_steps
+        )
+        return proj_x(tree_mean_over_agents(xs)), proj_y(tree_mean_over_agents(ys))
+
+    return round

@@ -1,0 +1,52 @@
+"""Projection operators Proj_X / Proj_Y (Assumption 3 feasible sets)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def l2_ball_proj(radius: float):
+    """Projection onto {p : ||p||_2 <= radius} over the *whole* pytree."""
+
+    def proj(p: Pytree) -> Pytree:
+        sq = jax.tree.reduce(
+            jnp.add, jax.tree.map(lambda u: jnp.sum(u.astype(jnp.float32) ** 2), p)
+        )
+        norm = jnp.sqrt(jnp.maximum(sq, 1e-30))
+        scale = jnp.minimum(1.0, radius / norm)
+        return jax.tree.map(lambda u: (u * scale).astype(u.dtype), p)
+
+    return proj
+
+
+def box_proj(lo: float, hi: float):
+    """Per-coordinate clipping onto [lo, hi]^d."""
+
+    def proj(p: Pytree) -> Pytree:
+        return jax.tree.map(lambda u: jnp.clip(u, lo, hi), p)
+
+    return proj
+
+
+def simplex_proj():
+    """Projection of a single 1-D array onto the probability simplex
+    (used for agnostic-FL style mixture weights, Appendix A.2)."""
+
+    def proj_vec(v: jax.Array) -> jax.Array:
+        n = v.shape[0]
+        u = jnp.sort(v)[::-1]
+        css = jnp.cumsum(u)
+        ks = jnp.arange(1, n + 1, dtype=v.dtype)
+        cond = u - (css - 1.0) / ks > 0
+        rho = jnp.max(jnp.where(cond, jnp.arange(n), -1))
+        theta = (css[rho] - 1.0) / (rho + 1.0)
+        return jnp.maximum(v - theta, 0.0)
+
+    def proj(p: Pytree) -> Pytree:
+        return jax.tree.map(proj_vec, p)
+
+    return proj

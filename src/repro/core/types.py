@@ -1,0 +1,104 @@
+"""Core type definitions for federated minimax optimization.
+
+A minimax problem is  min_{x in X} max_{y in Y} (1/m) sum_i f_i(x, y)
+where f_i is agent i's private objective.  We represent the stacked agent
+data with a leading axis of size m on every leaf ("agent-stacked pytree"),
+so the same code runs single-host (vmap) and SPMD (agent axis sharded over
+the fed mesh axes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+# loss(x, y, agent_data) -> scalar.  agent_data is ONE agent's slice.
+LossFn = Callable[[Pytree, Pytree, Pytree], jax.Array]
+# projection(p) -> p projected onto the feasible set.
+ProjFn = Callable[[Pytree], Pytree]
+
+
+def identity_proj(p: Pytree) -> Pytree:
+    return p
+
+
+@dataclasses.dataclass(frozen=True)
+class MinimaxProblem:
+    """min_x max_y (1/m) sum_i loss(x, y, agent_data_i).
+
+    Attributes:
+      loss: per-agent loss; pure function of (x, y, agent_data).
+      agent_data: pytree whose leaves have leading axis m (one slice/agent).
+      proj_x / proj_y: projections onto X and Y (identity = unconstrained).
+      num_agents: m.
+    """
+
+    loss: LossFn
+    agent_data: Pytree
+    num_agents: int
+    proj_x: ProjFn = identity_proj
+    proj_y: ProjFn = identity_proj
+
+    def agent_slice(self, i: int) -> Pytree:
+        return jax.tree.map(lambda a: a[i], self.agent_data)
+
+    def global_loss(self, x: Pytree, y: Pytree) -> jax.Array:
+        per_agent = jax.vmap(self.loss, in_axes=(None, None, 0))(
+            x, y, self.agent_data
+        )
+        return jnp.mean(per_agent)
+
+
+class SaddleField(NamedTuple):
+    """F(z) = (grad_x f, -grad_y f) evaluated per agent and globally."""
+
+    gx: Pytree
+    gy: Pytree  # NOTE: stores +grad_y; ascent applies the + sign.
+
+
+def grad_xy(loss: LossFn) -> Callable[[Pytree, Pytree, Pytree], SaddleField]:
+    """Returns a function computing (grad_x, grad_y) of the loss."""
+    g = jax.grad(loss, argnums=(0, 1))
+
+    def f(x: Pytree, y: Pytree, data: Pytree) -> SaddleField:
+        gx, gy = g(x, y, data)
+        return SaddleField(gx=gx, gy=gy)
+
+    return f
+
+
+def tree_add(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a: Pytree, s) -> Pytree:
+    return jax.tree.map(lambda u: u * s, a)
+
+
+def tree_mean_over_agents(a: Pytree) -> Pytree:
+    """Mean over the leading (agent) axis of every leaf."""
+    return jax.tree.map(lambda u: jnp.mean(u, axis=0), a)
+
+
+def tree_broadcast_agents(a: Pytree, m: int) -> Pytree:
+    """Stack m copies along a new leading axis."""
+    return jax.tree.map(
+        lambda u: jnp.broadcast_to(u[None], (m,) + u.shape), a
+    )
+
+
+def tree_sq_dist(a: Pytree, b: Pytree) -> jax.Array:
+    """||a - b||^2 summed over all leaves."""
+    d = jax.tree.map(lambda u, v: jnp.sum((u - v) ** 2), a, b)
+    return jax.tree.reduce(jnp.add, d)
+
+
+def tree_cast(a: Pytree, dtype) -> Pytree:
+    return jax.tree.map(lambda u: u.astype(dtype), a)

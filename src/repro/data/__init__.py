@@ -1,0 +1,8 @@
+from .synthetic import federated_token_batches, partition_among_agents
+from .tokens import synthetic_lm_batch
+
+__all__ = [
+    "federated_token_batches",
+    "partition_among_agents",
+    "synthetic_lm_batch",
+]

@@ -1,0 +1,4 @@
+from .runtime import FederatedRunner, RoundStats
+from .comm import comm_table
+
+__all__ = ["FederatedRunner", "RoundStats", "comm_table"]

@@ -1,0 +1,68 @@
+"""Federated round orchestration with metric logging and checkpointing.
+
+`FederatedRunner` drives any round function (FedGDA-GT, Local SGDA, GDA)
+produced by `repro.core`, records per-round metrics on the host, and
+periodically checkpoints — the single-host counterpart of `repro.launch.train`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from ..checkpoint import save_checkpoint
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class RoundStats:
+    round_index: int
+    metrics: Dict[str, float]
+    seconds: float
+
+
+class FederatedRunner:
+    def __init__(
+        self,
+        round_fn: Callable,
+        agent_data: Pytree,
+        metric_fn: Optional[Callable] = None,
+        checkpoint_dir: Optional[str] = None,
+        checkpoint_every: int = 0,
+    ):
+        self._round = jax.jit(round_fn)
+        self._agent_data = agent_data
+        self._metric_fn = jax.jit(metric_fn) if metric_fn else None
+        self._ckpt_dir = checkpoint_dir
+        self._ckpt_every = checkpoint_every
+        self.history: List[RoundStats] = []
+
+    def run(self, x: Pytree, y: Pytree, num_rounds: int, log_every: int = 0):
+        for t in range(num_rounds):
+            t0 = time.perf_counter()
+            x, y = self._round(x, y, self._agent_data)
+            metrics = {}
+            if self._metric_fn is not None:
+                metrics = {
+                    k: float(v)
+                    for k, v in self._metric_fn(x, y).items()
+                }
+            dt = time.perf_counter() - t0
+            self.history.append(RoundStats(t, metrics, dt))
+            if log_every and (t % log_every == 0 or t == num_rounds - 1):
+                msg = " ".join(f"{k}={v:.3e}" for k, v in metrics.items())
+                print(f"[round {t:5d}] {msg} ({dt*1e3:.1f} ms)")
+            if (
+                self._ckpt_dir
+                and self._ckpt_every
+                and (t + 1) % self._ckpt_every == 0
+            ):
+                save_checkpoint(self._ckpt_dir, t + 1, {"x": x, "y": y})
+        return x, y
+
+    def metric_series(self, name: str) -> np.ndarray:
+        return np.array([s.metrics[name] for s in self.history])

@@ -1,0 +1,28 @@
+"""Pallas TPU kernels for the substrate hot-spots (validated on CPU with
+interpret=True against the ref.py oracles).
+
+The paper itself contributes no kernel — its contribution is the outer
+communication schedule — so these serve the model substrate:
+  * gt_update       — fused FedGDA-GT inner update (one HBM pass)
+  * flash_attention — blocked online-softmax attention (causal/window/softcap)
+  * ssm_scan        — chunked Mamba selective scan with VMEM-carried state
+"""
+from .gt_update import gt_update_2d
+from .flash_attention import flash_attention
+from .ssm_scan import ssm_scan
+from .ops import (
+    batched_ssm_scan,
+    grouped_flash_attention,
+    make_gt_update_fn,
+)
+from . import ref
+
+__all__ = [
+    "gt_update_2d",
+    "flash_attention",
+    "ssm_scan",
+    "batched_ssm_scan",
+    "grouped_flash_attention",
+    "make_gt_update_fn",
+    "ref",
+]

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gt_update_ref(z, g, c, eta: float, sign: float):
+    """Fused FedGDA-GT inner update: z + sign*eta*(g + c)."""
+    return z + sign * eta * (g + c.astype(g.dtype))
+
+
+def flash_attention_ref(
+    q, k, v, *, causal: bool = True, window: int = 0, softcap: float = 0.0
+):
+    """q [B,H,Sq,hd], k/v [B,H,Skv,hd] (heads already grouped/repeated)."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32)
+    s = s / jnp.sqrt(jnp.float32(hd))
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    Sq, Skv = q.shape[2], k.shape[2]
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qp >= kp
+    if window > 0:
+        mask &= qp - kp < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
+
+
+def ssm_scan_ref(da, dbx, c_coef, state0):
+    """Sequential oracle of h_t = da_t * h_{t-1} + dbx_t;  y_t = <h_t, c_t>.
+
+    da  [S, d, N] (broadcastable), dbx [S, d, N], c_coef [S, N],
+    state0 [d, N].  Returns (y [S, d], final_state [d, N]).
+    """
+
+    def step(h, inp):
+        a, b, cc = inp
+        h = a * h + b
+        return h, jnp.einsum("dn,n->d", h, cc)
+
+    state, y = jax.lax.scan(step, state0, (da, dbx, c_coef))
+    return y, state

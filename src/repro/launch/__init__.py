@@ -1,0 +1,3 @@
+from .mesh import fed_axes, make_host_mesh, make_production_mesh, num_agents
+
+__all__ = ["fed_axes", "make_host_mesh", "make_production_mesh", "num_agents"]

@@ -1,0 +1,261 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may import jax -------------------------------------
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Dict, List, Optional
+
+import jax
+
+from ..configs import ARCHS, INPUT_SHAPES, get_config, supported_shapes
+from .mesh import make_production_mesh
+from .steps import (
+    build_decode_step,
+    build_prefill_step,
+    build_train_step,
+)
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9_]+\[[0-9,]*\][^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9_]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def parse_collectives(hlo_text: str) -> List[Dict]:
+    """Census of collective ops in the compiled module (static counts;
+    ops inside while bodies appear once — trip-count scaling is applied
+    analytically in benchmarks/roofline.py, see DESIGN.md §6)."""
+    out = []
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        out.append(
+            {"op": m.group(2), "bytes": _shape_bytes(m.group(1))}
+        )
+    return out
+
+
+def summarize_collectives(ops: List[Dict]) -> Dict:
+    summary: Dict[str, Dict] = {}
+    for o in ops:
+        s = summary.setdefault(o["op"], {"count": 0, "bytes": 0})
+        s["count"] += 1
+        s["bytes"] += o["bytes"]
+    return summary
+
+
+def _mem_analysis(compiled) -> Dict:
+    try:
+        ma = compiled.memory_analysis()
+        return {
+            k: int(getattr(ma, k))
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+            if hasattr(ma, k)
+        }
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def run_one(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    algorithm: str = "fedgda_gt",
+    num_local_steps: int = 4,
+    sharding_variant: str = "baseline",
+    sequence_parallel: bool = True,
+    h_shard=None,
+    q_block=None,
+    moe_dispatch=None,
+) -> Dict:
+    cfg = get_config(arch)
+    if moe_dispatch:
+        import dataclasses as _dc
+
+        cfg = _dc.replace(cfg, moe_dispatch=moe_dispatch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec: Dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+        "algorithm": algorithm if shape.kind == "train" else None,
+        "num_local_steps": num_local_steps if shape.kind == "train" else None,
+        "sharding_variant": sharding_variant,
+        "sequence_parallel": sequence_parallel,
+        "h_shard": h_shard,
+        "q_block_override": q_block,
+    }
+    t0 = time.perf_counter()
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            jitted_fn, specs_fn = build_train_step(
+                cfg, mesh, algorithm=algorithm, num_local_steps=num_local_steps,
+                sharding_variant=sharding_variant,
+                sequence_parallel=sequence_parallel,
+                h_shard=h_shard,
+                q_block=q_block,
+            )
+            sp = specs_fn(shape)
+            lowered = jitted_fn(shape).lower(sp["x"], sp["y"], sp["batch"])
+        elif shape.kind == "prefill":
+            jitted_fn, specs_fn = build_prefill_step(
+                cfg, mesh, sharding_variant=sharding_variant
+            )
+            sp = specs_fn(shape)
+            if cfg.supports_decode:
+                lowered = jitted_fn(shape).lower(
+                    sp["params"], sp["batch"], sp["caches"]
+                )
+            else:
+                lowered = jitted_fn(shape).lower(sp["params"], sp["batch"])
+        else:  # decode
+            jitted_fn, specs_fn = build_decode_step(
+                cfg, mesh, sharding_variant=sharding_variant
+            )
+            sp = specs_fn(shape)
+            lowered = jitted_fn(shape).lower(
+                sp["params"], sp["caches"], sp["tokens"], sp["position"]
+            )
+        rec["lower_s"] = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        rec["compile_s"] = time.perf_counter() - t1
+        rec["memory_analysis"] = _mem_analysis(compiled)
+        try:
+            cost = compiled.cost_analysis()
+            rec["cost_analysis"] = {
+                k: float(v)
+                for k, v in cost.items()
+                if isinstance(v, (int, float)) and (
+                    k in ("flops", "bytes accessed", "optimal_seconds")
+                    or k.startswith("bytes accessed")
+                )
+            }
+        except Exception as e:  # pragma: no cover
+            rec["cost_analysis"] = {"error": str(e)}
+        hlo = compiled.as_text()
+        rec["collectives"] = summarize_collectives(parse_collectives(hlo))
+        rec["hlo_bytes"] = len(hlo)
+        # exact executed census (trip-count-scaled; DESIGN.md §6)
+        from .hlo_census import HloCensus
+
+        rec["census"] = HloCensus(hlo).summary()
+    return rec
+
+
+def combos(archs=None):
+    for name, cfg in ARCHS.items():
+        if archs and name not in archs:
+            continue
+        for shape in supported_shapes(cfg):
+            yield name, shape.name
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run: lower+compile")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--algorithm", default="fedgda_gt")
+    ap.add_argument("--num-local-steps", type=int, default=4)
+    ap.add_argument("--variant", default="baseline",
+                    choices=["baseline", "megatron"])
+    ap.add_argument("--no-seq-parallel", action="store_true")
+    ap.add_argument("--h-shard", default=None, choices=["seq", "batch", "none"])
+    ap.add_argument("--q-block", type=int, default=None)
+    ap.add_argument("--moe-dispatch", default=None, choices=["einsum", "scatter"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    if args.all:
+        pairs = list(combos([args.arch] if args.arch else None))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        pairs = [(args.arch, args.shape)]
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+
+    failures = 0
+    for arch, shape in pairs:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+            if args.algorithm != "fedgda_gt":
+                tag += f"__{args.algorithm}"
+            if args.variant != "baseline":
+                tag += f"__{args.variant}"
+            if args.no_seq_parallel:
+                tag += "__nosp"
+            if args.h_shard:
+                tag += f"__h{args.h_shard}"
+            if args.q_block:
+                tag += f"__qb{args.q_block}"
+            if args.moe_dispatch:
+                tag += f"__{args.moe_dispatch}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"[skip] {tag} (exists)")
+                continue
+            print(f"[dryrun] {tag} ...", flush=True)
+            try:
+                rec = run_one(
+                    arch, shape, mp,
+                    algorithm=args.algorithm,
+                    num_local_steps=args.num_local_steps,
+                    sharding_variant=args.variant,
+                    sequence_parallel=not args.no_seq_parallel,
+                    h_shard=args.h_shard,
+                    q_block=args.q_block,
+                    moe_dispatch=args.moe_dispatch,
+                )
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                ma = rec["memory_analysis"]
+                print(
+                    f"  ok lower={rec['lower_s']:.1f}s compile={rec['compile_s']:.1f}s "
+                    f"args={ma.get('argument_size_in_bytes', 0)/2**30:.2f}GiB "
+                    f"temp={ma.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+                    f"flops={rec['cost_analysis'].get('flops', float('nan')):.3e} "
+                    f"coll={rec['collectives']}",
+                    flush=True,
+                )
+            except Exception:
+                failures += 1
+                print(f"  FAILED {tag}\n{traceback.format_exc()}", flush=True)
+            finally:
+                jax.clear_caches()  # bound process memory across 64 compiles
+    if failures:
+        raise SystemExit(f"{failures} dry-run failures")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,232 @@
+"""Exact executed-op census from compiled HLO text.
+
+``compiled.cost_analysis()`` counts a while (scan) body ONCE regardless of
+its trip count, which makes raw numbers useless for scanned layers/inner
+steps (DESIGN.md §6).  XLA, however, annotates every while op with
+``backend_config={"known_trip_count":{"n":...}}``.  This module parses the
+computation graph, propagates trip-count multipliers from ENTRY through
+fusions / calls / while bodies, and returns an *executed* census:
+
+  * matmul FLOPs (dot ops, 2*M*N*K, scaled by the enclosing trip product)
+  * collective bytes per op kind (operand bytes, scaled)
+  * dot-shape duplication census (remat / redundancy smell test)
+
+Caveats (documented, acceptable for roofline purposes):
+  * conditional branches are all counted at the parent multiplier (upper
+    bound; used only by the zamba2 shared-attention cond),
+  * elementwise FLOPs are ignored (dots dominate every model here),
+  * convolutions are absent from these models (frontends are stubs).
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+# one op definition line:  %name = type[dims]{layout} opcode(operands), attrs
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^()]*\)|[a-z0-9_]+\[[0-9,]*\]\S*)\s+"
+    r"([a-z0-9\-]+)\((.*)$"
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
+_SHAPE_RE = re.compile(r"([a-z0-9_]+)\[([0-9,]*)\]")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|to_apply|body|condition|branch_computations)=\{?%?([\w.\-]+(?:,\s*%[\w.\-]+)*)\}?"
+)
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_elems_bytes(text: str) -> Tuple[int, int]:
+    """Total (elements, bytes) over every `dtype[dims]` group in text."""
+    elems = 0
+    byts = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES.get(dt, 4)
+    return elems, byts
+
+
+class HloCensus:
+    def __init__(self, hlo_text: str):
+        self._parse(hlo_text)
+        self._propagate()
+
+    # ------------------------------------------------------------- parsing
+    def _parse(self, text: str) -> None:
+        comps: Dict[str, List[dict]] = {}
+        shapes: Dict[Tuple[str, str], str] = {}  # (comp, op name) -> type str
+        entry = None
+        cur = None
+        for line in text.splitlines():
+            mc = _COMP_RE.match(line)
+            if mc and line.rstrip().endswith("{"):
+                cur = mc.group(1)
+                comps[cur] = []
+                if line.startswith("ENTRY"):
+                    entry = cur
+                continue
+            if cur is None:
+                continue
+            mo = _OP_RE.match(line)
+            if not mo:
+                continue
+            name, typ, opcode, rest = mo.groups()
+            shapes[(cur, name)] = typ
+            comps[cur].append(
+                {"name": name, "type": typ, "op": opcode, "rest": rest}
+            )
+        self.computations = comps
+        self.shapes = shapes
+        self.entry = entry
+
+    # -------------------------------------------------- multiplier propagation
+    def _propagate(self) -> None:
+        mult: Dict[str, int] = defaultdict(int)
+        if self.entry is None:
+            self.multiplier = {}
+            return
+        # edges: computation -> [(callee, factor)]
+        edges: Dict[str, List[Tuple[str, int]]] = defaultdict(list)
+        for comp, ops in self.computations.items():
+            for o in ops:
+                rest = o["rest"]
+                factor = 1
+                if o["op"] == "while":
+                    mt = _TRIP_RE.search(rest)
+                    factor = int(mt.group(1)) if mt else 1
+                for mcall in _CALL_ATTR_RE.finditer(rest):
+                    attr = mcall.group(0).split("=", 1)[0]
+                    for callee in re.split(r",\s*%?", mcall.group(1)):
+                        callee = callee.strip().lstrip("%")
+                        if callee in self.computations:
+                            # only the while BODY runs trip_count times; the
+                            # condition runs trip+1 (~= trip for our sizes)
+                            f = factor if attr in ("body", "condition") else 1
+                            edges[comp].append((callee, f))
+        # BFS from entry, accumulating products (call graph is a DAG in HLO)
+        mult[self.entry] = 1
+        order = [self.entry]
+        seen = {self.entry}
+        while order:
+            nxt = []
+            for c in order:
+                for callee, f in edges.get(c, ()):
+                    m = mult[c] * f
+                    if m > mult[callee]:
+                        mult[callee] = m
+                    if callee not in seen:
+                        seen.add(callee)
+                        nxt.append(callee)
+            order = nxt
+        self.multiplier = dict(mult)
+
+    # ------------------------------------------------------------- queries
+    def _operand_shapes(self, comp: str, rest: str) -> List[str]:
+        out = []
+        for name in re.findall(r"%([\w.\-]+)", rest):
+            t = self.shapes.get((comp, name))
+            if t:
+                out.append(t)
+        return out
+
+    def dot_flops(self) -> Tuple[int, Dict[str, int]]:
+        """Executed matmul FLOPs (2*out_elems*contraction), plus a census of
+        unscaled per-shape occurrence counts for duplication analysis."""
+        total = 0
+        shape_counts: Dict[str, int] = defaultdict(int)
+        for comp, ops in self.computations.items():
+            m = self.multiplier.get(comp, 1)
+            for o in ops:
+                if o["op"] != "dot":
+                    continue
+                out_elems, _ = _shape_elems_bytes(o["type"])
+                # contraction size: lhs elems / (out elems contributed by lhs)
+                mdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", o["rest"])
+                opshapes = self._operand_shapes(comp, o["rest"])
+                k = 1
+                if mdims and opshapes:
+                    lhs_dims = _SHAPE_RE.search(opshapes[0])
+                    if lhs_dims:
+                        dims = [int(d) for d in lhs_dims.group(2).split(",") if d]
+                        for ci in mdims.group(1).split(","):
+                            if ci:
+                                k *= dims[int(ci)]
+                total += m * 2 * out_elems * k
+                shape_counts[o["type"]] += 1
+        return total, dict(shape_counts)
+
+    def collective_bytes(self) -> Dict[str, Dict[str, int]]:
+        """Executed collective census: op kind -> {count, bytes} with bytes =
+        operand bytes * enclosing trip product."""
+        out: Dict[str, Dict[str, int]] = {}
+        for comp, ops in self.computations.items():
+            m = self.multiplier.get(comp, 1)
+            for o in ops:
+                kind = o["op"].removesuffix("-start")
+                if kind not in _COLLECTIVES:
+                    continue
+                if o["op"].endswith("-done"):
+                    continue
+                _, byts = _shape_elems_bytes(o["type"])
+                # for tuple-typed results (variadic all-gather etc.) the type
+                # string already contains every member shape
+                s = out.setdefault(kind, {"count": 0, "bytes": 0})
+                s["count"] += m
+                s["bytes"] += m * byts
+        return out
+
+    def summary(self) -> Dict:
+        flops, shape_counts = self.dot_flops()
+        dup = {s: c for s, c in shape_counts.items() if c > 1}
+        return {
+            "executed_dot_flops": flops,
+            "collectives_executed": self.collective_bytes(),
+            "duplicate_dot_shapes": dict(
+                sorted(dup.items(), key=lambda kv: -kv[1])[:12]
+            ),
+        }
+
+
+def census_from_compiled(compiled) -> Dict:
+    return HloCensus(compiled.as_text()).summary()
+
+
+if __name__ == "__main__":  # tiny self-check
+    import jax
+    import jax.numpy as jnp
+
+    def body(c, _):
+        return c @ c, None
+
+    def f(x):
+        y, _ = jax.lax.scan(body, x, None, length=8)
+
+        def inner(c, _):
+            z, _ = jax.lax.scan(body, c, None, length=3)
+            return z, None
+
+        y2, _ = jax.lax.scan(inner, y, None, length=5)
+        return y2
+
+    compiled = jax.jit(f).lower(jnp.ones((128, 128))).compile()
+    s = census_from_compiled(compiled)
+    want = 2 * 128**3 * (8 + 15)
+    print(json.dumps(s, indent=1))
+    assert s["executed_dot_flops"] == want, (s["executed_dot_flops"], want)
+    print("census self-check OK:", want)

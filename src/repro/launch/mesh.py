@@ -1,0 +1,41 @@
+"""Production mesh construction (functions only — importing this module
+never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) over ("data", "model") = 256 chips.
+    Multi-pod:   (2, 16, 16) over ("pod", "data", "model") = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever local devices exist (tests/examples)."""
+    return jax.make_mesh(
+        (data, model),
+        ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def fed_axes(mesh, fed_mode: str):
+    """Mesh axes that carry the federated agents (DESIGN.md §4)."""
+    names = mesh.axis_names
+    if fed_mode == "A":
+        return tuple(a for a in ("pod", "data") if a in names)
+    if fed_mode == "B":
+        return tuple(a for a in ("pod",) if a in names)
+    raise ValueError(fed_mode)
+
+
+def num_agents(mesh, fed_mode: str) -> int:
+    m = 1
+    for a in fed_axes(mesh, fed_mode):
+        m *= mesh.shape[a]
+    return max(m, 1)

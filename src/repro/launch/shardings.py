@@ -1,0 +1,244 @@
+"""Sharding rules: parameters, agent-stacked state, batches and caches.
+
+Rules (DESIGN.md §4):
+  * params: largest >=2-D dim divisible by the model-axis size -> "model";
+    MoE expert dim -> "data" (expert parallelism, fed mode B);
+    embed table vocab dim -> "model";  1-D leaves replicated.
+  * agent-stacked training state: leading agent axis -> fed axes
+    (("pod","data") mode A, ("pod",) mode B).
+  * batches: train — agent axis over fed axes, per-agent batch over the
+    within-agent data axis (mode B);  serve — batch over ("pod","data").
+  * KV caches: batch dim over ("pod","data") when divisible, else the
+    capacity (sequence) dim over "data" (context parallelism, long_500k).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from .mesh import fed_axes
+
+Pytree = Any
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def _largest_divisible(shape, start: int, size: int) -> Optional[int]:
+    best, best_dim = None, -1
+    for i in range(start, len(shape)):
+        if shape[i] % size == 0 and shape[i] > best_dim:
+            best, best_dim = i, shape[i]
+    return best
+
+
+def _baseline_pspec(path_str, shape, cfg, mesh, off) -> P:
+    """Paper-faithful first cut: largest >=2-D dim divisible by the model
+    axis.  Kept as the §Perf 'before' reference — it leaves contraction dims
+    sharded, which GSPMD resolves with per-layer activation collectives."""
+    model_n = mesh.shape["model"]
+    data_n = mesh.shape.get("data", 1)
+    entries = [None] * len(shape)
+    is_expert = "/moe/" in path_str and path_str.rsplit("/", 1)[-1] in (
+        "gate", "up", "down",
+    )
+    if is_expert and cfg.fed_mode == "B" and shape[off] % data_n == 0:
+        entries[off] = "data"
+        j = _largest_divisible(shape, off + 1, model_n)
+        if j is not None:
+            entries[j] = "model"
+        return P(*entries)
+    j = _largest_divisible(shape, off, model_n)
+    if j is not None:
+        entries[j] = "model"
+    return P(*entries)
+
+
+def _megatron_pspec(path_str, shape, cfg, mesh, off) -> P:
+    """Beyond-baseline rules (§Perf hillclimb): classic column/row pairing so
+    every matmul is local and the only model-axis collective is one
+    activation reduction per block half.
+
+      wq      [d, H, hd]   -> column on H (heads); replicate if H % n != 0
+      wk/wv   [d, KV, hd]  -> column on KV, else REPLICATE (GQA KV is tiny)
+      wo      [H, hd, d]   -> row on H (matches attention output sharding)
+      gate/up [d, ff]      -> column on ff
+      down    [ff, d]      -> row on ff
+      embed   [V, d]       -> vocab-sharded (masked-local lookup + logits)
+      MoE     [E, d, ff]   -> E over data (mode B) + column/row on ff
+      mamba   in_proj col on 2*d_inner, out_proj row on d_inner,
+              x/dt/conv/norm replicated (tiny)
+    """
+    model_n = mesh.shape["model"]
+    data_n = mesh.shape.get("data", 1)
+    name = path_str.rsplit("/", 1)[-1]
+    entries = [None] * len(shape)
+    if len(shape) - off < 2:
+        return P(*entries)
+
+    def put(i) -> P:
+        entries[i] = "model"
+        return P(*entries)
+
+    if "/moe/" in path_str and name in ("gate", "up", "down"):
+        if cfg.fed_mode == "B" and shape[off] % data_n == 0:
+            entries[off] = "data"  # expert parallelism
+        ff_dim = off + 2 if name in ("gate", "up") else off + 1
+        if shape[ff_dim] % model_n == 0:
+            entries[ff_dim] = "model"
+        return P(*entries)
+    if name == "wq":
+        return put(off + 1) if shape[off + 1] % model_n == 0 else P(*entries)
+    if name in ("wk", "wv"):
+        return put(off + 1) if shape[off + 1] % model_n == 0 else P(*entries)
+    if name == "wo":
+        return put(off) if shape[off] % model_n == 0 else P(*entries)
+    if name in ("gate", "up"):  # dense swiglu
+        return put(off + 1) if shape[off + 1] % model_n == 0 else P(*entries)
+    if name == "down":
+        return put(off) if shape[off] % model_n == 0 else P(*entries)
+    if name == "embed":
+        return put(off) if shape[off] % model_n == 0 else P(*entries)
+    if name == "in_proj":  # mamba column
+        return put(off + 1) if shape[off + 1] % model_n == 0 else P(*entries)
+    if name == "out_proj":  # mamba row
+        return put(off) if shape[off] % model_n == 0 else P(*entries)
+    if name in ("frontend_proj", "out_head"):
+        return put(off + 1) if shape[off + 1] % model_n == 0 else P(*entries)
+    # router / x_proj / dt_proj / conv / norms / biases: replicated (tiny)
+    return P(*entries)
+
+
+def param_pspec(
+    path_str: str,
+    shape: Tuple[int, ...],
+    cfg: ModelConfig,
+    mesh,
+    variant: str = "baseline",
+) -> P:
+    stacked = path_str.startswith("blocks/")
+    off = 1 if stacked else 0
+    if len(shape) - off < 2:
+        return P(*([None] * len(shape)))  # replicate 1-D / scalar leaves
+    if variant == "megatron":
+        return _megatron_pspec(path_str, shape, cfg, mesh, off)
+    return _baseline_pspec(path_str, shape, cfg, mesh, off)
+
+
+def param_shardings(
+    params_shape: Pytree, cfg: ModelConfig, mesh, variant: str = "baseline"
+) -> Pytree:
+    """NamedShardings for the global (server) parameter pytree."""
+
+    def f(path, leaf):
+        return NamedSharding(
+            mesh, param_pspec(_path_str(path), leaf.shape, cfg, mesh, variant)
+        )
+
+    return jax.tree_util.tree_map_with_path(f, params_shape)
+
+
+def agent_pspec(
+    path_str: str, shape, cfg: ModelConfig, mesh, variant: str = "baseline"
+) -> P:
+    """Spec for agent-stacked ([m, ...]) training state."""
+    base = param_pspec(path_str, shape[1:], cfg, mesh, variant)
+    fa = fed_axes(mesh, cfg.fed_mode)
+    return P(fa if fa else None, *base)
+
+
+def make_agent_constraint(cfg: ModelConfig, mesh, y_tree, variant: str = "baseline"):
+    """constrain_agents hook for the core rounds: anchors the agent axis."""
+    fa = fed_axes(mesh, cfg.fed_mode)
+
+    def constrain(xs, ys):
+        def cx(path, leaf):
+            spec = agent_pspec(_path_str(path), leaf.shape, cfg, mesh, variant)
+            return jax.lax.with_sharding_constraint(
+                leaf, NamedSharding(mesh, spec)
+            )
+
+        xs = jax.tree_util.tree_map_with_path(cx, xs)
+        ys = jax.tree.map(
+            lambda u: jax.lax.with_sharding_constraint(
+                u, NamedSharding(mesh, P(fa if fa else None))
+            ),
+            ys,
+        )
+        return xs, ys
+
+    return constrain
+
+
+def train_batch_shardings(cfg: ModelConfig, mesh) -> "jax.sharding.Sharding":
+    """Agent-stacked batch [m, B_local, ...]: agent axis over fed axes;
+    mode B additionally shards B_local over the within-agent data axis."""
+    fa = fed_axes(mesh, cfg.fed_mode)
+    inner = "data" if (cfg.fed_mode == "B" and "data" in mesh.axis_names) else None
+
+    def shard_for(leaf_ndim: int):
+        entries = [fa if fa else None, inner] + [None] * (leaf_ndim - 2)
+        return NamedSharding(mesh, P(*entries))
+
+    return shard_for
+
+
+def serve_batch_sharding(mesh, batch: int, leaf_ndim: int):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    first = axes if (axes and batch % n == 0) else None
+    return NamedSharding(mesh, P(first, *([None] * (leaf_ndim - 1))))
+
+
+def cache_pspec(path_str: str, shape, cfg: ModelConfig, mesh) -> P:
+    """Stacked cache leaves: [n_layers, B, C, KV, hd] (attn k/v),
+    [n_layers, C] (pos), [n_layers, B, W-1, di] (conv), [n_layers, B, nh, p, N] (ssm)."""
+    model_n = mesh.shape["model"]
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_n = int(np.prod([mesh.shape[a] for a in dp_axes])) if dp_axes else 1
+    name = path_str.rsplit("/", 1)[-1]
+    entries = [None] * len(shape)
+    if name in ("k", "v"):
+        _, B, C, KV, hd = shape
+        if B % dp_n == 0 and dp_axes:
+            entries[1] = dp_axes
+        elif "data" in mesh.axis_names and C % mesh.shape["data"] == 0:
+            entries[2] = "data"  # context parallelism over the KV sequence
+        if KV % model_n == 0:
+            entries[3] = "model"
+        elif hd % model_n == 0:
+            entries[4] = "model"
+        return P(*entries)
+    if name == "pos":
+        return P(*entries)  # replicated slot-position metadata
+    if name == "conv":
+        _, B, W, di = shape
+        if B % dp_n == 0 and dp_axes:
+            entries[1] = dp_axes
+        if di % model_n == 0:
+            entries[3] = "model"
+        return P(*entries)
+    if name == "ssm":
+        _, B, nh, p, N = shape
+        if B % dp_n == 0 and dp_axes:
+            entries[1] = dp_axes
+        if nh % model_n == 0:
+            entries[2] = "model"
+        return P(*entries)
+    return P(*entries)
+
+
+def cache_shardings(cache_shape: Pytree, cfg: ModelConfig, mesh) -> Pytree:
+    def f(path, leaf):
+        return NamedSharding(mesh, cache_pspec(_path_str(path), leaf.shape, cfg, mesh))
+
+    return jax.tree_util.tree_map_with_path(f, cache_shape)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

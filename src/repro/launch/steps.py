@@ -1,0 +1,252 @@
+"""SPMD step builders: federated minimax train_step + prefill/decode serve_step.
+
+train_step = ONE FedGDA-GT communication round (Algorithm 2) lowered as a
+single jitted SPMD program on the production mesh.  Baselines (local_sgda,
+sync_gda) share the same signature so the dry-run can compare their
+collective schedules directly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..core.fedgda_gt import make_fedgda_gt_round
+from ..core.gda import make_gda_step
+from ..core.local_sgda import make_local_sgda_round
+from ..models import batch_struct, init_caches, init_params
+from ..models.transformer import embed_inputs, forward, logits_from_hidden
+from ..problems.adversarial import delta_projection, make_adversarial_loss
+from .mesh import fed_axes, num_agents
+from .shardings import (
+    cache_shardings,
+    make_agent_constraint,
+    param_shardings,
+    replicated,
+    serve_batch_sharding,
+    train_batch_shardings,
+)
+
+Pytree = Any
+
+_CORRECTION_DTYPES = {"float8_e4m3fn": jnp.float8_e4m3fn, "bfloat16": jnp.bfloat16}
+
+
+def abstract_params(cfg: ModelConfig, dtype) -> Pytree:
+    return jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg, dtype)
+    )
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, capacity: int, dtype) -> Pytree:
+    return jax.eval_shape(lambda: init_caches(cfg, batch, capacity, dtype))
+
+
+def delta_struct(cfg: ModelConfig, dtype) -> Dict:
+    return {"delta": jax.ShapeDtypeStruct((cfg.d_model,), dtype)}
+
+
+# --------------------------------------------------------------------------
+# training (one federated communication round)
+# --------------------------------------------------------------------------
+def train_input_specs(
+    cfg: ModelConfig, shape: ShapeConfig, mesh, dtype=jnp.bfloat16
+) -> Dict:
+    """ShapeDtypeStructs for (x_global, y_global, agent_batches)."""
+    m = num_agents(mesh, cfg.fed_mode)
+    assert shape.global_batch % m == 0, (shape.global_batch, m)
+    b_local = shape.global_batch // m
+    one = batch_struct(cfg, b_local, shape.seq_len, dtype)
+    agent_batches = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((m,) + s.shape, s.dtype), one
+    )
+    return {
+        "x": abstract_params(cfg, dtype),
+        "y": delta_struct(cfg, dtype),
+        "batch": agent_batches,
+    }
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    mesh,
+    *,
+    algorithm: str = "fedgda_gt",
+    num_local_steps: int = 4,
+    eta: float = 1e-3,
+    delta_radius: float = 1.0,
+    dtype=jnp.bfloat16,
+    remat: bool = True,
+    sequence_parallel: bool = True,
+    sharding_variant: str = "baseline",
+    h_shard: Optional[str] = None,  # overrides sequence_parallel: seq|batch|none
+    q_block: Optional[int] = None,  # overrides cfg.q_block
+) -> Tuple[Callable, Callable]:
+    """Returns (jitted_step, input_specs_fn)."""
+    import dataclasses as _dc
+
+    if q_block:
+        cfg = _dc.replace(cfg, q_block=q_block)
+    if h_shard is None:
+        h_shard = "seq" if sequence_parallel else "none"
+    inner = "data" if cfg.fed_mode == "B" else None
+    h_sh = None
+    if h_shard == "seq":
+        h_sh = NamedSharding(mesh, P(inner, "model", None))
+    elif h_shard == "batch":
+        h_sh = NamedSharding(mesh, P("model", None, None))
+    loss = make_adversarial_loss(cfg, remat=remat, h_sharding=h_sh)
+    proj_y = delta_projection(delta_radius)
+    constrain = make_agent_constraint(cfg, mesh, None, sharding_variant)
+    if algorithm == "fedgda_gt":
+        cdt = _CORRECTION_DTYPES.get(cfg.correction_dtype)
+        rnd = make_fedgda_gt_round(
+            loss,
+            num_local_steps,
+            eta,
+            proj_y=proj_y,
+            correction_dtype=cdt,
+            constrain_agents=constrain,
+        )
+    elif algorithm == "local_sgda":
+        rnd = make_local_sgda_round(
+            loss, num_local_steps, eta, eta, proj_y=proj_y,
+            constrain_agents=constrain,
+        )
+    elif algorithm == "sync_gda":
+        step = make_gda_step(loss, eta, eta, proj_y=proj_y)
+
+        def rnd(x, y, agent_data):  # K communicated steps per "round"
+            def body(c, _):
+                return step(*c, agent_data), None
+
+            (x, y), _ = jax.lax.scan(body, (x, y), None, length=num_local_steps)
+            return x, y
+
+    else:
+        raise ValueError(algorithm)
+
+    x_sh = param_shardings(abstract_params(cfg, dtype), cfg, mesh, sharding_variant)
+    y_sh = jax.tree.map(lambda _: replicated(mesh), delta_struct(cfg, dtype))
+    bsh = train_batch_shardings(cfg, mesh)
+    batch_sh_fn = lambda tree: jax.tree.map(lambda s: bsh(len(s.shape)), tree)
+
+    def specs_fn(shape: ShapeConfig, dt=dtype):
+        return train_input_specs(cfg, shape, mesh, dt)
+
+    def jitted(shape: ShapeConfig):
+        sp = specs_fn(shape)
+        return jax.jit(
+            rnd,
+            in_shardings=(x_sh, y_sh, batch_sh_fn(sp["batch"])),
+            out_shardings=(x_sh, y_sh),
+            donate_argnums=(0,),
+        )
+
+    return jitted, specs_fn
+
+
+# --------------------------------------------------------------------------
+# serving (prefill builds the KV cache; decode extends it one token)
+# --------------------------------------------------------------------------
+def build_prefill_step(
+    cfg: ModelConfig, mesh, *, dtype=jnp.bfloat16, sequence_parallel: bool = True,
+    sharding_variant: str = "baseline",
+):
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    h_sh = (
+        NamedSharding(mesh, P(dp if dp else None, "model", None))
+        if sequence_parallel
+        else None
+    )
+
+    def prefill(params, batch, caches):
+        h = embed_inputs(params, cfg, batch)
+        h, caches, _ = forward(params, cfg, h, caches=caches, h_sharding=h_sh)
+        logits = logits_from_hidden(params, cfg, h[:, -1:])
+        return logits, caches
+
+    def encoder_fwd(params, batch):
+        h = embed_inputs(params, cfg, batch)
+        h, _, _ = forward(params, cfg, h, h_sharding=h_sh)
+        return logits_from_hidden(params, cfg, h)
+
+    def specs_fn(shape: ShapeConfig):
+        sp = {
+            "params": abstract_params(cfg, dtype),
+            "batch": batch_struct(cfg, shape.global_batch, shape.seq_len, dtype),
+        }
+        if cfg.supports_decode:
+            sp["caches"] = abstract_caches(
+                cfg, shape.global_batch, shape.seq_len, dtype
+            )
+        return sp
+
+    def jitted(shape: ShapeConfig):
+        sp = specs_fn(shape)
+        p_sh = param_shardings(sp["params"], cfg, mesh, sharding_variant)
+        b_sh = jax.tree.map(
+            lambda s: serve_batch_sharding(mesh, shape.global_batch, len(s.shape)),
+            sp["batch"],
+        )
+        if not cfg.supports_decode:
+            return jax.jit(encoder_fwd, in_shardings=(p_sh, b_sh))
+        c_sh = cache_shardings(sp["caches"], cfg, mesh)
+        return jax.jit(
+            prefill,
+            in_shardings=(p_sh, b_sh, c_sh),
+            out_shardings=(serve_batch_sharding(mesh, shape.global_batch, 3), c_sh),
+            donate_argnums=(2,),
+        )
+
+    return jitted, specs_fn
+
+
+def build_decode_step(
+    cfg: ModelConfig, mesh, *, dtype=jnp.bfloat16,
+    sharding_variant: str = "baseline",
+):
+    """One new token against a seq_len KV cache (decode_32k / long_500k)."""
+
+    def decode(params, caches, tokens, position):
+        h = embed_inputs(params, cfg, {"tokens": tokens})
+        h, caches, _ = forward(params, cfg, h, caches=caches, position=position)
+        logits = logits_from_hidden(params, cfg, h)
+        return logits, caches
+
+    def specs_fn(shape: ShapeConfig):
+        B = shape.global_batch
+        return {
+            "params": abstract_params(cfg, dtype),
+            "caches": abstract_caches(cfg, B, shape.seq_len, dtype),
+            "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "position": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    def jitted(shape: ShapeConfig):
+        sp = specs_fn(shape)
+        B = shape.global_batch
+        p_sh = param_shardings(sp["params"], cfg, mesh, sharding_variant)
+        c_sh = cache_shardings(sp["caches"], cfg, mesh)
+        t_sh = serve_batch_sharding(mesh, B, 2)
+        return jax.jit(
+            decode,
+            in_shardings=(p_sh, c_sh, t_sh, replicated(mesh)),
+            out_shardings=(serve_batch_sharding(mesh, B, 3), c_sh),
+            donate_argnums=(1,),
+        )
+
+    return jitted, specs_fn
+
+
+def step_builder_for(cfg: ModelConfig, shape: ShapeConfig, mesh, **kw):
+    """Dispatch on the input-shape kind."""
+    if shape.kind == "train":
+        return build_train_step(cfg, mesh, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, mesh)
+    return build_decode_step(cfg, mesh)

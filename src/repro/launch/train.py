@@ -1,0 +1,94 @@
+"""End-to-end federated minimax training driver.
+
+Runs FedGDA-GT (or a baseline) over one of the assigned architectures on
+whatever devices exist (a host mesh locally; the production mesh on a real
+cluster), with synthetic heterogeneous federated data, metrics and
+checkpointing.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --reduced \
+        --rounds 50 --local-steps 8 --agents 4
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import save_checkpoint
+from ..configs import get_config
+from ..core.fedgda_gt import make_fedgda_gt_round
+from ..core.local_sgda import make_local_sgda_round
+from ..data import federated_token_batches
+from ..models import init_params, num_params
+from ..problems.adversarial import (
+    delta_projection,
+    init_delta,
+    make_adversarial_loss,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--rounds", type=int, default=50)
+    ap.add_argument("--local-steps", type=int, default=8)
+    ap.add_argument("--agents", type=int, default=4)
+    ap.add_argument("--per-agent-batch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--eta", type=float, default=2e-3)
+    ap.add_argument("--heterogeneity", type=int, default=7)
+    ap.add_argument("--algorithm", default="fedgda_gt",
+                    choices=["fedgda_gt", "local_sgda"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg, jnp.float32)
+    delta = init_delta(cfg)
+    print(f"arch={cfg.name} params={num_params(params)/1e6:.1f}M "
+          f"agents={args.agents} K={args.local_steps} algo={args.algorithm}")
+
+    data = federated_token_batches(
+        jax.random.PRNGKey(1), args.agents, args.per_agent_batch,
+        args.seq_len, cfg.vocab_size, heterogeneity=args.heterogeneity,
+    )
+    loss = make_adversarial_loss(cfg, remat=False)
+    if args.algorithm == "fedgda_gt":
+        rnd = make_fedgda_gt_round(
+            loss, args.local_steps, args.eta, proj_y=delta_projection(1.0)
+        )
+    else:
+        rnd = make_local_sgda_round(
+            loss, args.local_steps, args.eta, args.eta,
+            proj_y=delta_projection(1.0),
+        )
+    rnd = jax.jit(rnd)
+
+    def global_loss(x, y):
+        per = jax.vmap(loss, in_axes=(None, None, 0))(x, y, data)
+        return jnp.mean(per)
+
+    gl = jax.jit(global_loss)
+    t0 = time.time()
+    for t in range(args.rounds):
+        params, delta = rnd(params, delta, data)
+        if t % args.log_every == 0 or t == args.rounds - 1:
+            lv = float(gl(params, delta))
+            dn = float(jnp.linalg.norm(delta["delta"]))
+            print(f"[round {t:4d}] loss={lv:.4f} |delta|={dn:.4f} "
+                  f"({time.time()-t0:.1f}s)", flush=True)
+        if args.ckpt_dir and (t + 1) % 50 == 0:
+            save_checkpoint(args.ckpt_dir, t + 1, {"x": params, "y": delta})
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

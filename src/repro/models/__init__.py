@@ -1,0 +1,22 @@
+from .transformer import (
+    chunked_lm_loss,
+    embed_inputs,
+    forward,
+    init_caches,
+    init_params,
+    logits_from_hidden,
+    num_params,
+)
+from .frontends import batch_struct, random_batch
+
+__all__ = [
+    "chunked_lm_loss",
+    "embed_inputs",
+    "forward",
+    "init_caches",
+    "init_params",
+    "logits_from_hidden",
+    "num_params",
+    "batch_struct",
+    "random_batch",
+]

@@ -1,0 +1,178 @@
+"""GQA attention with RoPE, sliding windows, Gemma-2 logit softcap and a
+ring-buffer KV cache.
+
+Memory discipline: scores are never materialized at [S, S] — the q axis is
+processed in checkpointed blocks (`q_block`), bounding live memory to
+[B, H, q_block, S_kv] (the pure-jnp analogue of the Pallas flash kernel in
+`repro.kernels.flash_attention`, which replaces the inner block on TPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def init_attention(key, d: int, heads: int, kv_heads: int, head_dim: int, dtype) -> Dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = 1.0 / jnp.sqrt(d)
+    so = 1.0 / jnp.sqrt(heads * head_dim)
+    return {
+        "wq": (jax.random.normal(kq, (d, heads, head_dim)) * s).astype(dtype),
+        "wk": (jax.random.normal(kk, (d, kv_heads, head_dim)) * s).astype(dtype),
+        "wv": (jax.random.normal(kv, (d, kv_heads, head_dim)) * s).astype(dtype),
+        "wo": (jax.random.normal(ko, (heads, head_dim, d)) * so).astype(dtype),
+    }
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, hd]; positions: [S] (shared across batch)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # [S, half]
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    dt = x.dtype
+    return jnp.concatenate(
+        [
+            (x1.astype(jnp.float32) * cos - x2.astype(jnp.float32) * sin).astype(dt),
+            (x2.astype(jnp.float32) * cos + x1.astype(jnp.float32) * sin).astype(dt),
+        ],
+        axis=-1,
+    )
+
+
+def _attend(
+    q: jax.Array,  # [B, Sq, H, hd]  (already rope'd)
+    k: jax.Array,  # [B, Skv, KV, hd]
+    v: jax.Array,  # [B, Skv, KV, hd]
+    q_positions: jax.Array,  # [Sq]
+    kv_positions: jax.Array,  # [Skv]
+    kv_valid: Optional[jax.Array],  # [Skv] bool or None
+    causal: bool,
+    window: int,
+    softcap: float,
+) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    if softcap > 0.0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    mask = jnp.ones((Sq, k.shape[1]), dtype=bool)
+    if causal:
+        mask &= q_positions[:, None] >= kv_positions[None, :]
+    if window > 0:
+        mask &= q_positions[:, None] - kv_positions[None, :] < window
+    if kv_valid is not None:
+        mask &= kv_valid[None, :]
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", p, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def multihead_attention(
+    params: Dict,
+    h: jax.Array,  # [B, Sq, d]
+    *,
+    q_positions: jax.Array,  # [Sq]
+    rope_theta: float,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    cache: Optional[Dict] = None,
+    cache_index: Optional[jax.Array] = None,
+    q_block: int = 512,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Returns (output [B, Sq, d], updated cache or None).
+
+    cache (decode/prefill-fill): {"k": [B, C, KV, hd], "v": same,
+    "pos": [C] int32 positions stored in each slot (-1 = empty)}.
+    cache_index: slot offset at which to write the new K/V (ring for windows).
+    """
+    B, Sq, d = h.shape
+    q = jnp.einsum("bsd,dnh->bsnh", h, params["wq"])
+    k_new = jnp.einsum("bsd,dnh->bsnh", h, params["wk"])
+    v_new = jnp.einsum("bsd,dnh->bsnh", h, params["wv"])
+    q = apply_rope(q, q_positions, rope_theta)
+    k_new = apply_rope(k_new, q_positions, rope_theta)
+
+    if cache is not None and Sq >= cache["k"].shape[1]:
+        # prefill longer than a ring (sliding-window) cache: attend over the
+        # full new K/V; store only the last C entries, rotated so slot i
+        # holds the position p with p % C == i (decode continues the ring)
+        C = cache["k"].shape[1]
+        tail_pos = q_positions[-C:].astype(jnp.int32)
+        order = jnp.argsort(tail_pos % C)
+        new_cache = {
+            "k": k_new[:, -C:][:, order],
+            "v": v_new[:, -C:][:, order],
+            "pos": tail_pos[order],
+        }
+        k, v = k_new, v_new
+        kv_positions, kv_valid = q_positions, None
+    elif cache is not None:
+        C = cache["k"].shape[1]
+        slot = (cache_index % C).astype(jnp.int32)
+        zero = jnp.int32(0)
+        k_all = jax.lax.dynamic_update_slice(
+            cache["k"], k_new, (zero, slot, zero, zero)
+        )
+        v_all = jax.lax.dynamic_update_slice(
+            cache["v"], v_new, (zero, slot, zero, zero)
+        )
+        pos_all = jax.lax.dynamic_update_slice(
+            cache["pos"], q_positions.astype(jnp.int32), (slot,)
+        )
+        new_cache = {"k": k_all, "v": v_all, "pos": pos_all}
+        kv_positions, kv_valid = pos_all, pos_all >= 0
+        k, v = k_all, v_all
+    else:
+        new_cache = None
+        k, v = k_new, v_new
+        kv_positions, kv_valid = q_positions, None
+
+    attend = functools.partial(
+        _attend,
+        k=k,
+        v=v,
+        kv_positions=kv_positions,
+        kv_valid=kv_valid,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+    )
+    if Sq <= q_block:
+        out = attend(q, q_positions=q_positions)
+    else:
+        # blocked over q with rematerialized scores (flash-style memory bound)
+        nb = Sq // q_block
+        assert Sq % q_block == 0, (Sq, q_block)
+        qb = q.reshape(B, nb, q_block, *q.shape[2:]).transpose(1, 0, 2, 3, 4)
+        pb = q_positions.reshape(nb, q_block)
+
+        blk = jax.checkpoint(lambda qq, pp: attend(qq, q_positions=pp))
+        out = jax.lax.map(lambda args: blk(*args), (qb, pb))
+        out = out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, *q.shape[2:])
+
+    out = jnp.einsum("bsnh,nhd->bsd", out, params["wo"])
+    return out, new_cache
+
+
+def init_cache(
+    batch: int, capacity: int, kv_heads: int, head_dim: int, dtype
+) -> Dict:
+    return {
+        "k": jnp.zeros((batch, capacity, kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, capacity, kv_heads, head_dim), dtype),
+        "pos": jnp.full((capacity,), -1, jnp.int32),
+    }

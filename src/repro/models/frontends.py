@@ -1,0 +1,80 @@
+"""Modality frontend STUBS (the one sanctioned carve-out).
+
+[audio] and [vlm] architectures specify the transformer backbone only; the
+conv feature extractor / ViT is NOT implemented.  These helpers produce the
+precomputed frame/patch embeddings the backbone consumes, both as concrete
+random arrays (smoke tests) and as ShapeDtypeStructs (dry-run input_specs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+
+
+def audio_frames(key, cfg: ModelConfig, batch: int, seq_len: int, dtype):
+    """Mel+conv-codec output stand-in: [B, S, frontend_dim]."""
+    return jax.random.normal(key, (batch, seq_len, cfg.frontend_dim), dtype)
+
+
+def vision_patches(key, cfg: ModelConfig, batch: int, dtype):
+    """ViT/SigLIP patch embeddings stand-in: [B, num_patches, frontend_dim]."""
+    return jax.random.normal(key, (batch, cfg.num_patches, cfg.frontend_dim), dtype)
+
+
+def batch_struct(cfg: ModelConfig, batch: int, seq_len: int, dtype) -> dict:
+    """ShapeDtypeStruct pytree for one training/prefill batch."""
+    i32 = jnp.int32
+    if cfg.frontend == "audio":
+        return {
+            "frames": jax.ShapeDtypeStruct((batch, seq_len, cfg.frontend_dim), dtype),
+            "labels": jax.ShapeDtypeStruct((batch, seq_len), i32),
+        }
+    if cfg.frontend == "vision_text":
+        s_text = seq_len - cfg.num_patches
+        return {
+            "tokens": jax.ShapeDtypeStruct((batch, s_text), i32),
+            "patches": jax.ShapeDtypeStruct(
+                (batch, cfg.num_patches, cfg.frontend_dim), dtype
+            ),
+            "labels": jax.ShapeDtypeStruct((batch, seq_len), i32),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((batch, seq_len), i32),
+        "labels": jax.ShapeDtypeStruct((batch, seq_len), i32),
+    }
+
+
+def random_batch(key, cfg: ModelConfig, batch: int, seq_len: int, dtype) -> dict:
+    """Concrete batch matching batch_struct (smoke tests / examples)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.frontend == "audio":
+        return {
+            "frames": audio_frames(k1, cfg, batch, seq_len, dtype),
+            "labels": jax.random.randint(
+                k2, (batch, seq_len), 0, cfg.vocab_size, jnp.int32
+            ),
+        }
+    if cfg.frontend == "vision_text":
+        s_text = seq_len - cfg.num_patches
+        labels = jax.random.randint(
+            k2, (batch, seq_len), 0, cfg.vocab_size, jnp.int32
+        )
+        # no next-token target on patch positions
+        labels = labels.at[:, : cfg.num_patches].set(-1)
+        return {
+            "tokens": jax.random.randint(
+                k1, (batch, s_text), 0, cfg.vocab_size, jnp.int32
+            ),
+            "patches": vision_patches(k3, cfg, batch, dtype),
+            "labels": labels,
+        }
+    return {
+        "tokens": jax.random.randint(
+            k1, (batch, seq_len), 0, cfg.vocab_size, jnp.int32
+        ),
+        "labels": jax.random.randint(
+            k2, (batch, seq_len), 0, cfg.vocab_size, jnp.int32
+        ),
+    }

@@ -1,0 +1,57 @@
+"""Shared neural-net building blocks (pure-jnp, param dicts)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def init_rms_norm(d: int, dtype) -> Dict:
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def swiglu(x: jax.Array, w: Dict) -> jax.Array:
+    """SwiGLU MLP: (silu(x W_gate) * (x W_up)) W_down."""
+    gate = jax.nn.silu(x @ w["gate"])
+    up = x @ w["up"]
+    return (gate * up) @ w["down"]
+
+
+def init_swiglu(key, d: int, ff: int, dtype) -> Dict:
+    kg, ku, kd = jax.random.split(key, 3)
+    s_in = 1.0 / jnp.sqrt(d)
+    s_ff = 1.0 / jnp.sqrt(ff)
+    return {
+        "gate": (jax.random.normal(kg, (d, ff)) * s_in).astype(dtype),
+        "up": (jax.random.normal(ku, (d, ff)) * s_in).astype(dtype),
+        "down": (jax.random.normal(kd, (ff, d)) * s_ff).astype(dtype),
+    }
+
+
+def embed_tokens(tokens: jax.Array, table: jax.Array, scale: bool = True):
+    h = table[tokens]
+    if scale:
+        h = h * jnp.asarray(jnp.sqrt(table.shape[-1]), h.dtype)
+    return h
+
+
+def unembed(h: jax.Array, table: jax.Array, softcap: float = 0.0) -> jax.Array:
+    logits = jnp.einsum("...d,vd->...v", h, table).astype(jnp.float32)
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token CE; logits [..., V] float32, labels [...] int."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

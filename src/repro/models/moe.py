@@ -1,0 +1,114 @@
+"""Mixture-of-Experts FFN (top-k router, capacity-based dispatch).
+
+Two dispatch implementations, selectable per config (and the subject of one
+of the §Perf hillclimbs):
+  * "einsum"  — Mesh-TF style one-hot dispatch/combine einsums. GSPMD-friendly
+    (lowers to all-to-all when experts are mesh-sharded) at the cost of
+    O(B*S*E*C*d) dispatch FLOPs.
+  * "scatter" — sort-free scatter/gather by expert id with capacity dropping.
+    Near-zero dispatch FLOPs, but relies on GSPMD handling scatter across
+    expert-sharded operands.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_moe(key, d: int, ff: int, num_experts: int, dtype) -> Dict:
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    s_in = 1.0 / jnp.sqrt(d)
+    s_ff = 1.0 / jnp.sqrt(ff)
+    E = num_experts
+    return {
+        "router": (jax.random.normal(kr, (d, E)) * s_in).astype(jnp.float32),
+        "gate": (jax.random.normal(kg, (E, d, ff)) * s_in).astype(dtype),
+        "up": (jax.random.normal(ku, (E, d, ff)) * s_in).astype(dtype),
+        "down": (jax.random.normal(kd, (E, ff, d)) * s_ff).astype(dtype),
+    }
+
+
+def _expert_ffn(params: Dict, x: jax.Array) -> jax.Array:
+    """x: [E, G, C, d] -> [E, G, C, d] (per-expert SwiGLU)."""
+    gate = jax.nn.silu(jnp.einsum("egcd,edf->egcf", x, params["gate"]))
+    up = jnp.einsum("egcd,edf->egcf", x, params["up"])
+    return jnp.einsum("egcf,efd->egcd", gate * up, params["down"])
+
+
+def router_decisions(
+    params: Dict, h: jax.Array, top_k: int
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (expert_index [B,S,K], gate_weight [B,S,K], aux_loss scalar)."""
+    logits = (h.astype(jnp.float32) @ params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, top_k)
+    gate = gate / jnp.maximum(jnp.sum(gate, axis=-1, keepdims=True), 1e-9)
+    # Switch-style load-balance auxiliary: E * <fraction routed> . <mean prob>
+    E = probs.shape[-1]
+    frac = jnp.mean(
+        jax.nn.one_hot(idx[..., 0], E, dtype=jnp.float32), axis=(0, 1)
+    )
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac * mean_prob)
+    return idx, gate.astype(h.dtype), aux
+
+
+def moe_ffn(
+    params: Dict,
+    h: jax.Array,  # [B, S, d]
+    *,
+    top_k: int = 1,
+    capacity_factor: float = 1.25,
+    dispatch: str = "einsum",
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output [B,S,d], load-balance aux loss)."""
+    B, S, d = h.shape
+    E = params["gate"].shape[0]
+    idx, gate, aux = router_decisions(params, h, top_k)
+    C = max(1, int(S * top_k * capacity_factor) // E)
+    if dispatch == "einsum":
+        out = _dispatch_einsum(params, h, idx, gate, top_k, C, E)
+    elif dispatch == "scatter":
+        out = _dispatch_scatter(params, h, idx, gate, top_k, C, E)
+    else:
+        raise ValueError(f"unknown dispatch {dispatch!r}")
+    return out, aux
+
+
+def _dispatch_einsum(params, h, idx, gate, top_k, C, E):
+    B, S, d = h.shape
+    out = jnp.zeros_like(h)
+    for k in range(top_k):
+        onehot = jax.nn.one_hot(idx[..., k], E, dtype=jnp.float32)  # [B,S,E]
+        pos = jnp.cumsum(onehot, axis=1) * onehot - 1.0  # slot within expert
+        keep = (pos >= 0.0) & (pos < C)
+        dm = jnp.where(keep[..., None], jax.nn.one_hot(pos, C), 0.0)  # [B,S,E,C]
+        dm = (dm * onehot[..., None]).astype(h.dtype)
+        xin = jnp.einsum("bsec,bsd->ebcd", dm, h)  # [E,B,C,d]
+        xout = _expert_ffn(params, xin)
+        comb = dm * gate[..., k][..., None, None]
+        out = out + jnp.einsum("bsec,ebcd->bsd", comb, xout)
+    return out
+
+
+def _dispatch_scatter(params, h, idx, gate, top_k, C, E):
+    B, S, d = h.shape
+    out = jnp.zeros_like(h)
+    for k in range(top_k):
+        e_id = idx[..., k]  # [B,S]
+        onehot = jax.nn.one_hot(e_id, E, dtype=jnp.int32)
+        pos = jnp.cumsum(onehot, axis=1) * onehot  # 1-based where selected
+        pos = jnp.take_along_axis(pos, e_id[..., None], axis=-1)[..., 0] - 1
+        # scatter tokens into [E, B, C, d]; capacity overflow -> dropped
+        buf = jnp.zeros((E, B, C, d), h.dtype)
+        b_ix = jnp.broadcast_to(jnp.arange(B)[:, None], (B, S))
+        buf = buf.at[e_id, b_ix, pos].set(h, mode="drop")
+        xout = _expert_ffn(params, buf)
+        gathered = xout[e_id, b_ix, pos]  # [B,S,d]
+        valid = (pos >= 0) & (pos < C)
+        out = out + jnp.where(
+            valid[..., None], gathered * gate[..., k][..., None], 0.0
+        )
+    return out

@@ -1,0 +1,8 @@
+from .schedules import constant_schedule, diminishing_schedule
+from .momentum import make_momentum_fedgda_gt_round
+
+__all__ = [
+    "constant_schedule",
+    "diminishing_schedule",
+    "make_momentum_fedgda_gt_round",
+]

@@ -1,0 +1,54 @@
+"""Beyond-paper variant: heavy-ball momentum on the *outer* (server) update.
+
+The paper's Algorithm 2 aggregates by plain averaging.  Server momentum is a
+standard FL acceleration (e.g. FedAvgM); here it is applied to the round
+increment while keeping the inner GT loop untouched, so Theorem 1's
+inner-loop analysis still applies round-wise.  OFF by default everywhere;
+benchmarked in EXPERIMENTS §Perf as a beyond-paper optimization.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..core.fedgda_gt import make_fedgda_gt_round
+from ..core.types import LossFn, ProjFn, Pytree, identity_proj
+
+
+def make_momentum_fedgda_gt_round(
+    loss: LossFn,
+    num_local_steps: int,
+    eta: float,
+    beta: float = 0.9,
+    proj_x: ProjFn = identity_proj,
+    proj_y: ProjFn = identity_proj,
+) -> Callable:
+    """Returns round((x, y, vel), agent_data) -> (x, y, vel).
+
+    vel is a pytree pair (vx, vy) of server-side velocities.
+    """
+    base = make_fedgda_gt_round(
+        loss, num_local_steps, eta, identity_proj, identity_proj
+    )
+
+    def round(state, agent_data):
+        x, y, (vx, vy) = state
+        x1, y1 = base(x, y, agent_data)
+        dx = jax.tree.map(jnp.subtract, x1, x)
+        dy = jax.tree.map(jnp.subtract, y1, y)
+        vx = jax.tree.map(lambda v, d: beta * v + d, vx, dx)
+        vy = jax.tree.map(lambda v, d: beta * v + d, vy, dy)
+        x2 = proj_x(jax.tree.map(jnp.add, x, vx))
+        y2 = proj_y(jax.tree.map(jnp.add, y, vy))
+        return (x2, y2, (vx, vy))
+
+    def init_velocity(x: Pytree, y: Pytree):
+        return (
+            jax.tree.map(jnp.zeros_like, x),
+            jax.tree.map(jnp.zeros_like, y),
+        )
+
+    round.init_velocity = init_velocity
+    return round

@@ -1,0 +1,19 @@
+"""Stepsize schedules.
+
+The paper's point is that FedGDA-GT admits a CONSTANT stepsize (Theorem 1)
+while Local SGDA needs a diminishing one for exact convergence; both are
+provided so benchmarks can compare the regimes.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(eta: float):
+    return lambda t: jnp.asarray(eta)
+
+
+def diminishing_schedule(eta0: float, decay: float = 1.0):
+    """eta_t = eta0 / (1 + decay * t)  — the O(1/t) rate used by Local SGDA
+    analyses [25, 26]."""
+    return lambda t: eta0 / (1.0 + decay * t)

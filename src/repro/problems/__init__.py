@@ -1,0 +1,24 @@
+"""Concrete federated minimax problems (the paper's experiments + the
+adversarial-LM instantiation used by the assigned architectures)."""
+from .quadratic import make_quadratic_problem, quadratic_minimax_point
+from .robust_regression import (
+    make_robust_regression_problem,
+    robust_loss,
+)
+from .toy import make_appendix_c_problem
+from .agnostic import (
+    make_agnostic_problem,
+    per_agent_risks,
+    uniform_lambda,
+)
+
+__all__ = [
+    "make_quadratic_problem",
+    "quadratic_minimax_point",
+    "make_robust_regression_problem",
+    "robust_loss",
+    "make_appendix_c_problem",
+    "make_agnostic_problem",
+    "per_agent_risks",
+    "uniform_lambda",
+]

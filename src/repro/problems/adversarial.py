@@ -1,0 +1,50 @@
+"""Adversarial-embedding minimax objective for the assigned architectures.
+
+The paper's robust-regression instantiation (Eq. 14) lifted to sequence
+models:  min_params  max_{||delta|| <= eps}  (1/m) sum_i CE_i(params, delta)
+where delta in R^{d_model} perturbs every input embedding (a universal
+adversarial perturbation).  x = params pytree, y = {"delta": [d_model]}.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..core.projections import l2_ball_proj
+from ..models import chunked_lm_loss, embed_inputs, forward
+
+Pytree = Any
+
+
+def make_adversarial_loss(
+    cfg: ModelConfig,
+    remat: bool = True,
+    aux_weight: float = 0.0,
+    h_sharding=None,
+):
+    """Returns loss(params, y, batch) -> scalar for one agent's batch."""
+
+    def loss(params: Pytree, y: Dict, batch: Dict) -> jax.Array:
+        h = embed_inputs(params, cfg, batch)
+        h = h + y["delta"].astype(h.dtype)
+        h, _, aux = forward(params, cfg, h, remat=remat, h_sharding=h_sharding)
+        labels = batch["labels"]
+        if cfg.causal and cfg.frontend != "audio":
+            pass  # labels already next-token aligned by the data pipeline
+        out = chunked_lm_loss(params, cfg, h, labels)
+        if aux_weight:
+            out = out + aux_weight * aux
+        return out
+
+    return loss
+
+
+def init_delta(cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    return {"delta": jnp.zeros((cfg.d_model,), dtype)}
+
+
+def delta_projection(radius: float = 1.0):
+    return l2_ball_proj(radius)

@@ -1,0 +1,80 @@
+"""Agnostic Federated Learning — paper Appendix A.2 (Mohri et al. [13]).
+
+  min_theta  max_{lambda in simplex}  sum_i lambda_i R_i(theta)
+
+cast into the paper's average form (Eq. 1) via  f_i(x, y) = m * y_i * R_i(x)
+so that (1/m) sum_i f_i = sum_i y_i R_i.  x = theta (model), y = lambda
+(mixture weights on the m-simplex, Proj_Y = simplex projection).  The
+adversary upweights the worst-off agent; the solution is the minimax-fair
+model over agent distributions.
+
+Local risks here are ridge-regularized linear regression on per-agent data
+(strongly convex in x; linear — concave — in y, so the projected ascent is
+exact on the simplex)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.projections import simplex_proj
+from ..core.types import MinimaxProblem
+
+
+def _loss(x, y, data):
+    a, b, idx, m = data["a"], data["b"], data["agent_index"], data["m"]
+    pred = a @ x
+    risk = jnp.mean((pred - b) ** 2) + 0.05 * jnp.sum(x**2)
+    return m * y[idx] * risk
+
+
+def make_agnostic_problem(
+    key: jax.Array,
+    dim: int = 10,
+    num_samples: int = 100,
+    num_agents: int = 5,
+    shift: float = 2.0,
+    dtype=jnp.float64,
+) -> MinimaxProblem:
+    """Heterogeneous agents with CONFLICTING true models: agent i labels
+    with x_true + (i/m)*shift*e_0, so no single model fits everyone and a
+    uniform average underserves the extreme agents — the setting where
+    agnostic reweighting matters (Mohri et al. §1)."""
+    kx, ka, ke = jax.random.split(key, 3)
+    x_true = jax.random.normal(kx, (dim,), dtype)
+    disagree = (
+        jnp.arange(num_agents, dtype=dtype)[:, None]
+        * (shift / num_agents)
+        * jnp.eye(dim, dtype=dtype)[0][None, :]
+    )
+    x_agents = x_true[None, :] + disagree  # [m, dim]
+    a = jax.random.normal(ka, (num_agents, num_samples, dim), dtype)
+    b = jnp.einsum("mnd,md->mn", a, x_agents)
+    b = b + 0.1 * jax.random.normal(ke, b.shape, dtype)
+    data = {
+        "a": a,
+        "b": b,
+        "agent_index": jnp.arange(num_agents, dtype=jnp.int32),
+        "m": jnp.full((num_agents,), float(num_agents), dtype),
+    }
+    return MinimaxProblem(
+        loss=_loss,
+        agent_data=data,
+        num_agents=num_agents,
+        proj_y=simplex_proj(),
+    )
+
+
+def per_agent_risks(problem: MinimaxProblem, x: jax.Array) -> jax.Array:
+    """R_i(x) for every agent (the quantities lambda* weights)."""
+
+    def risk(data):
+        pred = data["a"] @ x
+        return jnp.mean((pred - data["b"]) ** 2) + 0.05 * jnp.sum(x**2)
+
+    return jax.vmap(risk)(problem.agent_data)
+
+
+def uniform_lambda(num_agents: int, dtype=jnp.float64) -> jax.Array:
+    return jnp.full((num_agents,), 1.0 / num_agents, dtype)

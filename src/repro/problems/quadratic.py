@@ -1,0 +1,63 @@
+"""Uncoupled quadratic minimax game — paper Section 5.1, Eq. (13).
+
+  f_i(x, y) = 1/2 x^T A_i^T A_i x - 1/2 y^T A_i^T A_i y + (A_i^T b_i)^T (2x - y)
+
+Data generation follows the paper exactly:
+  [A_i]_kl ~ N(0, (0.5 i)^-2);  theta_i ~ N(mu_i, I);  mu_i entries ~ N(alpha, 1)
+  with alpha ~ N(0, 100);  b_i = A_i theta_i + eps_i,  eps_i ~ N(0, 0.25 I).
+Defaults: d = 50, n_i = 500, m = 20 agents.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.types import MinimaxProblem
+
+
+def _loss(x, y, data):
+    G, Ab = data["G"], data["Ab"]
+    return (
+        0.5 * x @ G @ x
+        - 0.5 * y @ G @ y
+        + Ab @ (2.0 * x - y)
+    )
+
+
+def make_quadratic_problem(
+    key: jax.Array,
+    dim: int = 50,
+    num_samples: int = 500,
+    num_agents: int = 20,
+    dtype=jnp.float64,
+) -> MinimaxProblem:
+    k_alpha, k_mu, k_theta, k_A, k_eps = jax.random.split(key, 5)
+    alpha = 10.0 * jax.random.normal(k_alpha, (), dtype=dtype)  # N(0, 100)
+    mu = alpha + jax.random.normal(k_mu, (num_agents, dim), dtype=dtype)
+    theta = mu + jax.random.normal(k_theta, (num_agents, dim), dtype=dtype)
+    std = 2.0 / jnp.arange(1, num_agents + 1, dtype=dtype)  # (0.5 i)^{-1}
+    A = (
+        jax.random.normal(k_A, (num_agents, num_samples, dim), dtype=dtype)
+        * std[:, None, None]
+    )
+    eps = 0.5 * jax.random.normal(k_eps, (num_agents, num_samples), dtype=dtype)
+    b = jnp.einsum("mnd,md->mn", A, theta) + eps
+
+    G = jnp.einsum("mnd,mne->mde", A, A)  # A_i^T A_i, [m, d, d]
+    Ab = jnp.einsum("mnd,mn->md", A, b)  # A_i^T b_i,   [m, d]
+    return MinimaxProblem(
+        loss=_loss, agent_data={"G": G, "Ab": Ab}, num_agents=num_agents
+    )
+
+
+def quadratic_minimax_point(problem: MinimaxProblem) -> Tuple[jax.Array, jax.Array]:
+    """Closed-form minimax point:
+    grad_x f = Gbar x + 2 Abbar = 0  ->  x* = -2 Gbar^{-1} Abbar
+    grad_y f = -Gbar y - Abbar = 0   ->  y* = -  Gbar^{-1} Abbar
+    """
+    Gbar = jnp.mean(problem.agent_data["G"], axis=0)
+    Abbar = jnp.mean(problem.agent_data["Ab"], axis=0)
+    sol = jnp.linalg.solve(Gbar, Abbar)
+    return -2.0 * sol, -sol

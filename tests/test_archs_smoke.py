@@ -1,0 +1,162 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Every assigned architecture is instantiated as the REDUCED variant of the
+same family (2 layers / d_model<=256 / <=4 experts — see
+ModelConfig.reduced) and exercised through one forward pass, one federated
+FedGDA-GT training round, and (where supported) a prefill+decode step, all
+on CPU.  Assertions: output shapes, finiteness (no NaN/inf), and cache
+consistency.  The FULL configs are exercised only via the dry-run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.core import make_fedgda_gt_round
+from repro.models import (
+    embed_inputs,
+    forward,
+    init_caches,
+    init_params,
+    logits_from_hidden,
+    num_params,
+    random_batch,
+)
+from repro.problems.adversarial import (
+    delta_projection,
+    init_delta,
+    make_adversarial_loss,
+)
+
+ARCH_NAMES = sorted(ARCHS)
+DT = jnp.float32
+B, S = 2, 64
+
+
+def _finite(tree):
+    return all(bool(jnp.all(jnp.isfinite(u))) for u in jax.tree.leaves(tree))
+
+
+def _stacked_batches(cfg, m, batch, seq, key):
+    ks = jax.random.split(key, m)
+    bs = [random_batch(ks[i], cfg, batch, seq, DT) for i in range(m)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *bs)
+
+
+@pytest.fixture(scope="module", params=ARCH_NAMES)
+def arch(request):
+    return request.param
+
+
+@pytest.fixture(scope="module")
+def reduced(arch):
+    cfg = get_config(arch).reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg, DT)
+    return cfg, params
+
+
+class TestForward:
+    def test_forward_shapes_and_finite(self, reduced):
+        cfg, params = reduced
+        batch = random_batch(jax.random.PRNGKey(1), cfg, B, S, DT)
+        h = embed_inputs(params, cfg, batch)
+        assert h.shape == (B, S, cfg.d_model), h.shape
+        out, caches, aux = forward(params, cfg, h)
+        assert out.shape == (B, S, cfg.d_model)
+        assert caches is None
+        assert _finite(out) and _finite(aux)
+        logits = logits_from_hidden(params, cfg, out)
+        assert logits.shape == (B, S, cfg.vocab_size)
+        assert _finite(logits)
+
+    def test_param_count_positive_and_layers_cycled(self, reduced):
+        cfg, params = reduced
+        assert num_params(params) > 0
+        assert len(cfg.layer_types) == cfg.num_layers
+
+
+class TestTrainRound:
+    def test_fedgda_gt_round_no_nan(self, reduced):
+        cfg, params = reduced
+        m, K = 2, 2
+        data = _stacked_batches(cfg, m, B, S, jax.random.PRNGKey(2))
+        loss = make_adversarial_loss(cfg, remat=False)
+        rnd = jax.jit(
+            make_fedgda_gt_round(loss, K, 1e-3, proj_y=delta_projection(1.0))
+        )
+        x1, y1 = rnd(params, init_delta(cfg, DT), data)
+        # shapes preserved leaf-by-leaf
+        assert jax.tree.structure(x1) == jax.tree.structure(params)
+        for a, b in zip(jax.tree.leaves(x1), jax.tree.leaves(params)):
+            assert a.shape == b.shape and a.dtype == b.dtype
+        assert _finite(x1) and _finite(y1)
+        assert float(jnp.linalg.norm(y1["delta"])) <= 1.0 + 1e-5
+
+    def test_round_changes_params(self, reduced):
+        cfg, params = reduced
+        data = _stacked_batches(cfg, 2, B, S, jax.random.PRNGKey(3))
+        loss = make_adversarial_loss(cfg, remat=False)
+        rnd = jax.jit(make_fedgda_gt_round(loss, 1, 1e-2))
+        x1, _ = rnd(params, init_delta(cfg, DT), data)
+        moved = sum(
+            float(jnp.max(jnp.abs(a - b)))
+            for a, b in zip(jax.tree.leaves(x1), jax.tree.leaves(params))
+        )
+        assert moved > 0.0
+
+
+class TestServe:
+    def test_prefill_then_decode(self, reduced):
+        cfg, params = reduced
+        if not cfg.supports_decode:
+            pytest.skip("encoder-only architecture has no decode step")
+        cap = S + 8
+        caches = init_caches(cfg, B, cap, DT)
+        batch = random_batch(jax.random.PRNGKey(4), cfg, B, S, DT)
+        h = embed_inputs(params, cfg, batch)
+        h, caches, _ = forward(params, cfg, h, caches=caches)
+        assert _finite(h)
+        # decode one token at absolute position S
+        tok = jnp.zeros((B, 1), jnp.int32)
+        hd = embed_inputs(params, cfg, {"tokens": tok})
+        hd, caches2, _ = forward(
+            params, cfg, hd, caches=caches, position=jnp.int32(S)
+        )
+        logits = logits_from_hidden(params, cfg, hd)
+        assert logits.shape == (B, 1, cfg.vocab_size)
+        assert _finite(logits)
+
+    def test_decode_matches_full_forward(self, reduced):
+        """Teacher-forced decode must reproduce the full-sequence forward
+        logits (KV-cache correctness) on attention-only architectures."""
+        cfg, params = reduced
+        if not cfg.supports_decode:
+            pytest.skip("encoder-only")
+        if cfg.frontend != "text":
+            pytest.skip("frontend stubs prepend embeddings; text-only check")
+        if cfg.num_experts:
+            # capacity dropping differs between batched prefill (C<S) and
+            # one-token decode (C=1, never drops); disable drops so the
+            # equivalence is exact and the KV-cache path is what's tested
+            import dataclasses
+
+            cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.num_experts))
+        s = 8
+        batch = random_batch(jax.random.PRNGKey(5), cfg, 1, s, DT)
+        h = embed_inputs(params, cfg, batch)
+        full, _, _ = forward(params, cfg, h)
+        full_logits = logits_from_hidden(params, cfg, full)
+
+        caches = init_caches(cfg, 1, s, DT)
+        outs = []
+        for t in range(s):
+            ht = embed_inputs(params, cfg, {"tokens": batch["tokens"][:, t : t + 1]})
+            ht, caches, _ = forward(
+                params, cfg, ht, caches=caches, position=jnp.int32(t)
+            )
+            outs.append(logits_from_hidden(params, cfg, ht))
+        dec_logits = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(
+            np.asarray(dec_logits), np.asarray(full_logits), rtol=2e-3, atol=2e-3
+        )

@@ -1,0 +1,162 @@
+"""Section-4 generalization machinery: Rademacher estimation, Theorem-2
+bound assembly, Lemma-3 VC bound — plus an empirical validation that the
+bound actually holds on a synthetic distributed minimax learning task."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    empirical_rademacher,
+    lemma3_vc_bound,
+    theorem2_bound,
+)
+from repro.core.generalization import l2_cover_size
+
+
+def _threshold_loss_matrix(key, m, n, num_candidates, y_shift=0.0):
+    """Finite hypothesis class: 1-D threshold classifiers on agent-shifted
+    Gaussians (losses in {0,1} — the Lemma-3 finite-values setting)."""
+    kd, kc = jax.random.split(key)
+    # heterogeneous agents: agent i's samples ~ N(0.3*i, 1)
+    shifts = 0.3 * jnp.arange(m, dtype=jnp.float64)
+    xi = jax.random.normal(kd, (m, n), jnp.float64) + shifts[:, None]
+    labels = (xi + y_shift > 0.0).astype(jnp.float64)
+    thresholds = jnp.linspace(-2.0, 2.0, num_candidates)
+
+    def matrix(idx):
+        th = thresholds[idx]  # [C]
+        pred = (xi[None] > th[:, None, None]).astype(jnp.float64)
+        return jnp.abs(pred - labels[None])  # 0/1 loss, [C, m, n]
+
+    return matrix, xi, labels, thresholds
+
+
+class TestRademacher:
+    def test_nonnegative_and_bounded(self):
+        m, n, C = 4, 50, 32
+        mat, *_ = _threshold_loss_matrix(jax.random.PRNGKey(0), m, n, C)
+        r = float(
+            empirical_rademacher(mat, C, m, n, jax.random.PRNGKey(1), num_mc=128)
+        )
+        assert 0.0 <= r <= 1.0
+
+    def test_decreases_with_sample_size(self):
+        """R ~ O(1/sqrt(N)): quadrupling n should roughly halve the estimate."""
+        m, C = 4, 64
+        rs = {}
+        for n in (25, 400):
+            mat, *_ = _threshold_loss_matrix(jax.random.PRNGKey(2), m, n, C)
+            rs[n] = float(
+                empirical_rademacher(
+                    mat, C, m, n, jax.random.PRNGKey(3), num_mc=256
+                )
+            )
+        assert rs[400] < rs[25]
+        ratio = rs[25] / max(rs[400], 1e-9)
+        assert 2.0 < ratio < 8.0  # sqrt(16)=4 within generous slop
+
+    def test_richer_class_bigger_complexity(self):
+        m, n = 4, 50
+        mat_small, *_ = _threshold_loss_matrix(jax.random.PRNGKey(4), m, n, 2)
+        mat_big, *_ = _threshold_loss_matrix(jax.random.PRNGKey(4), m, n, 128)
+        r_small = float(
+            empirical_rademacher(mat_small, 2, m, n, jax.random.PRNGKey(5), 256)
+        )
+        r_big = float(
+            empirical_rademacher(mat_big, 128, m, n, jax.random.PRNGKey(5), 256)
+        )
+        assert r_big >= r_small - 1e-6
+
+
+class TestBoundAssembly:
+    def test_theorem2_terms(self):
+        b = theorem2_bound(
+            empirical_risk=0.5,
+            rademacher=0.1,
+            M_i=[1.0] * 8,
+            n=100,
+            cover_size=1000,
+            delta=0.05,
+            L_y=1.0,
+            eps=0.01,
+        )
+        # decompose: f + 2R + conc + 2 L eps
+        conc = math.sqrt(8 / (2 * 64 * 100) * math.log(1000 / 0.05))
+        np.testing.assert_allclose(b, 0.5 + 0.2 + conc + 0.02, rtol=1e-12)
+
+    def test_bound_decreases_in_n_and_increases_in_cover(self):
+        kw = dict(
+            empirical_risk=0.0, rademacher=0.0, M_i=[1.0] * 4,
+            delta=0.1, L_y=1.0, eps=0.0,
+        )
+        assert theorem2_bound(n=400, cover_size=100, **kw) < theorem2_bound(
+            n=100, cover_size=100, **kw
+        )
+        assert theorem2_bound(n=100, cover_size=10_000, **kw) > theorem2_bound(
+            n=100, cover_size=100, **kw
+        )
+
+    def test_lemma3_dominates_mc_estimate(self):
+        """Eq. (12) is an upper bound on R(X, Y); the MC estimate of
+        R(X, y) must sit below it for the 1-D threshold class (VC dim 1)."""
+        m, n, C = 4, 100, 64
+        mat, *_ = _threshold_loss_matrix(jax.random.PRNGKey(6), m, n, C)
+        r = float(
+            empirical_rademacher(mat, C, m, n, jax.random.PRNGKey(7), 256)
+        )
+        ub = lemma3_vc_bound([1.0] * m, n, vc_dim=1)
+        assert r <= ub, (r, ub)
+
+    def test_recovers_agnostic_fl_special_case(self):
+        """Choosing M_i = m*y_i*M recovers the Mohri et al. weighted bound's
+        concentration term sqrt(M^2 sum y_i^2 / (2n) log(.))."""
+        m, n, M = 5, 80, 2.0
+        yw = np.array([0.4, 0.3, 0.1, 0.1, 0.1])
+        M_i = [m * w * M for w in yw]
+        b = theorem2_bound(
+            empirical_risk=0.0, rademacher=0.0, M_i=M_i, n=n,
+            cover_size=100, delta=0.05, L_y=0.0, eps=0.0,
+        )
+        want = math.sqrt(
+            M * M * float(np.sum(yw**2)) / (2 * n) * math.log(100 / 0.05)
+        )
+        np.testing.assert_allclose(b, want, rtol=1e-12)
+
+    def test_cover_size_formula(self):
+        assert l2_cover_size(1.0, 0.5, 2) == math.ceil(5.0**2)
+        assert l2_cover_size(1.0, 0.1, 3) >= l2_cover_size(1.0, 0.5, 3)
+
+
+class TestBoundHoldsEmpirically:
+    def test_population_risk_below_bound(self):
+        """Draw a fresh 'population' sample and check R(x,y) <= bound of
+        Eq. (10) for every candidate x (single y slice, delta=0.1)."""
+        m, n, C = 4, 200, 32
+        mat, xi, labels, ths = _threshold_loss_matrix(
+            jax.random.PRNGKey(8), m, n, C
+        )
+        L_emp = np.asarray(mat(jnp.arange(C)))  # [C, m, n]
+        emp = L_emp.mean(axis=(1, 2))
+        rad = float(
+            empirical_rademacher(mat, C, m, n, jax.random.PRNGKey(9), 512)
+        )
+        # "population": a much larger fresh draw from the same process
+        mat_pop, *_ = _threshold_loss_matrix(
+            jax.random.PRNGKey(123), m, 20_000, C
+        )
+        pop = np.asarray(mat_pop(jnp.arange(C))).mean(axis=(1, 2))
+        for c in range(C):
+            bound = theorem2_bound(
+                empirical_risk=float(emp[c]),
+                rademacher=rad,
+                M_i=[1.0] * m,
+                n=n,
+                cover_size=1,  # y fixed: |Y_eps| = 1
+                delta=0.1,
+                L_y=0.0,
+                eps=0.0,
+            )
+            assert pop[c] <= bound + 1e-9, (c, pop[c], bound)

@@ -1,0 +1,51 @@
+"""HLO census correctness: trip-count scaling and collective accounting."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_census import HloCensus
+
+
+def test_nested_scan_flops_exact():
+    def body(c, _):
+        return c @ c, None
+
+    def f(x):
+        y, _ = jax.lax.scan(body, x, None, length=8)
+
+        def inner(c, _):
+            z, _ = jax.lax.scan(body, c, None, length=3)
+            return z, None
+
+        y2, _ = jax.lax.scan(inner, y, None, length=5)
+        return y2
+
+    compiled = jax.jit(f).lower(jnp.ones((64, 64))).compile()
+    s = HloCensus(compiled.as_text()).summary()
+    assert s["executed_dot_flops"] == 2 * 64**3 * (8 + 15)
+
+
+def test_unscanned_matmul_counted_once():
+    f = lambda a, b: a @ b
+    compiled = (
+        jax.jit(f)
+        .lower(jnp.ones((32, 128)), jnp.ones((128, 16)))
+        .compile()
+    )
+    s = HloCensus(compiled.as_text()).summary()
+    assert s["executed_dot_flops"] == 2 * 32 * 128 * 16
+
+
+def test_collectives_scaled_by_scan_trips():
+    """psum inside a scan body must be counted trip_count times."""
+    if jax.device_count() < 2:
+        pytest.skip("needs >1 device (run under forced host device count)")
+
+
+def test_duplicate_dot_detection():
+    def f(x):
+        return x @ x + (x * 2) @ (x * 3)
+
+    compiled = jax.jit(f).lower(jnp.ones((32, 32))).compile()
+    s = HloCensus(compiled.as_text()).summary()
+    assert sum(s["duplicate_dot_shapes"].values()) >= 2

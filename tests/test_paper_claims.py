@@ -1,0 +1,261 @@
+"""Validation of the paper's own claims (the faithful-reproduction gate).
+
+Each test is tagged with the claim it validates:
+  * Theorem 1   — FedGDA-GT converges LINEARLY to the EXACT minimax point
+                  with a constant stepsize.
+  * Proposition 1 / Appendix C — Local SGDA with constant stepsizes and
+                  K >= 2 has biased fixed points, matching the closed form.
+  * Proposition 2 — homogeneous agents: rate improves >= K-fold.
+  * Section 5.1 — FedGDA-GT outperforms Local SGDA on the quadratic game.
+  * Section 5.2 — robust regression: FedGDA-GT's robust loss <= Local SGDA's
+                  under heterogeneity.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    appendix_c_fixed_point,
+    make_fedgda_gt_round,
+    make_gda_step,
+    make_local_sgda_round,
+    prop1_residual,
+    run_rounds,
+    tree_sq_dist,
+)
+from repro.problems import (
+    make_appendix_c_problem,
+    make_quadratic_problem,
+    make_robust_regression_problem,
+    quadratic_minimax_point,
+    robust_loss,
+)
+
+
+def _gap_metric(xs, ys):
+    def metric(x, y):
+        return {"gap": tree_sq_dist(x, xs) + tree_sq_dist(y, ys)}
+
+    return metric
+
+
+# ---------------------------------------------------------------- Theorem 1
+class TestTheorem1:
+    def test_linear_convergence_exact_limit(self, rng):
+        prob = make_quadratic_problem(rng, dim=20, num_samples=100, num_agents=8)
+        xs, ys = quadratic_minimax_point(prob)
+        rnd = jax.jit(make_fedgda_gt_round(prob.loss, 10, 2e-4))
+        x0 = jnp.zeros(20)
+        (_, _), m = run_rounds(
+            rnd, x0, x0, prob.agent_data, 4000, _gap_metric(xs, ys)
+        )
+        gap = np.asarray(m["gap"])
+        assert gap[-1] < 1e-18, gap[-1]  # exact (machine-precision) limit
+        # linearity: log-gap decreases at a steady per-round rate over the
+        # pre-floor segment
+        seg = gap[(gap > 1e-14) & (gap < 1e2)]
+        rates = np.diff(np.log(seg))
+        assert np.all(rates < 0)
+        assert np.std(rates) < 0.25 * abs(np.mean(rates))
+
+    def test_constant_stepsize_no_accuracy_floor_vs_local_sgda(self, rng):
+        prob = make_quadratic_problem(rng, dim=20, num_samples=100, num_agents=8)
+        xs, ys = quadratic_minimax_point(prob)
+        K, eta = 10, 2e-4
+        x0 = jnp.zeros(20)
+        r_gt = jax.jit(make_fedgda_gt_round(prob.loss, K, eta))
+        r_ls = jax.jit(make_local_sgda_round(prob.loss, K, eta, eta))
+        (_, _), m_gt = run_rounds(r_gt, x0, x0, prob.agent_data, 3000, _gap_metric(xs, ys))
+        (_, _), m_ls = run_rounds(r_ls, x0, x0, prob.agent_data, 3000, _gap_metric(xs, ys))
+        assert m_gt["gap"][-1] < 1e-15
+        assert m_ls["gap"][-1] > 1e-6  # Local SGDA stalls at a bias floor
+        assert m_gt["gap"][-1] < m_ls["gap"][-1] * 1e-6
+
+
+# --------------------------------------------------- Proposition 1 / App. C
+class TestProposition1:
+    @pytest.mark.parametrize("K", [1, 10, 20, 50])
+    def test_appendix_c_closed_form(self, K):
+        prob = make_appendix_c_problem()
+        eta = 0.1 if K == 1 else 0.001  # the paper's own stepsizes
+        rnd = jax.jit(make_local_sgda_round(prob.loss, K, eta, eta))
+        x0 = jnp.array(0.0)
+        (x, y), _ = run_rounds(rnd, x0, x0, prob.agent_data, 30000)
+        fx, fy = appendix_c_fixed_point(K, eta, eta)
+        np.testing.assert_allclose(float(x), fx, rtol=1e-10)
+        np.testing.assert_allclose(float(y), fy, rtol=1e-10)
+        if K == 1:  # K=1 reduces to centralized GDA: exact minimax point
+            np.testing.assert_allclose(float(x), 3.3, rtol=1e-9)
+        else:  # K>=2: biased away from the minimax point
+            assert abs(float(x) - 3.3) > 1e-4
+
+    def test_prop1_residual_zero_at_fixed_point(self):
+        prob = make_appendix_c_problem()
+        K, eta = 10, 0.001
+        rnd = jax.jit(make_local_sgda_round(prob.loss, K, eta, eta))
+        x0 = jnp.array(0.0)
+        (x, y), _ = run_rounds(rnd, x0, x0, prob.agent_data, 30000)
+        r_fp = prop1_residual(prob.loss, x, y, prob.agent_data, K, eta, eta)
+        assert float(r_fp) < 1e-10
+        # ... and non-zero at the true minimax point (which is NOT a fixed pt)
+        xm = jnp.array(3.3)
+        r_mm = prop1_residual(prob.loss, xm, xm, prob.agent_data, K, eta, eta)
+        assert float(r_mm) > 1e-3
+
+    def test_larger_K_larger_bias(self):
+        prob = make_appendix_c_problem()
+        eta = 0.001
+        biases = []
+        for K in (2, 10, 50):
+            fx, _ = appendix_c_fixed_point(K, eta, eta)
+            biases.append(abs(fx - 3.3))
+        assert biases[0] < biases[1] < biases[2]
+
+
+# ------------------------------------------------------------ Proposition 2
+class TestProposition2:
+    def test_homogeneous_speedup_at_least_K(self, rng):
+        dim, m = 10, 6
+        base = make_quadratic_problem(rng, dim=dim, num_samples=50, num_agents=1)
+        # replicate one agent's data m times -> identical objectives
+        hom = jax.tree.map(
+            lambda u: jnp.broadcast_to(u, (m,) + u.shape[1:]), base.agent_data
+        )
+        xs, ys = quadratic_minimax_point(base)
+        eta, K = 5e-5, 8
+        x0 = jnp.zeros(dim)
+        met = _gap_metric(xs, ys)
+        r1 = jax.jit(make_fedgda_gt_round(base.loss, 1, eta))
+        rK = jax.jit(make_fedgda_gt_round(base.loss, K, eta))
+        (_, _), m1 = run_rounds(r1, x0, x0, hom, 1500, met)
+        (_, _), mK = run_rounds(rK, x0, x0, hom, 1500, met)
+
+        def per_round_rate(g):  # slope of log-gap on the pre-floor segment
+            g = np.asarray(g)
+            idx = np.where((g > 1e-12) & (g < 1e2))[0]
+            lo, hi = idx[0], idx[-1]
+            return (np.log(g[hi]) - np.log(g[lo])) / (hi - lo)
+
+        rate1, rateK = per_round_rate(m1["gap"]), per_round_rate(mK["gap"])
+        # homogeneous: K local steps give >= K x faster per-round decay
+        assert rateK <= rate1 * (K * 0.9)
+
+    def test_homogeneous_equals_centralized_gda(self, rng):
+        """Appendix D.4: with identical agents FedGDA-GT == centralized GDA."""
+        dim, m = 8, 4
+        base = make_quadratic_problem(rng, dim=dim, num_samples=40, num_agents=1)
+        hom = jax.tree.map(
+            lambda u: jnp.broadcast_to(u, (m,) + u.shape[1:]), base.agent_data
+        )
+        eta, K = 1e-4, 5
+        x0 = jnp.zeros(dim)
+        r_fed = jax.jit(make_fedgda_gt_round(base.loss, K, eta))
+        step = make_gda_step(base.loss, eta, eta)
+
+        def r_cent(x, y, data):  # K centralized GDA steps
+            for _ in range(K):
+                x, y = step(x, y, data)
+            return x, y
+
+        xf, yf = x0, x0
+        xc, yc = x0, x0
+        for _ in range(20):
+            xf, yf = r_fed(xf, yf, hom)
+            xc, yc = r_cent(xc, yc, base.agent_data)
+        np.testing.assert_allclose(np.asarray(xf), np.asarray(xc), rtol=1e-8)
+
+
+# -------------------------------------------------------------- Section 5.1
+class TestQuadraticExperiment:
+    def test_paper_setup_fedgda_gt_beats_local_sgda_and_gda(self, rng):
+        # paper scale (d=50, n=500, m=20, eta=1e-4) at reduced round count
+        prob = make_quadratic_problem(rng, dim=50, num_samples=500, num_agents=20)
+        xs, ys = quadratic_minimax_point(prob)
+        eta = 1e-4
+        x0 = jnp.zeros(50)
+        met = _gap_metric(xs, ys)
+        T = 1500
+        (_, _), m_gt = run_rounds(
+            jax.jit(make_fedgda_gt_round(prob.loss, 20, eta)), x0, x0,
+            prob.agent_data, T, met)
+        (_, _), m_ls = run_rounds(
+            jax.jit(make_local_sgda_round(prob.loss, 20, eta, eta)), x0, x0,
+            prob.agent_data, T, met)
+        (_, _), m_gda = run_rounds(
+            jax.jit(make_local_sgda_round(prob.loss, 1, eta, eta)), x0, x0,
+            prob.agent_data, T, met)
+        # FedGDA-GT reaches far tighter accuracy in the same rounds
+        assert m_gt["gap"][-1] < 1e-8 * m_ls["gap"][-1]
+        assert m_gt["gap"][-1] < 1e-8 * m_gda["gap"][-1]
+
+
+# -------------------------------------------------------------- Section 5.2
+class TestRobustRegressionExperiment:
+    def test_high_heterogeneity_gt_at_least_as_good(self, rng):
+        """Fig 2(c): under strong heterogeneity (alpha=20) FedGDA-GT's robust
+        loss is no worse than Local SGDA's."""
+        prob = make_robust_regression_problem(
+            rng, dim=20, num_samples=100, num_agents=10, alpha=20.0
+        )
+        # data scale grows with alpha (L ~ 2 lam_max(mean aa^T) + 1), so the
+        # stable constant stepsize must be derived from the data
+        a = prob.agent_data["a"]
+        H = 2 * jnp.einsum("mnd,mne->de", a, a) / (a.shape[0] * a.shape[1])
+        L = float(jnp.linalg.eigvalsh(H + jnp.eye(20))[-1])
+        eta, K, T = 0.1 / L, 10, 2000
+        x0 = jnp.zeros(20)
+        r_gt = jax.jit(make_fedgda_gt_round(prob.loss, K, eta, proj_y=prob.proj_y))
+        r_ls = jax.jit(
+            make_local_sgda_round(prob.loss, K, eta, eta, proj_y=prob.proj_y)
+        )
+        xg, yg = x0, jnp.zeros(20)
+        xl, yl = x0, jnp.zeros(20)
+        for _ in range(T):
+            xg, yg = r_gt(xg, yg, prob.agent_data)
+            xl, yl = r_ls(xl, yl, prob.agent_data)
+        rl_gt = float(robust_loss(prob, xg))
+        rl_ls = float(robust_loss(prob, xl))
+        assert rl_gt <= rl_ls * 1.001
+
+    def test_gt_matches_centralized_gda_local_sgda_biased(self, rng):
+        """Fig 2(a) restated as the claim that is actually seed-robust.
+
+        Eq. (14) is convex (not concave) in y, so the scalar ``robust_loss``
+        (projected ascent from y0=0) has multiple boundary local maxima and
+        its *value* at two different near-solutions is not a stable
+        reproduction criterion.  The paper's underlying claim — FedGDA-GT
+        converges to the same solution as centralized (projected) GDA while
+        Local SGDA's fixed point is biased away from it (Prop. 1) — is
+        checked directly on the iterates instead.
+        """
+        prob = make_robust_regression_problem(
+            rng, dim=20, num_samples=100, num_agents=10, alpha=1.0
+        )
+        eta, K, T = 5e-3, 10, 600
+        x0 = jnp.zeros(20)
+        r_gt = jax.jit(make_fedgda_gt_round(prob.loss, K, eta, proj_y=prob.proj_y))
+        r_ls = jax.jit(
+            make_local_sgda_round(prob.loss, K, eta, eta, proj_y=prob.proj_y)
+        )
+        r_c = jax.jit(
+            make_local_sgda_round(prob.loss, 1, eta, eta, proj_y=prob.proj_y)
+        )
+        xg, yg = x0, jnp.zeros(20)
+        xl, yl = x0, jnp.zeros(20)
+        xc, yc = x0, jnp.zeros(20)
+        for _ in range(T):
+            xg, yg = r_gt(xg, yg, prob.agent_data)
+            xl, yl = r_ls(xl, yl, prob.agent_data)
+        for _ in range(T * K):  # same gradient-evaluation budget
+            xc, yc = r_c(xc, yc, prob.agent_data)
+        d_gt = float(jnp.linalg.norm(xg - xc))
+        d_ls = float(jnp.linalg.norm(xl - xc))
+        # GT lands (essentially) on the centralized solution; SGDA does not.
+        assert d_gt < 0.2, d_gt
+        assert d_ls > 1.0, d_ls
+        assert d_gt < 0.15 * d_ls
+        # and its robust loss matches centralized GDA's to <1%
+        rl_gt = float(robust_loss(prob, xg))
+        rl_c = float(robust_loss(prob, xc))
+        assert abs(rl_gt - rl_c) / rl_c < 0.01

@@ -1,0 +1,229 @@
+"""Property-based tests (hypothesis) on the system's invariants
+(deliverable c).
+
+Invariants covered:
+  * projections: membership, idempotence, non-expansiveness
+  * tree utilities: broadcast/mean inverses, metric axioms
+  * FedGDA-GT structure: the tracking correction averages to zero; with a
+    single agent the round IS K centralized GDA steps; with homogeneous
+    agents all agents stay in lockstep
+  * Local SGDA: K=1 equals centralized GDA
+  * fixed-point algebra: the Appendix-C closed form is a fixed point of the
+    round map for any K, eta in the stable range
+  * communication accounting: positivity and the paper's orderings
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    appendix_c_fixed_point,
+    box_proj,
+    communication_bytes_per_round,
+    l2_ball_proj,
+    make_fedgda_gt_round,
+    make_gda_step,
+    make_local_sgda_round,
+    simplex_proj,
+    tree_broadcast_agents,
+    tree_mean_over_agents,
+    tree_sq_dist,
+)
+from repro.problems import make_appendix_c_problem, make_quadratic_problem
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+vec = st.integers(min_value=1, max_value=24).flatmap(
+    lambda d: st.lists(
+        st.floats(
+            -1e3, 1e3, allow_nan=False, allow_subnormal=False, width=32
+        ),
+        min_size=d,
+        max_size=d,
+    )
+)
+
+
+# ------------------------------------------------------------- projections
+class TestProjections:
+    @given(v=vec, radius=st.floats(0.1, 10.0))
+    @settings(**SETTINGS)
+    def test_l2_ball_membership_and_idempotence(self, v, radius):
+        p = l2_ball_proj(radius)
+        x = jnp.asarray(v, jnp.float32)
+        y = p(x)
+        assert float(jnp.linalg.norm(y)) <= radius * (1 + 1e-5)
+        np.testing.assert_allclose(np.asarray(p(y)), np.asarray(y), rtol=1e-6)
+
+    @given(v=vec, w=vec, radius=st.floats(0.1, 10.0))
+    @settings(**SETTINGS)
+    def test_l2_ball_nonexpansive(self, v, w, radius):
+        d = min(len(v), len(w))
+        x = jnp.asarray(v[:d], jnp.float32)
+        y = jnp.asarray(w[:d], jnp.float32)
+        p = l2_ball_proj(radius)
+        dp = float(jnp.linalg.norm(p(x) - p(y)))
+        d0 = float(jnp.linalg.norm(x - y))
+        assert dp <= d0 * (1 + 1e-5) + 1e-6
+
+    @given(v=vec, lo=st.floats(-5, 0), hi=st.floats(0.1, 5))
+    @settings(**SETTINGS)
+    def test_box_membership_idempotence(self, v, lo, hi):
+        p = box_proj(lo, hi)
+        y = p(jnp.asarray(v, jnp.float32))
+        assert float(jnp.min(y)) >= lo - 1e-6
+        assert float(jnp.max(y)) <= hi + 1e-6
+        np.testing.assert_allclose(np.asarray(p(y)), np.asarray(y))
+
+    @given(v=vec)
+    @settings(**SETTINGS)
+    def test_simplex_membership(self, v):
+        p = simplex_proj()
+        y = p(jnp.asarray(v, jnp.float64))
+        assert float(jnp.min(y)) >= -1e-9
+        np.testing.assert_allclose(float(jnp.sum(y)), 1.0, rtol=1e-6)
+        # idempotence
+        np.testing.assert_allclose(
+            np.asarray(p(y)), np.asarray(y), rtol=1e-6, atol=1e-9
+        )
+
+
+# ----------------------------------------------------------- tree utilities
+class TestTreeOps:
+    @given(v=vec, m=st.integers(1, 6))
+    @settings(**SETTINGS)
+    def test_mean_inverts_broadcast(self, v, m):
+        x = {"a": jnp.asarray(v, jnp.float32), "b": jnp.asarray([[1.0, 2.0]])}
+        xs = tree_broadcast_agents(x, m)
+        back = tree_mean_over_agents(xs)
+        for u, w in zip(jax.tree.leaves(back), jax.tree.leaves(x)):
+            np.testing.assert_allclose(np.asarray(u), np.asarray(w), rtol=1e-6)
+
+    @given(v=vec, w=vec)
+    @settings(**SETTINGS)
+    def test_sq_dist_metric_axioms(self, v, w):
+        d = min(len(v), len(w))
+        x = jnp.asarray(v[:d], jnp.float64)
+        y = jnp.asarray(w[:d], jnp.float64)
+        assert float(tree_sq_dist(x, y)) >= 0.0
+        np.testing.assert_allclose(float(tree_sq_dist(x, x)), 0.0, atol=1e-12)
+        np.testing.assert_allclose(
+            float(tree_sq_dist(x, y)), float(tree_sq_dist(y, x)), rtol=1e-10
+        )
+
+
+# --------------------------------------------------- FedGDA-GT invariants
+def _quadratic(seed, dim=6, m=4):
+    return make_quadratic_problem(
+        jax.random.PRNGKey(seed), dim=dim, num_samples=20, num_agents=m
+    )
+
+
+class TestFedGdaGtStructure:
+    @given(seed=st.integers(0, 10_000))
+    @settings(**SETTINGS)
+    def test_correction_terms_average_to_zero(self, seed):
+        """sum_i (gbar - g_i) = 0 — the defining property of gradient
+        tracking: the average local step direction equals the global one."""
+        prob = _quadratic(seed)
+        from repro.core.types import grad_xy
+
+        g = jax.vmap(grad_xy(prob.loss), in_axes=(None, None, 0))(
+            jnp.ones(6), jnp.ones(6), prob.agent_data
+        )
+        for leaf in jax.tree.leaves(g):
+            corr = jnp.mean(leaf, axis=0)[None] - leaf  # c_i per agent
+            np.testing.assert_allclose(
+                np.asarray(jnp.mean(corr, axis=0)),
+                np.zeros(leaf.shape[1:]),
+                atol=1e-8,
+            )
+
+    @given(seed=st.integers(0, 10_000), K=st.integers(1, 6))
+    @settings(max_examples=10, deadline=None)
+    def test_single_agent_reduces_to_k_gda_steps(self, seed, K):
+        prob = make_quadratic_problem(
+            jax.random.PRNGKey(seed), dim=5, num_samples=20, num_agents=1
+        )
+        eta = 1e-3
+        rnd = make_fedgda_gt_round(prob.loss, K, eta)
+        step = make_gda_step(prob.loss, eta, eta)
+        x0 = jnp.zeros(5)
+        xg, yg = rnd(x0, x0, prob.agent_data)
+        xc, yc = x0, x0
+        for _ in range(K):
+            xc, yc = step(xc, yc, prob.agent_data)
+        np.testing.assert_allclose(np.asarray(xg), np.asarray(xc), rtol=1e-8)
+        np.testing.assert_allclose(np.asarray(yg), np.asarray(yc), rtol=1e-8)
+
+    @given(seed=st.integers(0, 10_000), m=st.integers(2, 5))
+    @settings(max_examples=10, deadline=None)
+    def test_homogeneous_agents_lockstep(self, seed, m):
+        """Identical local objectives: the K local trajectories coincide, so
+        one FedGDA-GT round == K centralized GDA steps (Appendix D.4)."""
+        base = make_quadratic_problem(
+            jax.random.PRNGKey(seed), dim=5, num_samples=20, num_agents=1
+        )
+        hom = jax.tree.map(
+            lambda u: jnp.broadcast_to(u, (m,) + u.shape[1:]), base.agent_data
+        )
+        eta, K = 1e-3, 4
+        rnd = make_fedgda_gt_round(base.loss, K, eta)
+        step = make_gda_step(base.loss, eta, eta)
+        x0 = jnp.zeros(5)
+        xg, yg = rnd(x0, x0, hom)
+        xc, yc = x0, x0
+        for _ in range(K):
+            xc, yc = step(xc, yc, base.agent_data)
+        np.testing.assert_allclose(np.asarray(xg), np.asarray(xc), rtol=1e-7)
+
+    @given(seed=st.integers(0, 10_000))
+    @settings(max_examples=10, deadline=None)
+    def test_local_sgda_k1_equals_gda(self, seed):
+        prob = _quadratic(seed)
+        eta = 1e-3
+        rnd = make_local_sgda_round(prob.loss, 1, eta, eta)
+        step = make_gda_step(prob.loss, eta, eta)
+        x0 = jnp.zeros(6)
+        xr, yr = rnd(x0, x0, prob.agent_data)
+        xs, ys = step(x0, x0, prob.agent_data)
+        np.testing.assert_allclose(np.asarray(xr), np.asarray(xs), rtol=1e-9)
+        np.testing.assert_allclose(np.asarray(yr), np.asarray(ys), rtol=1e-9)
+
+
+# ----------------------------------------------------- Appendix C algebra
+class TestAppendixCFixedPoint:
+    @given(K=st.integers(1, 60), eta=st.floats(1e-4, 5e-3))
+    @settings(**SETTINGS)
+    def test_closed_form_is_fixed_point_of_round_map(self, K, eta):
+        prob = make_appendix_c_problem()
+        fx, fy = appendix_c_fixed_point(K, eta, eta)
+        rnd = make_local_sgda_round(prob.loss, K, eta, eta)
+        x1, y1 = rnd(jnp.float64(fx), jnp.float64(fy), prob.agent_data)
+        np.testing.assert_allclose(float(x1), fx, rtol=1e-9)
+        np.testing.assert_allclose(float(y1), fy, rtol=1e-9)
+
+    @given(eta=st.floats(1e-4, 0.2))
+    @settings(**SETTINGS)
+    def test_k1_fixed_point_is_minimax(self, eta):
+        fx, fy = appendix_c_fixed_point(1, eta, eta)
+        np.testing.assert_allclose(fx, 3.3, rtol=1e-9)
+        np.testing.assert_allclose(fy, 3.3, rtol=1e-9)
+
+
+# ---------------------------------------------------- comm accounting
+class TestCommAccounting:
+    @given(p=st.integers(1, 4096), q=st.integers(1, 256), K=st.integers(1, 64))
+    @settings(**SETTINGS)
+    def test_orderings(self, p, q, K):
+        x = jnp.zeros((p,), jnp.float32)
+        y = jnp.zeros((q,), jnp.float32)
+        ls = communication_bytes_per_round(x, y, "local_sgda", K)
+        gt = communication_bytes_per_round(x, y, "fedgda_gt", K)
+        gda = communication_bytes_per_round(x, y, "gda", K)
+        assert 0 < ls < gt  # GT pays extra for the tracked gradient
+        assert gt == 2 * ls  # exactly 2x (paper's cost model)
+        if K > 2:
+            assert gda > gt  # sync GDA communicates every inner step
