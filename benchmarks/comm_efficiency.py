@@ -2,9 +2,13 @@
 
 For the Section-5.1 quadratic game: rounds and total exchanged bytes
 (star-topology cost model, Section 3) to reach optimality gap <= eps for
-centralized GDA (communicates every step), Local SGDA and FedGDA-GT.
-FedGDA-GT pays 2x Local SGDA per round but reaches eps in O(log 1/eps)
-rounds; Local SGDA never reaches tight eps at all (bias floor)."""
+centralized GDA (communicates every step), Local SGDA, FedGDA-GT, and the
+two scenario strategies (client sampling, sparsified corrections with
+error feedback).  Per-round payloads are strategy-derived
+(`CommStrategy.bytes_per_round`): FedGDA-GT pays 2x Local SGDA per round
+but reaches eps in O(log 1/eps) rounds; Local SGDA never reaches tight
+eps at all (bias floor); the compressed/partial variants land in between
+— cheaper rounds, noise-floored accuracy."""
 from __future__ import annotations
 
 import math
@@ -13,14 +17,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    communication_bytes_per_round,
-    make_fedgda_gt_round,
-    make_local_sgda_round,
-    run_rounds,
-    tree_sq_dist,
+from repro.core import make_round, run_strategy_rounds, tree_sq_dist
+from repro.fed import (
+    CompressedGT,
+    FullSync,
+    GradientTracking,
+    LocalOnly,
+    PartialParticipation,
+    comm_table,
 )
-from repro.fed import comm_table
 from repro.problems import make_quadratic_problem, quadratic_minimax_point
 
 from .common import emit
@@ -40,28 +45,36 @@ def run(rows=None):
         return {"gap": tree_sq_dist(x, xs) + tree_sq_dist(y, ys)}
 
     x0 = jnp.zeros(50)
+    m = jax.tree.leaves(prob.agent_data)[0].shape[0]
     runs = {
-        "gda": make_local_sgda_round(prob.loss, 1, ETA, ETA),
-        "local_sgda": make_local_sgda_round(prob.loss, K, ETA, ETA),
-        "fedgda_gt": make_fedgda_gt_round(prob.loss, K, ETA),
+        "gda": (FullSync(), 1),
+        "local_sgda": (LocalOnly(), K),
+        "fedgda_gt": (GradientTracking(), K),
+        "partial_gt_50": (PartialParticipation(participation=0.5, seed=0), K),
+        "compressed_gt_10": (CompressedGT(compression_ratio=0.1), K),
     }
     rounds_to_eps = {}
-    for name, rnd in runs.items():
+    strategies = {}
+    for name, (strategy, k) in runs.items():
         # give GDA the same gradient-step budget: T*K single-step rounds
         T_eff = T * K if name == "gda" else T
-        (_, _), m = run_rounds(
-            jax.jit(rnd), x0, x0, prob.agent_data, T_eff, metric
+        # explicit_state works for stateless strategies too (state is {})
+        rnd = jax.jit(make_round(prob.loss, strategy, k, ETA, explicit_state=True))
+        (_, _, _), mtr = run_strategy_rounds(
+            rnd, x0, x0, prob.agent_data, T_eff, strategy.init_state(x0, x0, m), metric
         )
-        gaps = np.asarray(m["gap"])
+        gaps = np.asarray(mtr["gap"])
         hit = np.nonzero(gaps <= EPS)[0]
-        rounds_to_eps[name] = float(hit[0]) if hit.size else math.inf
+        rounds_to_eps[strategy] = float(hit[0]) if hit.size else math.inf
+        strategies[strategy] = name
 
     table = comm_table(x0, x0, K, rounds_to_eps)
     rows = [] if rows is None else rows
-    for algo, entry in table.items():
+    for strategy, name in strategies.items():
+        entry = table[strategy.name]
         rows.append(
             {
-                "algorithm": algo,
+                "algorithm": name,
                 "bytes_per_round": int(entry["bytes_per_round"]),
                 f"rounds_to_{EPS:g}": entry["rounds_to_eps"],
                 "total_bytes": entry["total_bytes"],

@@ -48,6 +48,11 @@ class ModelConfig:
     # distribution
     fed_mode: str = "A"  # A: agents over (pod,data); B: agents over (pod,)
     correction_dtype: Optional[str] = None  # e.g. "float8_e4m3fn"
+    # communication strategy knobs (repro.fed.strategies): fraction of
+    # clients sampled per round and kept fraction of sparsified tracking
+    # corrections; 1.0 = plain FedGDA-GT for both
+    participation: float = 1.0
+    compression_ratio: float = 1.0
     # shape support
     supports_decode: bool = True
     supports_long_context: bool = False

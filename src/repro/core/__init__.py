@@ -9,9 +9,18 @@ from .types import (
     tree_sq_dist,
 )
 from .projections import l2_ball_proj, box_proj, simplex_proj
-from .gda import make_gda_step, run_rounds
-from .local_sgda import make_local_sgda_round, make_scheduled_local_sgda_round
-from .fedgda_gt import make_fedgda_gt_round, communication_bytes_per_round
+from .engine import default_update, make_round, run_strategy_rounds
+from .gda import make_gda_step, make_gda_step_reference, run_rounds
+from .local_sgda import (
+    make_local_sgda_round,
+    make_local_sgda_round_reference,
+    make_scheduled_local_sgda_round,
+)
+from .fedgda_gt import (
+    communication_bytes_per_round,
+    make_fedgda_gt_round,
+    make_fedgda_gt_round_reference,
+)
 from .fixed_point import (
     APPENDIX_C_MINIMAX_POINT,
     appendix_c_fixed_point,
@@ -34,11 +43,17 @@ __all__ = [
     "l2_ball_proj",
     "box_proj",
     "simplex_proj",
+    "default_update",
+    "make_round",
+    "run_strategy_rounds",
     "make_gda_step",
+    "make_gda_step_reference",
     "run_rounds",
     "make_local_sgda_round",
+    "make_local_sgda_round_reference",
     "make_scheduled_local_sgda_round",
     "make_fedgda_gt_round",
+    "make_fedgda_gt_round_reference",
     "communication_bytes_per_round",
     "APPENDIX_C_MINIMAX_POINT",
     "appendix_c_fixed_point",

@@ -1,0 +1,240 @@
+"""Unified federated minimax round engine.
+
+`make_round(loss, strategy, ...)` emits one communication round of the
+generic federated descent-ascent template
+
+  1. server broadcasts (x^t, y^t); a strategy may sample participants
+  2. (if the strategy corrects drift) agents exchange gradients once and
+     form the tracking correction c_i = gbar - g_i, possibly transformed
+     (reduced dtype, sparsification, error feedback)
+  3. K local GDA steps, each adding c_i to the local gradient
+  4. server aggregates (weighted by participation) and projects
+
+The legacy constructors — `make_gda_step`, `make_local_sgda_round`,
+`make_fedgda_gt_round` — are thin wrappers over this engine with the
+`FullSync` / `LocalOnly` / `GradientTracking` strategies; the engine
+reproduces their iterate sequences exactly (bitwise for gradient
+tracking — see tests/test_engine_parity.py).  Strategies are duck-typed
+(`repro.fed.strategies.CommStrategy` is the reference protocol), which
+keeps this module free of `repro.fed` imports.
+
+Fused k=0 (§Perf, exact): when the correction is exact, the first local
+gradient is evaluated at the same point as the tracking gradient, so
+g_i + c_i == gbar and the step reduces to z <- z -/+ eta * gbar, saving
+one full gradient evaluation per round.  Strategies whose corrections are
+inexact (sparsified) report `exact_correction = False` and take the
+literal K-step schedule instead.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .types import (
+    LossFn,
+    ProjFn,
+    Pytree,
+    grad_xy,
+    identity_proj,
+    tree_broadcast_agents,
+)
+
+
+def default_update(z: Pytree, g: Pytree, c: Pytree, eta, sign: float) -> Pytree:
+    """z <- z + sign*eta*(g + c); sign=-1 descent (x), +1 ascent (y)."""
+    return jax.tree.map(
+        lambda u, gv, cv: u + sign * eta * (gv + cv.astype(gv.dtype)), z, g, c
+    )
+
+
+def _agent_mean(tree: Pytree, weights) -> Pytree:
+    """Uniform mean over the agent axis (weights None — the bitwise-pinned
+    legacy path) or a weighted sum with participation weights."""
+    if weights is None:
+        return jax.tree.map(lambda u: jnp.mean(u, axis=0), tree)
+    return jax.tree.map(
+        lambda u: jnp.tensordot(weights.astype(u.dtype), u, axes=1), tree
+    )
+
+
+def _anchor_step(zs: Pytree, gbar: Pytree, eta, sign: float) -> Pytree:
+    """The fused k=0 local step: every agent moves by the global gradient."""
+    return jax.tree.map(
+        lambda u, gb: u + sign * eta * gb[None].astype(u.dtype), zs, gbar
+    )
+
+
+def make_round(
+    loss: LossFn,
+    strategy,
+    num_local_steps: int,
+    eta_x: float,
+    eta_y: Optional[float] = None,
+    *,
+    proj_x: ProjFn = identity_proj,
+    proj_y: ProjFn = identity_proj,
+    update_fn: Callable = default_update,
+    constrain_agents: Optional[Callable] = None,
+    explicit_state: Optional[bool] = None,
+) -> Callable:
+    """Build one communication round for `strategy`.
+
+    Returns `round(x, y, agent_data) -> (x, y)` for stateless strategies.
+    Stateful strategies (client sampling RNG, error-feedback buffers)
+    return `round(x, y, agent_data, state) -> (x, y, state)` with the
+    initial state from `strategy.init_state(x, y, m)`; pass
+    `explicit_state=True` to force that signature for stateless
+    strategies too (useful when mixing strategies under one scan).
+    """
+    if eta_y is None:
+        eta_y = eta_x
+    stateful = bool(getattr(strategy, "stateful", False))
+    if explicit_state is None:
+        explicit_state = stateful
+    if stateful and not explicit_state:
+        raise ValueError(
+            f"strategy {strategy!r} carries cross-round state; build with "
+            "explicit_state=True and thread `state` through the rounds"
+        )
+    gfn = grad_xy(loss)
+
+    if getattr(strategy, "sync_every_step", False):
+        # FullSync: K communicated steps, each a centralized GDA update
+        vg = jax.vmap(gfn, in_axes=(None, None, 0))
+
+        def gda_step(x, y, agent_data):
+            g = vg(x, y, agent_data)
+            gx = jax.tree.map(lambda u: jnp.mean(u, axis=0), g.gx)
+            gy = jax.tree.map(lambda u: jnp.mean(u, axis=0), g.gy)
+            x1 = proj_x(jax.tree.map(lambda u, v: u - eta_x * v, x, gx))
+            y1 = proj_y(jax.tree.map(lambda u, v: u + eta_y * v, y, gy))
+            return x1, y1
+
+        def core(x, y, agent_data, state):
+            if num_local_steps == 1:
+                x, y = gda_step(x, y, agent_data)
+            else:
+                (x, y), _ = jax.lax.scan(
+                    lambda c, _: (gda_step(*c, agent_data), None),
+                    (x, y),
+                    None,
+                    length=num_local_steps,
+                )
+            return x, y, state
+
+    else:
+        vgrad = jax.vmap(gfn, in_axes=(0, 0, 0))
+        use_corr = bool(getattr(strategy, "use_correction", False))
+        cdt = getattr(strategy, "correction_dtype", None)
+
+        def core(x, y, agent_data, state):
+            m = jax.tree.leaves(agent_data)[0].shape[0]
+            weights, state = strategy.sample_weights(state, m)
+            xs = tree_broadcast_agents(x, m)
+            ys = tree_broadcast_agents(y, m)
+            if constrain_agents is not None:
+                xs, ys = constrain_agents(xs, ys)
+
+            fused = False
+            if use_corr and m > 1:
+                # one gradient exchange at the anchor point
+                g0 = vgrad(xs, ys, agent_data)
+                gbar_x = _agent_mean(g0.gx, weights)
+                gbar_y = _agent_mean(g0.gy, weights)
+
+                def corr(gbar, gi):
+                    c = gbar[None] - gi
+                    if cdt is not None:
+                        c = c.astype(cdt)
+                    return c
+
+                cx = jax.tree.map(corr, gbar_x, g0.gx)
+                cy = jax.tree.map(corr, gbar_y, g0.gy)
+                cx, cy, state = strategy.transform_correction(cx, cy, state)
+                fused = bool(strategy.exact_correction)
+            elif use_corr:
+                # m == 1: the correction is identically zero and elided
+                cx = jax.tree.map(jnp.zeros_like, xs)
+                cy = jax.tree.map(jnp.zeros_like, ys)
+
+            if use_corr:
+
+                def inner(carry, _):
+                    xs, ys = carry
+                    g = vgrad(xs, ys, agent_data)
+                    xs = update_fn(xs, g.gx, cx, eta_x, -1.0)
+                    ys = update_fn(ys, g.gy, cy, eta_y, +1.0)
+                    if constrain_agents is not None:
+                        # re-anchor the scan carry's sharding every step
+                        xs, ys = constrain_agents(xs, ys)
+                    return (xs, ys), None
+
+            else:
+
+                def inner(carry, _):
+                    xs, ys = carry
+                    g = vgrad(xs, ys, agent_data)
+                    xs = jax.tree.map(lambda u, v: u - eta_x * v, xs, g.gx)
+                    ys = jax.tree.map(lambda u, v: u + eta_y * v, ys, g.gy)
+                    return (xs, ys), None
+
+            inner_steps = num_local_steps
+            if fused:
+                xs = _anchor_step(xs, gbar_x, eta_x, -1.0)
+                ys = _anchor_step(ys, gbar_y, eta_y, +1.0)
+                if constrain_agents is not None:
+                    xs, ys = constrain_agents(xs, ys)
+                inner_steps -= 1
+            if inner_steps > 0:
+                (xs, ys), _ = jax.lax.scan(
+                    inner, (xs, ys), None, length=inner_steps
+                )
+            x1 = proj_x(_agent_mean(xs, weights))
+            y1 = proj_y(_agent_mean(ys, weights))
+            return x1, y1, state
+
+    if explicit_state:
+        return core
+
+    def round(x, y, agent_data):
+        x1, y1, _ = core(x, y, agent_data, {})
+        return x1, y1
+
+    return round
+
+
+def run_strategy_rounds(
+    round_fn: Callable,
+    x0: Pytree,
+    y0: Pytree,
+    agent_data: Pytree,
+    num_rounds: int,
+    state0: Optional[Pytree] = None,
+    metric_fn: Optional[Callable] = None,
+):
+    """Scan a stateful round (built with `explicit_state=True`) for
+    `num_rounds`, threading the strategy state through the carry.
+
+    Returns ((x, y, state), metrics) with metrics evaluated on the input
+    of each round plus once at the end — the stateful counterpart of
+    `repro.core.gda.run_rounds`."""
+    if state0 is None:
+        state0 = {}
+
+    def body(carry, _):
+        x, y, s = carry
+        meas = metric_fn(x, y) if metric_fn is not None else None
+        x1, y1, s1 = round_fn(x, y, agent_data, s)
+        return (x1, y1, s1), meas
+
+    (x, y, s), metrics = jax.lax.scan(
+        body, (x0, y0, state0), None, length=num_rounds
+    )
+    if metric_fn is not None:
+        final = metric_fn(x, y)
+        metrics = jax.tree.map(
+            lambda hist, last: jnp.concatenate([hist, last[None]]), metrics, final
+        )
+    return (x, y, s), metrics

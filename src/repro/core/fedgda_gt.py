@@ -25,6 +25,8 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from .engine import default_update as _default_update
+from .engine import make_round
 from .types import (
     LossFn,
     ProjFn,
@@ -37,13 +39,6 @@ from .types import (
 )
 
 
-def _default_update(z: Pytree, g: Pytree, c: Pytree, eta, sign: float) -> Pytree:
-    """z <- z + sign*eta*(g + c); sign=-1 descent (x), +1 ascent (y)."""
-    return jax.tree.map(
-        lambda u, gv, cv: u + sign * eta * (gv + cv.astype(gv.dtype)), z, g, c
-    )
-
-
 def make_fedgda_gt_round(
     loss: LossFn,
     num_local_steps: int,
@@ -54,12 +49,42 @@ def make_fedgda_gt_round(
     update_fn: Callable = _default_update,
     constrain_agents: Optional[Callable] = None,
 ) -> Callable:
-    """Returns round(x, y, agent_data) -> (x, y) implementing Algorithm 2.
+    """Returns round(x, y, agent_data) -> (x, y) implementing Algorithm 2 —
+    a `GradientTracking` round of the unified engine (bitwise-identical
+    iterates to the pre-engine implementation; tests/test_engine_parity.py).
 
     agent_data leaves carry a leading agent axis of size m.  When m == 1 the
     correction is identically zero and is elided (the algorithm provably
     reduces to centralized GDA — Appendix D.4 intuition).
     """
+    from ..fed.strategies import GradientTracking
+
+    return make_round(
+        loss,
+        GradientTracking(correction_dtype=correction_dtype),
+        num_local_steps,
+        eta,
+        eta,
+        proj_x=proj_x,
+        proj_y=proj_y,
+        update_fn=update_fn,
+        constrain_agents=constrain_agents,
+    )
+
+
+def make_fedgda_gt_round_reference(
+    loss: LossFn,
+    num_local_steps: int,
+    eta: float,
+    proj_x: ProjFn = identity_proj,
+    proj_y: ProjFn = identity_proj,
+    correction_dtype=None,
+    update_fn: Callable = _default_update,
+    constrain_agents: Optional[Callable] = None,
+) -> Callable:
+    """Pre-engine implementation, kept verbatim as the differential-test
+    oracle: the engine's GradientTracking path must reproduce its iterates
+    BITWISE (tests/test_engine_parity.py)."""
     gfn = grad_xy(loss)
     vgrad = jax.vmap(gfn, in_axes=(0, 0, 0))
 
@@ -131,21 +156,16 @@ def make_fedgda_gt_round(
 
 
 def communication_bytes_per_round(
-    x: Pytree, y: Pytree, algorithm: str, num_local_steps: int
+    x: Pytree, y: Pytree, algorithm, num_local_steps: int
 ) -> int:
     """Analytic bytes exchanged with the server per communication round.
 
     Counted as payload bytes a single agent up/downloads (the star-topology
     cost model of the paper; the SPMD all-reduce realization is measured
-    separately from HLO in the dry-run).
+    separately from HLO in the dry-run).  `algorithm` is a legacy name
+    ("gda" | "local_sgda" | "fedgda_gt" | ...) or any `CommStrategy`; the
+    per-strategy payload models live in `repro.fed.strategies`.
     """
-    p_bytes = sum(u.size * u.dtype.itemsize for u in jax.tree.leaves(x))
-    q_bytes = sum(u.size * u.dtype.itemsize for u in jax.tree.leaves(y))
-    z = p_bytes + q_bytes
-    if algorithm == "local_sgda":
-        return 2 * z  # up: local model; down: averaged model
-    if algorithm == "fedgda_gt":
-        return 4 * z  # up: grad + local model; down: global grad + avg model
-    if algorithm == "gda":
-        return 2 * z * num_local_steps  # communicates every step
-    raise ValueError(f"unknown algorithm {algorithm!r}")
+    from ..fed.strategies import resolve_strategy
+
+    return resolve_strategy(algorithm).bytes_per_round(x, y, num_local_steps)

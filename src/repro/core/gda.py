@@ -8,12 +8,12 @@ with f(x,y) = (1/m) sum_i f_i(x,y).  Equivalent to Local SGDA with K=1
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
+from .engine import make_round
 from .types import (
     LossFn,
     ProjFn,
@@ -30,7 +30,24 @@ def make_gda_step(
     proj_x: ProjFn = identity_proj,
     proj_y: ProjFn = identity_proj,
 ) -> Callable:
-    """One centralized GDA step over agent-stacked data."""
+    """One centralized GDA step over agent-stacked data — a one-step
+    `FullSync` round of the unified engine."""
+    from ..fed.strategies import FullSync
+
+    return make_round(
+        loss, FullSync(), 1, eta_x, eta_y, proj_x=proj_x, proj_y=proj_y
+    )
+
+
+def make_gda_step_reference(
+    loss: LossFn,
+    eta_x: float,
+    eta_y: float,
+    proj_x: ProjFn = identity_proj,
+    proj_y: ProjFn = identity_proj,
+) -> Callable:
+    """Pre-engine implementation, kept verbatim as the differential-test
+    oracle for the engine's FullSync path (tests/test_engine_parity.py)."""
     gfn = grad_xy(loss)
 
     def step(x: Pytree, y: Pytree, agent_data: Pytree):

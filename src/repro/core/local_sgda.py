@@ -15,6 +15,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from .engine import make_round
 from .types import (
     LossFn,
     ProjFn,
@@ -35,7 +36,33 @@ def make_local_sgda_round(
     proj_y: ProjFn = identity_proj,
     constrain_agents=None,
 ) -> Callable:
-    """Returns round(x, y, agent_data) -> (x, y) implementing Algorithm 1."""
+    """Returns round(x, y, agent_data) -> (x, y) implementing Algorithm 1 —
+    a `LocalOnly` round of the unified engine."""
+    from ..fed.strategies import LocalOnly
+
+    return make_round(
+        loss,
+        LocalOnly(),
+        num_local_steps,
+        eta_x,
+        eta_y,
+        proj_x=proj_x,
+        proj_y=proj_y,
+        constrain_agents=constrain_agents,
+    )
+
+
+def make_local_sgda_round_reference(
+    loss: LossFn,
+    num_local_steps: int,
+    eta_x: float,
+    eta_y: float,
+    proj_x: ProjFn = identity_proj,
+    proj_y: ProjFn = identity_proj,
+    constrain_agents=None,
+) -> Callable:
+    """Pre-engine implementation, kept verbatim as the differential-test
+    oracle for the engine's LocalOnly path (tests/test_engine_parity.py)."""
     gfn = grad_xy(loss)
     vgrad = jax.vmap(gfn, in_axes=(0, 0, 0))
 

@@ -1,4 +1,24 @@
 from .runtime import FederatedRunner, RoundStats
 from .comm import comm_table
+from .strategies import (
+    CommStrategy,
+    CompressedGT,
+    FullSync,
+    GradientTracking,
+    LocalOnly,
+    PartialParticipation,
+    resolve_strategy,
+)
 
-__all__ = ["FederatedRunner", "RoundStats", "comm_table"]
+__all__ = [
+    "FederatedRunner",
+    "RoundStats",
+    "comm_table",
+    "CommStrategy",
+    "CompressedGT",
+    "FullSync",
+    "GradientTracking",
+    "LocalOnly",
+    "PartialParticipation",
+    "resolve_strategy",
+]

@@ -3,7 +3,9 @@
 Bytes exchanged between ONE agent and the server to reach a target accuracy:
   rounds(eps) x bytes/round.  FedGDA-GT pays 2x Local SGDA per round but needs
   O(log 1/eps) rounds instead of O(1/eps) — this table quantifies the paper's
-  headline claim.
+  headline claim.  Per-round payloads are strategy-derived
+  (`CommStrategy.bytes_per_round`), so compressed / partially-participating
+  variants are priced by the same table.
 """
 from __future__ import annotations
 
@@ -12,22 +14,28 @@ from typing import Any, Dict
 
 import jax
 
-from ..core.fedgda_gt import communication_bytes_per_round
+from .strategies import CommStrategy, resolve_strategy
 
 Pytree = Any
 
 
 def comm_table(
-    x: Pytree, y: Pytree, num_local_steps: int, rounds_to_eps: Dict[str, float]
+    x: Pytree, y: Pytree, num_local_steps: int, rounds_to_eps: Dict
 ) -> Dict[str, Dict[str, float]]:
     """rounds_to_eps: measured rounds to reach the target per algorithm
-    (math.inf if never reached).  Returns per-algorithm bytes/round and
-    total bytes to target."""
+    (math.inf if never reached), keyed by legacy algorithm name or by a
+    `CommStrategy` instance.  Returns per-algorithm bytes/round and total
+    bytes to target, keyed by name."""
     out = {}
     for algo, rounds in rounds_to_eps.items():
-        per_round = communication_bytes_per_round(x, y, algo, num_local_steps)
+        strategy = resolve_strategy(algo)
+        per_round = strategy.bytes_per_round(x, y, num_local_steps)
         total = per_round * rounds if math.isfinite(rounds) else math.inf
-        out[algo] = {
+        name = algo if isinstance(algo, str) else strategy.name
+        if name in out:
+            # same strategy class, different hyperparameters: keep both rows
+            name = f"{name}#{sum(1 for k in out if k.split('#')[0] == name)}"
+        out[name] = {
             "bytes_per_round": float(per_round),
             "rounds_to_eps": float(rounds),
             "total_bytes": float(total),

@@ -1,8 +1,12 @@
 """Federated round orchestration with metric logging and checkpointing.
 
-`FederatedRunner` drives any round function (FedGDA-GT, Local SGDA, GDA)
-produced by `repro.core`, records per-round metrics on the host, and
-periodically checkpoints — the single-host counterpart of `repro.launch.train`.
+`FederatedRunner` drives any round function produced by `repro.core` —
+legacy constructors or the unified engine (`make_round`) with any
+`CommStrategy` — records per-round metrics on the host, and periodically
+checkpoints; the single-host counterpart of `repro.launch.train`.
+Stateful strategies (client-sampling RNG, error-feedback buffers) have
+their state initialized lazily on the first round and threaded across
+rounds; build via `FederatedRunner.from_strategy` for that path.
 """
 from __future__ import annotations
 
@@ -33,18 +37,85 @@ class FederatedRunner:
         metric_fn: Optional[Callable] = None,
         checkpoint_dir: Optional[str] = None,
         checkpoint_every: int = 0,
+        strategy=None,
     ):
         self._round = jax.jit(round_fn)
         self._agent_data = agent_data
         self._metric_fn = jax.jit(metric_fn) if metric_fn else None
         self._ckpt_dir = checkpoint_dir
         self._ckpt_every = checkpoint_every
+        # non-None strategy with state => round_fn was built with
+        # explicit_state=True and is called as round(x, y, data, state)
+        self._strategy = strategy
+        self._state: Optional[Pytree] = None
         self.history: List[RoundStats] = []
 
-    def run(self, x: Pytree, y: Pytree, num_rounds: int, log_every: int = 0):
+    @classmethod
+    def from_strategy(
+        cls,
+        loss: Callable,
+        strategy,
+        agent_data: Pytree,
+        num_local_steps: int,
+        eta_x: float,
+        eta_y: Optional[float] = None,
+        *,
+        metric_fn: Optional[Callable] = None,
+        checkpoint_dir: Optional[str] = None,
+        checkpoint_every: int = 0,
+        **round_kwargs,
+    ) -> "FederatedRunner":
+        """Build the round for `strategy` (name or CommStrategy) via the
+        unified engine and wrap it in a runner."""
+        from ..core.engine import make_round
+        from .strategies import resolve_strategy
+
+        strategy = resolve_strategy(strategy)
+        rnd = make_round(
+            loss,
+            strategy,
+            num_local_steps,
+            eta_x,
+            eta_y,
+            explicit_state=strategy.stateful,
+            **round_kwargs,
+        )
+        return cls(
+            rnd,
+            agent_data,
+            metric_fn=metric_fn,
+            checkpoint_dir=checkpoint_dir,
+            checkpoint_every=checkpoint_every,
+            strategy=strategy,
+        )
+
+    @property
+    def _stateful(self) -> bool:
+        return self._strategy is not None and getattr(
+            self._strategy, "stateful", False
+        )
+
+    def run(
+        self,
+        x: Pytree,
+        y: Pytree,
+        num_rounds: int,
+        log_every: int = 0,
+        state: Optional[Pytree] = None,
+    ):
+        if state is not None:  # resume from a checkpointed strategy_state
+            self._state = state
+        if self._stateful and self._state is None:
+            m = jax.tree.leaves(self._agent_data)[0].shape[0]
+            self._state = self._strategy.init_state(x, y, m)
         for t in range(num_rounds):
             t0 = time.perf_counter()
-            x, y = self._round(x, y, self._agent_data)
+            if self._stateful:
+                x, y, self._state = self._round(
+                    x, y, self._agent_data, self._state
+                )
+            else:
+                x, y = self._round(x, y, self._agent_data)
             metrics = {}
             if self._metric_fn is not None:
                 metrics = {
@@ -61,7 +132,12 @@ class FederatedRunner:
                 and self._ckpt_every
                 and (t + 1) % self._ckpt_every == 0
             ):
-                save_checkpoint(self._ckpt_dir, t + 1, {"x": x, "y": y})
+                payload = {"x": x, "y": y}
+                if self._state is not None:
+                    # resuming without this replays RNG draws / zeroes the
+                    # error-feedback buffers
+                    payload["strategy_state"] = self._state
+                save_checkpoint(self._ckpt_dir, t + 1, payload)
         return x, y
 
     def metric_series(self, name: str) -> np.ndarray:

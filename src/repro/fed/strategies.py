@@ -1,0 +1,345 @@
+"""Pluggable communication strategies for the unified round engine.
+
+The paper's FedGDA-GT (Algorithm 2) is one point in a family of federated
+descent-ascent rounds that differ only along one axis: WHAT the agents
+communicate each round and HOW local drift is corrected (cf. Sharma et al.
+2022; Yang et al., SAGDA, 2022).  A `CommStrategy` captures that axis as
+data; `repro.core.engine.make_round` consumes it and emits a round
+function.  The engine reads only the hook protocol below, so strategies
+and engine stay import-decoupled (strategies -> core.types only).
+
+Protocol consumed by the engine (all trace-time unless noted):
+  sync_every_step    aggregate after EVERY local step (centralized GDA)
+  use_correction     add a gradient-tracking correction to local steps
+  exact_correction   correction cancels exactly at the anchor point, so
+                     the fused-k0 trick applies (saves one grad eval)
+  correction_dtype   optional reduced storage dtype for the correction
+  stateful           round carries persistent cross-round state
+  init_state(x,y,m)  build that state (RNG keys, error-feedback buffers)
+  sample_weights(state, m) -> (weights | None, state)   [traced]
+  transform_correction(cx, cy, state) -> (cx, cy, state) [traced]
+  bytes_per_round(x, y, K)  analytic star-topology payload per agent
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.types import Pytree
+
+Weights = Optional[jax.Array]
+State = dict
+
+
+def _payload_bytes(tree: Pytree) -> int:
+    """Dense payload bytes of one model copy (works on arrays and
+    ShapeDtypeStructs alike)."""
+    return sum(u.size * u.dtype.itemsize for u in jax.tree.leaves(tree))
+
+
+def _sparse_payload_bytes(tree: Pytree, ratio: float, index_bytes: int = 4) -> int:
+    """Bytes for a `ratio`-sparsified copy of `tree`: kept values plus an
+    integer index per kept value, never worse than sending densely."""
+    total = 0
+    for u in jax.tree.leaves(tree):
+        dense = u.size * u.dtype.itemsize
+        k = max(1, math.ceil(ratio * u.size))
+        total += min(dense, k * (u.dtype.itemsize + index_bytes))
+    return total
+
+
+@dataclasses.dataclass(frozen=True)
+class CommStrategy:
+    """Base strategy: hook defaults shared by all concrete strategies."""
+
+    # trace-time flags the engine dispatches on (class attributes, not
+    # dataclass fields — concrete strategies override as needed)
+    name = "base"
+    sync_every_step = False
+    use_correction = False
+    correction_dtype: Any = None
+
+    @property
+    def exact_correction(self) -> bool:
+        return True
+
+    @property
+    def stateful(self) -> bool:
+        return False
+
+    def init_state(self, x: Pytree, y: Pytree, m: int) -> State:
+        return {}
+
+    def sample_weights(self, state: State, m: int) -> Tuple[Weights, State]:
+        """None means exact uniform averaging over all m agents (the
+        bitwise-pinned legacy path); otherwise a length-m weight vector
+        with sum(w) == 1 used for both gbar and the final aggregate."""
+        return None, state
+
+    def transform_correction(
+        self, cx: Pytree, cy: Pytree, state: State
+    ) -> Tuple[Pytree, Pytree, State]:
+        return cx, cy, state
+
+    def bytes_per_round(self, x: Pytree, y: Pytree, num_local_steps: int) -> int:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class FullSync(CommStrategy):
+    """Centralized GDA: agents exchange gradients EVERY local step, so one
+    'round' of K local steps costs K model up/downloads (paper Section 3.1,
+    the K=1-equivalent baseline)."""
+
+    name = "full_sync"
+    sync_every_step = True
+
+    def bytes_per_round(self, x, y, num_local_steps):
+        return 2 * _payload_bytes((x, y)) * num_local_steps
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalOnly(CommStrategy):
+    """Local SGDA (Deng & Mahdavi 2021): K uncorrected local steps, then
+    one model up/download.  Cheap but biased for K >= 2 (Proposition 1)."""
+
+    name = "local_only"
+
+    def bytes_per_round(self, x, y, num_local_steps):
+        return 2 * _payload_bytes((x, y))
+
+
+@dataclasses.dataclass(frozen=True)
+class GradientTracking(CommStrategy):
+    """FedGDA-GT (Algorithm 2): one gradient exchange per round buys the
+    tracking correction c_i = gbar - g_i; linear convergence to the exact
+    minimax point (Theorem 1).  `correction_dtype` optionally stores c_i
+    reduced (e.g. float8_e4m3fn) to cut the +1-param-copy memory cost."""
+
+    correction_dtype: Any = None
+    name = "gradient_tracking"
+    use_correction = True
+
+    def bytes_per_round(self, x, y, num_local_steps):
+        # up: grad + local model; down: global grad + averaged model
+        return 4 * _payload_bytes((x, y))
+
+
+@dataclasses.dataclass(frozen=True)
+class PartialParticipation(GradientTracking):
+    """Gradient tracking with client sampling: each round a uniform subset
+    of S = max(1, round(participation*m)) agents participates; gbar and
+    the aggregate are plain means over the sampled set (unbiased for the
+    global mean under uniform sampling without replacement).
+
+    participation >= 1 is the identity configuration: sampling is elided
+    entirely and the round is EXACTLY GradientTracking."""
+
+    participation: float = 0.5
+    seed: int = 0
+    name = "partial_participation"
+
+    @property
+    def stateful(self) -> bool:
+        return self.participation < 1.0
+
+    def init_state(self, x, y, m):
+        if not self.stateful:
+            return {}
+        return {"key": jax.random.PRNGKey(self.seed)}
+
+    def sample_weights(self, state, m):
+        if not self.stateful:
+            return None, state
+        S = max(1, int(round(self.participation * m)))
+        if S >= m:
+            return None, state
+        state = dict(state)
+        key, sub = jax.random.split(state["key"])
+        state["key"] = key
+        sel = jax.random.permutation(sub, m)[:S]
+        w = jnp.zeros((m,)).at[sel].set(1.0 / S)
+        return w, state
+
+    def bytes_per_round(self, x, y, num_local_steps):
+        # expected per-agent payload: only sampled agents communicate
+        return int(round(self.participation * 4 * _payload_bytes((x, y))))
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressedGT(CommStrategy):
+    """Gradient tracking with top-k / random-k sparsified corrections and
+    (optional) error feedback.
+
+    Each round the exact correction c_i = gbar - g_i is sparsified to a
+    `compression_ratio` fraction of its entries before driving the local
+    steps; what compression drops is accumulated in a per-agent feedback
+    buffer e_i and re-injected next round (c_i + e_i is compressed, the
+    residual becomes the new e_i) so the bias is compensated over time.
+
+    compression_ratio >= 1 is the identity configuration: compression is
+    elided and the round is EXACTLY GradientTracking.  Ratios < 1 void
+    the anchor-point cancellation, so the fused-k0 trick is disabled."""
+
+    compression_ratio: float = 0.1
+    mode: str = "topk"  # "topk" | "randk"
+    error_feedback: bool = True
+    seed: int = 0
+    name = "compressed_gt"
+    use_correction = True
+
+    def __post_init__(self):
+        if self.mode not in ("topk", "randk"):
+            raise ValueError(f"unknown compression mode {self.mode!r}")
+
+    @property
+    def exact_correction(self) -> bool:
+        return self.compression_ratio >= 1.0
+
+    @property
+    def stateful(self) -> bool:
+        return self.compression_ratio < 1.0 and (
+            self.error_feedback or self.mode == "randk"
+        )
+
+    def init_state(self, x, y, m):
+        if not self.stateful:
+            return {}
+        state: State = {}
+        if self.error_feedback:
+            # buffers live in the correction dtype (the engine casts the
+            # correction before transform_correction, so residuals carry
+            # that dtype — a mismatch would break the scan carry)
+            zeros = lambda p: jax.tree.map(
+                lambda u: jnp.zeros(
+                    (m,) + u.shape, self.correction_dtype or u.dtype
+                ),
+                p,
+            )
+            state["ex"] = zeros(x)
+            state["ey"] = zeros(y)
+        if self.mode == "randk":
+            state["key"] = jax.random.PRNGKey(self.seed)
+        return state
+
+    def transform_correction(self, cx, cy, state):
+        if self.compression_ratio >= 1.0:
+            return cx, cy, state
+        state = dict(state)
+        sub = None
+        if self.mode == "randk":
+            key, sub = jax.random.split(state["key"])
+            state["key"] = key
+
+        def compress(tree, err, tag):
+            leaves, treedef = jax.tree.flatten(tree)
+            eleaves = (
+                jax.tree.leaves(err) if err is not None else [None] * len(leaves)
+            )
+            chat_leaves, resid_leaves = [], []
+            for i, (c, e) in enumerate(zip(leaves, eleaves)):
+                ceff = c if e is None else c + e.astype(c.dtype)
+                flat = ceff.reshape(ceff.shape[0], -1)
+                n = flat.shape[1]
+                k = max(1, math.ceil(self.compression_ratio * n))
+                if k >= n:
+                    mask = jnp.ones_like(flat)
+                elif self.mode == "topk":
+                    # scatter exactly k ones (ties broken by index) so the
+                    # kept fraction always matches what bytes_per_round
+                    # prices — a >=threshold mask would keep every tied
+                    # entry, degenerating to dense when the k-th magnitude
+                    # is 0
+                    idx = jax.lax.top_k(jnp.abs(flat), k)[1]
+                    rows = jnp.arange(flat.shape[0])[:, None]
+                    mask = jnp.zeros_like(flat).at[rows, idx].set(1.0)
+                else:
+                    mask = _randk_mask(flat, k, jax.random.fold_in(sub, 2 * i + tag))
+                chat = (flat * mask).reshape(ceff.shape)
+                chat_leaves.append(chat)
+                resid_leaves.append(None if e is None else ceff - chat)
+            resid = (
+                jax.tree.unflatten(treedef, resid_leaves)
+                if err is not None
+                else None
+            )
+            return jax.tree.unflatten(treedef, chat_leaves), resid
+
+        ex = state.get("ex") if self.error_feedback else None
+        ey = state.get("ey") if self.error_feedback else None
+        cx, ex = compress(cx, ex, 0)
+        cy, ey = compress(cy, ey, 1)
+        if self.error_feedback:
+            state["ex"], state["ey"] = ex, ey
+        return cx, cy, state
+
+    def bytes_per_round(self, x, y, num_local_steps):
+        # up: sparsified grad + local model; down: sparsified global grad +
+        # averaged model (models stay dense; only the tracked-gradient
+        # exchange is compressed)
+        dense = _payload_bytes((x, y))
+        return 2 * dense + 2 * _sparse_payload_bytes((x, y), self.compression_ratio)
+
+
+def _randk_mask(flat: jax.Array, k: int, key: jax.Array) -> jax.Array:
+    m, n = flat.shape
+    keys = jax.random.split(key, m)
+
+    def one(kk):
+        idx = jax.random.permutation(kk, n)[:k]
+        return jnp.zeros((n,), flat.dtype).at[idx].set(1.0)
+
+    return jax.vmap(one)(keys)
+
+
+# ------------------------------------------------------------------ registry
+_ALIASES = {
+    "gda": lambda kw: FullSync(),
+    "sync_gda": lambda kw: FullSync(),
+    "full_sync": lambda kw: FullSync(),
+    "local_sgda": lambda kw: LocalOnly(),
+    "local_only": lambda kw: LocalOnly(),
+    "fedgda_gt": lambda kw: GradientTracking(
+        correction_dtype=kw.get("correction_dtype")
+    ),
+    "gradient_tracking": lambda kw: GradientTracking(
+        correction_dtype=kw.get("correction_dtype")
+    ),
+    "partial_gt": lambda kw: PartialParticipation(
+        participation=kw.get("participation", 0.5),
+        correction_dtype=kw.get("correction_dtype"),
+        seed=kw.get("seed", 0),
+    ),
+    "partial_participation": lambda kw: PartialParticipation(
+        participation=kw.get("participation", 0.5),
+        correction_dtype=kw.get("correction_dtype"),
+        seed=kw.get("seed", 0),
+    ),
+    "compressed_gt": lambda kw: CompressedGT(
+        compression_ratio=kw.get("compression_ratio", 0.1),
+        mode=kw.get("compression_mode", "topk"),
+        error_feedback=kw.get("error_feedback", True),
+        correction_dtype=kw.get("correction_dtype"),
+        seed=kw.get("seed", 0),
+    ),
+}
+
+
+def resolve_strategy(spec, **kwargs) -> CommStrategy:
+    """Map an algorithm name (or a ready strategy) to a CommStrategy.
+
+    Accepts the legacy algorithm strings ("gda"/"sync_gda", "local_sgda",
+    "fedgda_gt") plus the scenario-opening ones ("partial_gt",
+    "compressed_gt").  kwargs supply strategy hyperparameters
+    (correction_dtype, participation, compression_ratio, ...)."""
+    if isinstance(spec, CommStrategy):
+        return spec
+    try:
+        factory = _ALIASES[spec]
+    except (KeyError, TypeError):
+        raise ValueError(f"unknown algorithm {spec!r}") from None
+    return factory(kwargs)

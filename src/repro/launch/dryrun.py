@@ -93,12 +93,21 @@ def run_one(
     h_shard=None,
     q_block=None,
     moe_dispatch=None,
+    participation=None,
+    compression_ratio=None,
 ) -> Dict:
     cfg = get_config(arch)
-    if moe_dispatch:
+    if moe_dispatch or participation is not None or compression_ratio is not None:
         import dataclasses as _dc
 
-        cfg = _dc.replace(cfg, moe_dispatch=moe_dispatch)
+        repl = {}
+        if moe_dispatch:
+            repl["moe_dispatch"] = moe_dispatch
+        if participation is not None:
+            repl["participation"] = participation
+        if compression_ratio is not None:
+            repl["compression_ratio"] = compression_ratio
+        cfg = _dc.replace(cfg, **repl)
     shape = INPUT_SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
     rec: Dict = {
@@ -108,6 +117,10 @@ def run_one(
         "kind": shape.kind,
         "algorithm": algorithm if shape.kind == "train" else None,
         "num_local_steps": num_local_steps if shape.kind == "train" else None,
+        "participation": cfg.participation if shape.kind == "train" else None,
+        "compression_ratio": (
+            cfg.compression_ratio if shape.kind == "train" else None
+        ),
         "sharding_variant": sharding_variant,
         "sequence_parallel": sequence_parallel,
         "h_shard": h_shard,
@@ -124,7 +137,10 @@ def run_one(
                 q_block=q_block,
             )
             sp = specs_fn(shape)
-            lowered = jitted_fn(shape).lower(sp["x"], sp["y"], sp["batch"])
+            step_args = [sp["x"], sp["y"], sp["batch"]]
+            if "state" in sp:  # stateful strategy (sampling RNG / EF buffers)
+                step_args.append(sp["state"])
+            lowered = jitted_fn(shape).lower(*step_args)
         elif shape.kind == "prefill":
             jitted_fn, specs_fn = build_prefill_step(
                 cfg, mesh, sharding_variant=sharding_variant
@@ -188,6 +204,10 @@ def main() -> None:
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--algorithm", default="fedgda_gt")
     ap.add_argument("--num-local-steps", type=int, default=4)
+    ap.add_argument("--participation", type=float, default=None,
+                    help="client fraction per round (partial_gt)")
+    ap.add_argument("--compression-ratio", type=float, default=None,
+                    help="kept fraction of sparsified corrections (compressed_gt)")
     ap.add_argument("--variant", default="baseline",
                     choices=["baseline", "megatron"])
     ap.add_argument("--no-seq-parallel", action="store_true")
@@ -211,6 +231,10 @@ def main() -> None:
             tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
             if args.algorithm != "fedgda_gt":
                 tag += f"__{args.algorithm}"
+            if args.participation is not None:
+                tag += f"__p{args.participation:g}"
+            if args.compression_ratio is not None:
+                tag += f"__r{args.compression_ratio:g}"
             if args.variant != "baseline":
                 tag += f"__{args.variant}"
             if args.no_seq_parallel:
@@ -236,6 +260,8 @@ def main() -> None:
                     h_shard=args.h_shard,
                     q_block=args.q_block,
                     moe_dispatch=args.moe_dispatch,
+                    participation=args.participation,
+                    compression_ratio=args.compression_ratio,
                 )
                 with open(path, "w") as f:
                     json.dump(rec, f, indent=1)

@@ -1,9 +1,12 @@
 """SPMD step builders: federated minimax train_step + prefill/decode serve_step.
 
-train_step = ONE FedGDA-GT communication round (Algorithm 2) lowered as a
-single jitted SPMD program on the production mesh.  Baselines (local_sgda,
-sync_gda) share the same signature so the dry-run can compare their
-collective schedules directly.
+train_step = ONE federated communication round lowered as a single jitted
+SPMD program on the production mesh, built by the unified round engine
+(`repro.core.engine.make_round`) for any `CommStrategy` — FedGDA-GT by
+default; baselines (local_sgda, sync_gda) and the scenario strategies
+(partial_gt, compressed_gt) share the same signature so the dry-run can
+compare their collective schedules directly.  Stateful strategies thread
+their state as an extra replicated step input.
 """
 from __future__ import annotations
 
@@ -15,9 +18,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs.base import ModelConfig, ShapeConfig
-from ..core.fedgda_gt import make_fedgda_gt_round
-from ..core.gda import make_gda_step
-from ..core.local_sgda import make_local_sgda_round
+from ..core.engine import make_round
+from ..fed.strategies import CommStrategy, resolve_strategy
 from ..models import batch_struct, init_caches, init_params
 from ..models.transformer import embed_inputs, forward, logits_from_hidden
 from ..problems.adversarial import delta_projection, make_adversarial_loss
@@ -75,7 +77,7 @@ def build_train_step(
     cfg: ModelConfig,
     mesh,
     *,
-    algorithm: str = "fedgda_gt",
+    algorithm="fedgda_gt",  # legacy name or a CommStrategy instance
     num_local_steps: int = 4,
     eta: float = 1e-3,
     delta_radius: float = 1.0,
@@ -102,33 +104,22 @@ def build_train_step(
     loss = make_adversarial_loss(cfg, remat=remat, h_sharding=h_sh)
     proj_y = delta_projection(delta_radius)
     constrain = make_agent_constraint(cfg, mesh, None, sharding_variant)
-    if algorithm == "fedgda_gt":
-        cdt = _CORRECTION_DTYPES.get(cfg.correction_dtype)
-        rnd = make_fedgda_gt_round(
-            loss,
-            num_local_steps,
-            eta,
-            proj_y=proj_y,
-            correction_dtype=cdt,
-            constrain_agents=constrain,
-        )
-    elif algorithm == "local_sgda":
-        rnd = make_local_sgda_round(
-            loss, num_local_steps, eta, eta, proj_y=proj_y,
-            constrain_agents=constrain,
-        )
-    elif algorithm == "sync_gda":
-        step = make_gda_step(loss, eta, eta, proj_y=proj_y)
-
-        def rnd(x, y, agent_data):  # K communicated steps per "round"
-            def body(c, _):
-                return step(*c, agent_data), None
-
-            (x, y), _ = jax.lax.scan(body, (x, y), None, length=num_local_steps)
-            return x, y
-
-    else:
-        raise ValueError(algorithm)
+    strategy = resolve_strategy(
+        algorithm,
+        correction_dtype=_CORRECTION_DTYPES.get(cfg.correction_dtype),
+        participation=cfg.participation,
+        compression_ratio=cfg.compression_ratio,
+    )
+    stateful = strategy.stateful
+    rnd = make_round(
+        loss,
+        strategy,
+        num_local_steps,
+        eta,
+        proj_y=proj_y,
+        constrain_agents=constrain,
+        explicit_state=stateful,
+    )
 
     x_sh = param_shardings(abstract_params(cfg, dtype), cfg, mesh, sharding_variant)
     y_sh = jax.tree.map(lambda _: replicated(mesh), delta_struct(cfg, dtype))
@@ -136,10 +127,26 @@ def build_train_step(
     batch_sh_fn = lambda tree: jax.tree.map(lambda s: bsh(len(s.shape)), tree)
 
     def specs_fn(shape: ShapeConfig, dt=dtype):
-        return train_input_specs(cfg, shape, mesh, dt)
+        sp = train_input_specs(cfg, shape, mesh, dt)
+        if stateful:
+            # strategy state (sampling RNG / error-feedback buffers) rides
+            # along as a fourth, replicated step input
+            m = num_agents(mesh, cfg.fed_mode)
+            sp["state"] = jax.eval_shape(
+                lambda xx, yy: strategy.init_state(xx, yy, m), sp["x"], sp["y"]
+            )
+        return sp
 
     def jitted(shape: ShapeConfig):
         sp = specs_fn(shape)
+        if stateful:
+            st_sh = jax.tree.map(lambda _: replicated(mesh), sp["state"])
+            return jax.jit(
+                rnd,
+                in_shardings=(x_sh, y_sh, batch_sh_fn(sp["batch"]), st_sh),
+                out_shardings=(x_sh, y_sh, st_sh),
+                donate_argnums=(0,),
+            )
         return jax.jit(
             rnd,
             in_shardings=(x_sh, y_sh, batch_sh_fn(sp["batch"])),

@@ -7,6 +7,16 @@ import pytest
 jax.config.update("jax_enable_x64", True)
 
 
+def pytest_configure(config):
+    # also declared in pytest.ini so `-m "not slow"` filtering is
+    # warning-free even when conftest isn't the one registering it
+    config.addinivalue_line(
+        "markers",
+        "slow: multi-minute system / arch-smoke tests; deselect with "
+        '-m "not slow"',
+    )
+
+
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)

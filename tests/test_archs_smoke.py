@@ -33,6 +33,8 @@ ARCH_NAMES = sorted(ARCHS)
 DT = jnp.float32
 B, S = 2, 64
 
+pytestmark = pytest.mark.slow  # multi-minute: deselect with -m "not slow"
+
 
 def _finite(tree):
     return all(bool(jnp.all(jnp.isfinite(u))) for u in jax.tree.leaves(tree))

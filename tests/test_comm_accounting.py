@@ -1,0 +1,148 @@
+"""Strategy-derived communication accounting (star-topology cost model).
+
+`communication_bytes_per_round` is now a thin veneer over
+`CommStrategy.bytes_per_round`; these tests pin the legacy string API to
+its historical values AND the new per-strategy payload models (client
+sampling scales the expected payload; the compression ratio is reflected
+in the sparsified-correction bytes, with index overhead, never exceeding
+the dense cost)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import communication_bytes_per_round
+from repro.fed import (
+    CompressedGT,
+    FullSync,
+    GradientTracking,
+    LocalOnly,
+    PartialParticipation,
+    comm_table,
+    resolve_strategy,
+)
+
+P, Q, K = 1000, 10, 16
+
+
+@pytest.fixture(scope="module")
+def xy():
+    # float64 under the conftest x64 flag: itemsize 8
+    return jnp.zeros((P,)), jnp.zeros((Q,))
+
+
+def _z(x, y):
+    return x.size * x.dtype.itemsize + y.size * y.dtype.itemsize
+
+
+# ----------------------------------------------------- legacy string API
+class TestLegacyStringApi:
+    def test_historical_values_preserved(self, xy):
+        x, y = xy
+        z = _z(x, y)
+        assert communication_bytes_per_round(x, y, "local_sgda", K) == 2 * z
+        assert communication_bytes_per_round(x, y, "fedgda_gt", K) == 4 * z
+        assert communication_bytes_per_round(x, y, "gda", K) == 2 * z * K
+
+    def test_orderings(self, xy):
+        x, y = xy
+        ls = communication_bytes_per_round(x, y, "local_sgda", K)
+        gt = communication_bytes_per_round(x, y, "fedgda_gt", K)
+        gda = communication_bytes_per_round(x, y, "gda", K)
+        assert 0 < ls < gt == 2 * ls < gda
+
+    def test_unknown_algorithm_raises(self, xy):
+        x, y = xy
+        with pytest.raises(ValueError, match="unknown algorithm"):
+            communication_bytes_per_round(x, y, "adam", K)
+
+    def test_strategy_instances_accepted(self, xy):
+        x, y = xy
+        assert communication_bytes_per_round(
+            x, y, GradientTracking(), K
+        ) == communication_bytes_per_round(x, y, "fedgda_gt", K)
+
+
+# ------------------------------------------------- per-strategy payloads
+class TestStrategyPayloads:
+    def test_strategies_match_their_legacy_names(self, xy):
+        x, y = xy
+        z = _z(x, y)
+        assert FullSync().bytes_per_round(x, y, K) == 2 * z * K
+        assert LocalOnly().bytes_per_round(x, y, K) == 2 * z
+        assert GradientTracking().bytes_per_round(x, y, K) == 4 * z
+
+    def test_partial_participation_scales_expected_payload(self, xy):
+        x, y = xy
+        z = _z(x, y)
+        full = PartialParticipation(participation=1.0)
+        half = PartialParticipation(participation=0.5)
+        assert full.bytes_per_round(x, y, K) == 4 * z
+        assert half.bytes_per_round(x, y, K) == 2 * z
+        assert PartialParticipation(participation=0.25).bytes_per_round(
+            x, y, K
+        ) == z
+
+    def test_compression_ratio_reflected_in_bytes(self, xy):
+        x, y = xy
+        z = _z(x, y)
+        dense = CompressedGT(compression_ratio=1.0).bytes_per_round(x, y, K)
+        assert dense == 4 * z  # identity configuration == GradientTracking
+        ratios = [0.01, 0.1, 0.25, 0.5]
+        costs = [
+            CompressedGT(compression_ratio=r).bytes_per_round(x, y, K)
+            for r in ratios
+        ]
+        assert all(c < dense for c in costs)  # compression saves bytes
+        assert costs == sorted(costs)  # monotone in the ratio
+        assert all(c > 2 * z for c in costs)  # models stay dense
+        # exact model: dense models + (value + 4-byte index) per kept entry
+        k_x = int(np.ceil(0.1 * P))
+        k_y = int(np.ceil(0.1 * Q))
+        expected = 2 * z + 2 * (k_x * (8 + 4) + k_y * (8 + 4))
+        assert CompressedGT(compression_ratio=0.1).bytes_per_round(
+            x, y, K
+        ) == expected
+
+    def test_sparse_payload_never_exceeds_dense(self, xy):
+        x, y = xy
+        # with 12 bytes/entry vs 8 dense, ratio ~0.9 would "cost" more
+        # sparsified than dense — the model clamps at the dense payload
+        assert CompressedGT(compression_ratio=0.9).bytes_per_round(
+            x, y, K
+        ) <= 4 * _z(x, y)
+
+
+# ----------------------------------------------------------- comm table
+class TestCommTable:
+    def test_string_and_strategy_keys(self, xy):
+        x, y = xy
+        z = _z(x, y)
+        table = comm_table(
+            x,
+            y,
+            K,
+            {
+                "fedgda_gt": 50.0,
+                "local_sgda": float("inf"),
+                CompressedGT(compression_ratio=0.1): 80.0,
+            },
+        )
+        assert table["fedgda_gt"]["total_bytes"] == 50.0 * 4 * z
+        assert table["local_sgda"]["total_bytes"] == float("inf")
+        cgt = table["compressed_gt"]
+        assert cgt["bytes_per_round"] < 4 * z
+        assert cgt["total_bytes"] == cgt["bytes_per_round"] * 80.0
+
+    def test_resolve_strategy_roundtrip(self):
+        assert isinstance(resolve_strategy("sync_gda"), FullSync)
+        assert isinstance(resolve_strategy("gda"), FullSync)
+        assert isinstance(resolve_strategy("local_sgda"), LocalOnly)
+        assert isinstance(resolve_strategy("fedgda_gt"), GradientTracking)
+        pp = resolve_strategy("partial_gt", participation=0.3)
+        assert isinstance(pp, PartialParticipation) and pp.participation == 0.3
+        cg = resolve_strategy("compressed_gt", compression_ratio=0.2)
+        assert isinstance(cg, CompressedGT) and cg.compression_ratio == 0.2
+        s = GradientTracking()
+        assert resolve_strategy(s) is s
+        with pytest.raises(ValueError):
+            resolve_strategy("nope")

@@ -1,0 +1,158 @@
+"""Differential tests: the unified round engine vs the legacy algorithms.
+
+The engine (`repro.core.engine.make_round` + `repro.fed.strategies`) must
+reproduce the pre-engine implementations, which are kept verbatim as
+`*_reference` oracles:
+
+  * GradientTracking vs FedGDA-GT — BITWISE identical iterates over
+    multiple rounds (the public `make_fedgda_gt_round` wrapper AND the
+    frozen reference), including the reduced-dtype correction and the
+    m == 1 reduction-to-GDA case;
+  * LocalOnly vs Local SGDA — allclose;
+  * FullSync vs K composed centralized GDA steps — allclose.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    make_fedgda_gt_round,
+    make_fedgda_gt_round_reference,
+    make_gda_step,
+    make_gda_step_reference,
+    make_local_sgda_round,
+    make_local_sgda_round_reference,
+    make_round,
+)
+from repro.fed import FullSync, GradientTracking, LocalOnly
+from repro.problems import make_quadratic_problem
+
+ETA = 1e-4
+ROUNDS = 6  # acceptance: bitwise over >= 5 rounds
+
+
+def _problem(rng, m=6, dim=10):
+    return make_quadratic_problem(rng, dim=dim, num_samples=40, num_agents=m)
+
+
+def _iterate(rnd, x, y, data, rounds=ROUNDS):
+    out = []
+    for _ in range(rounds):
+        x, y = rnd(x, y, data)
+        out.append((np.asarray(x), np.asarray(y)))
+    return out
+
+
+def _assert_bitwise(trace_a, trace_b):
+    for t, ((xa, ya), (xb, yb)) in enumerate(zip(trace_a, trace_b)):
+        assert (xa == xb).all(), f"x diverges at round {t}"
+        assert (ya == yb).all(), f"y diverges at round {t}"
+
+
+# ------------------------------------------------- gradient tracking (bitwise)
+class TestGradientTrackingParity:
+    @pytest.mark.parametrize("K", [1, 2, 5])
+    def test_engine_bitwise_equals_legacy_constructor(self, rng, K):
+        prob = _problem(rng)
+        engine = jax.jit(make_round(prob.loss, GradientTracking(), K, ETA))
+        legacy = jax.jit(make_fedgda_gt_round(prob.loss, K, ETA))
+        x, y = jnp.ones(10), -jnp.ones(10)
+        _assert_bitwise(
+            _iterate(engine, x, y, prob.agent_data),
+            _iterate(legacy, x, y, prob.agent_data),
+        )
+
+    @pytest.mark.parametrize("K", [1, 2, 5])
+    def test_engine_bitwise_equals_frozen_reference(self, rng, K):
+        """The real differential test: the reference is the pre-engine
+        implementation kept verbatim, not a wrapper."""
+        prob = _problem(rng)
+        engine = jax.jit(make_round(prob.loss, GradientTracking(), K, ETA))
+        ref = jax.jit(make_fedgda_gt_round_reference(prob.loss, K, ETA))
+        x, y = jnp.ones(10), -jnp.ones(10)
+        _assert_bitwise(
+            _iterate(engine, x, y, prob.agent_data),
+            _iterate(ref, x, y, prob.agent_data),
+        )
+
+    def test_engine_bitwise_with_reduced_correction_dtype(self, rng):
+        prob = _problem(rng)
+        strat = GradientTracking(correction_dtype=jnp.bfloat16)
+        engine = jax.jit(make_round(prob.loss, strat, 4, ETA))
+        ref = jax.jit(
+            make_fedgda_gt_round_reference(
+                prob.loss, 4, ETA, correction_dtype=jnp.bfloat16
+            )
+        )
+        x, y = jnp.ones(10), -jnp.ones(10)
+        _assert_bitwise(
+            _iterate(engine, x, y, prob.agent_data),
+            _iterate(ref, x, y, prob.agent_data),
+        )
+
+    @pytest.mark.parametrize("K", [1, 3])
+    def test_m1_reduces_to_k_gda_steps(self, rng, K):
+        """Single agent: the correction is identically zero and one round
+        IS K centralized GDA steps (Appendix D.4)."""
+        prob = make_quadratic_problem(
+            rng, dim=8, num_samples=30, num_agents=1
+        )
+        engine = jax.jit(make_round(prob.loss, GradientTracking(), K, ETA))
+        ref = jax.jit(make_fedgda_gt_round_reference(prob.loss, K, ETA))
+        step = jax.jit(make_gda_step_reference(prob.loss, ETA, ETA))
+        x, y = jnp.ones(8), -jnp.ones(8)
+        _assert_bitwise(
+            _iterate(engine, x, y, prob.agent_data),
+            _iterate(ref, x, y, prob.agent_data),
+        )
+        xe, ye = engine(x, y, prob.agent_data)
+        xc, yc = x, y
+        for _ in range(K):
+            xc, yc = step(xc, yc, prob.agent_data)
+        np.testing.assert_allclose(np.asarray(xe), np.asarray(xc), rtol=1e-12)
+        np.testing.assert_allclose(np.asarray(ye), np.asarray(yc), rtol=1e-12)
+
+
+# ----------------------------------------------------------- local only
+class TestLocalOnlyParity:
+    @pytest.mark.parametrize("K", [1, 2, 5])
+    def test_engine_allclose_to_legacy(self, rng, K):
+        prob = _problem(rng)
+        engine = jax.jit(make_round(prob.loss, LocalOnly(), K, ETA, 2 * ETA))
+        legacy = jax.jit(make_local_sgda_round(prob.loss, K, ETA, 2 * ETA))
+        ref = jax.jit(
+            make_local_sgda_round_reference(prob.loss, K, ETA, 2 * ETA)
+        )
+        x, y = jnp.ones(10), -jnp.ones(10)
+        te = _iterate(engine, x, y, prob.agent_data)
+        tl = _iterate(legacy, x, y, prob.agent_data)
+        tr = _iterate(ref, x, y, prob.agent_data)
+        for (xe, ye), (xl, yl), (xr, yr) in zip(te, tl, tr):
+            np.testing.assert_allclose(xe, xl, rtol=1e-12)
+            np.testing.assert_allclose(xe, xr, rtol=1e-12)
+            np.testing.assert_allclose(ye, yl, rtol=1e-12)
+            np.testing.assert_allclose(ye, yr, rtol=1e-12)
+
+
+# ------------------------------------------------------------- full sync
+class TestFullSyncParity:
+    @pytest.mark.parametrize("K", [1, 4])
+    def test_one_round_equals_k_composed_gda_steps(self, rng, K):
+        prob = _problem(rng)
+        engine = jax.jit(make_round(prob.loss, FullSync(), K, ETA, 2 * ETA))
+        step_pub = jax.jit(make_gda_step(prob.loss, ETA, 2 * ETA))
+        step_ref = jax.jit(make_gda_step_reference(prob.loss, ETA, 2 * ETA))
+        x, y = jnp.ones(10), -jnp.ones(10)
+        for _ in range(ROUNDS):
+            x1, y1 = engine(x, y, prob.agent_data)
+            xp, yp = x, y
+            xr, yr = x, y
+            for _ in range(K):
+                xp, yp = step_pub(xp, yp, prob.agent_data)
+                xr, yr = step_ref(xr, yr, prob.agent_data)
+            np.testing.assert_allclose(np.asarray(x1), np.asarray(xp), rtol=1e-12)
+            np.testing.assert_allclose(np.asarray(x1), np.asarray(xr), rtol=1e-12)
+            np.testing.assert_allclose(np.asarray(y1), np.asarray(yp), rtol=1e-12)
+            np.testing.assert_allclose(np.asarray(y1), np.asarray(yr), rtol=1e-12)
+            x, y = x1, y1

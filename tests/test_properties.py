@@ -16,6 +16,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the optional `hypothesis` extra; "
+    "the rest of tier-1 runs without it",
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

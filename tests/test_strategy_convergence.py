@@ -1,0 +1,167 @@
+"""Convergence tests for the scenario-opening strategies.
+
+  * PartialParticipation with full participation IS GradientTracking —
+    exactly (the sampling machinery is elided at trace time);
+  * CompressedGT with a 100% compression ratio IS GradientTracking —
+    exactly (compression and error feedback are elided at trace time);
+  * with real sampling / real sparsification both still converge on the
+    strongly-convex-strongly-concave quadratic (to a small noise floor —
+    the exact-limit property is FedGDA-GT's, Theorem 1), and error
+    feedback demonstrably tightens the compressed floor.
+
+Everything here is deterministic: fixed seeds, fixed trace-time shapes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_round, run_strategy_rounds, tree_sq_dist
+from repro.fed import CompressedGT, GradientTracking, PartialParticipation
+from repro.problems import make_quadratic_problem, quadratic_minimax_point
+
+M, DIM, K, ETA, T = 8, 6, 4, 2e-4, 1500
+
+
+@pytest.fixture(scope="module")
+def quad():
+    prob = make_quadratic_problem(
+        jax.random.PRNGKey(0), dim=DIM, num_samples=40, num_agents=M
+    )
+    x_star, y_star = quadratic_minimax_point(prob)
+    return prob, x_star, y_star
+
+
+def _final_gap(prob, x_star, y_star, strategy, rounds=T):
+    def gap(x, y):
+        return {"gap": tree_sq_dist(x, x_star) + tree_sq_dist(y, y_star)}
+
+    x0 = jnp.zeros(DIM)
+    rnd = jax.jit(make_round(prob.loss, strategy, K, ETA, explicit_state=True))
+    state0 = strategy.init_state(x0, x0, M)
+    (_, _, _), metrics = run_strategy_rounds(
+        rnd, x0, x0, prob.agent_data, rounds, state0, gap
+    )
+    g = np.asarray(metrics["gap"])
+    return float(g[0]), float(g[-1])
+
+
+def _rounds_equal(prob, strat_a, strat_b, rounds=5):
+    ra = jax.jit(make_round(prob.loss, strat_a, K, ETA))
+    rb = jax.jit(make_round(prob.loss, strat_b, K, ETA))
+    xa = xb = jnp.ones(DIM)
+    ya = yb = -jnp.ones(DIM)
+    for t in range(rounds):
+        xa, ya = ra(xa, ya, prob.agent_data)
+        xb, yb = rb(xb, yb, prob.agent_data)
+        assert bool(jnp.all(xa == xb)), f"x diverges at round {t}"
+        assert bool(jnp.all(ya == yb)), f"y diverges at round {t}"
+
+
+# ------------------------------------------------- identity configurations
+class TestIdentityConfigurations:
+    def test_full_participation_equals_gradient_tracking_exactly(self, quad):
+        prob, _, _ = quad
+        _rounds_equal(
+            prob, PartialParticipation(participation=1.0), GradientTracking()
+        )
+
+    def test_dense_compression_equals_gradient_tracking_exactly(self, quad):
+        prob, _, _ = quad
+        for mode in ("topk", "randk"):
+            _rounds_equal(
+                prob,
+                CompressedGT(compression_ratio=1.0, mode=mode),
+                GradientTracking(),
+            )
+
+    def test_identity_configurations_are_stateless(self):
+        assert not PartialParticipation(participation=1.0).stateful
+        assert not CompressedGT(compression_ratio=1.0).stateful
+        assert PartialParticipation(participation=0.5).stateful
+        assert CompressedGT(compression_ratio=0.5).stateful
+
+
+# --------------------------------------------------------- convergence
+class TestConvergence:
+    def test_gradient_tracking_converges_to_exact_point(self, quad):
+        prob, xs, ys = quad
+        g0, gT = _final_gap(prob, xs, ys, GradientTracking())
+        assert gT < 1e-9 * g0  # linear rate, constant stepsize (Theorem 1)
+
+    def test_partial_participation_converges(self, quad):
+        prob, xs, ys = quad
+        g0, gT = _final_gap(
+            prob, xs, ys, PartialParticipation(participation=0.5, seed=0)
+        )
+        # unbiased sampling: converges to a small noise floor
+        assert g0 > 1e2 and gT < 1e-1
+
+    @pytest.mark.parametrize("mode", ["topk", "randk"])
+    def test_compressed_gt_converges(self, quad, mode):
+        prob, xs, ys = quad
+        g0, gT = _final_gap(
+            prob,
+            xs,
+            ys,
+            CompressedGT(compression_ratio=0.5, mode=mode, seed=0),
+        )
+        assert g0 > 1e2 and gT < 1e-1
+
+    def test_error_feedback_tightens_the_floor(self, quad):
+        prob, xs, ys = quad
+        _, g_ef = _final_gap(
+            prob, xs, ys, CompressedGT(compression_ratio=0.5, mode="topk")
+        )
+        _, g_noef = _final_gap(
+            prob,
+            xs,
+            ys,
+            CompressedGT(
+                compression_ratio=0.5, mode="topk", error_feedback=False
+            ),
+        )
+        assert g_ef < g_noef / 10.0
+
+
+# ----------------------------------------------------- mechanism checks
+class TestMechanisms:
+    def test_sample_weights_are_an_unbiased_reweighting(self):
+        s = PartialParticipation(participation=0.5, seed=3)
+        state = s.init_state(jnp.zeros(2), jnp.zeros(2), 8)
+        w, state = s.sample_weights(state, 8)
+        w = np.asarray(w)
+        assert w.shape == (8,)
+        np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-12)
+        assert (w > 0).sum() == 4  # S = round(0.5 * 8)
+        # successive rounds draw different subsets (the RNG key advances)
+        w2, _ = s.sample_weights(state, 8)
+        assert not np.array_equal(np.asarray(w2), w)
+
+    def test_topk_keeps_largest_and_feedback_stores_rest(self):
+        s = CompressedGT(compression_ratio=0.5, mode="topk")
+        m, n = 2, 4
+        cx = jnp.asarray([[4.0, -3.0, 0.5, 0.25], [1.0, 2.0, -8.0, 0.125]])
+        cy = jnp.zeros((m, 1))
+        state = s.init_state(jnp.zeros(n), jnp.zeros(1), m)
+        cx2, cy2, state = s.transform_correction(cx, cy, state)
+        np.testing.assert_allclose(
+            np.asarray(cx2),
+            [[4.0, -3.0, 0.0, 0.0], [0.0, 2.0, -8.0, 0.0]],
+        )
+        # feedback buffer holds exactly what compression dropped
+        np.testing.assert_allclose(
+            np.asarray(state["ex"]), np.asarray(cx - cx2)
+        )
+
+    def test_topk_keeps_exactly_k_under_ties(self):
+        """Tied magnitudes (including all-zero rows) must not inflate the
+        kept fraction beyond what bytes_per_round prices."""
+        s = CompressedGT(compression_ratio=0.5, mode="topk")
+        cx = jnp.asarray([[1.0, 1.0, 1.0, 1.0], [0.0, 0.0, 0.0, 0.0]])
+        cy = jnp.zeros((2, 1))
+        state = s.init_state(jnp.zeros(4), jnp.zeros(1), 2)
+        cx2, _, _ = s.transform_correction(cx, cy, state)
+        kept = np.asarray(jnp.sum(cx2 != 0, axis=1))
+        assert kept[0] == 2  # k = ceil(0.5 * 4), not all 4 tied entries
+        assert kept[1] == 0  # zero row stays zero (not dense!)

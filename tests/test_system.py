@@ -28,6 +28,8 @@ from repro.problems.adversarial import (
 
 DT = jnp.float32
 
+pytestmark = pytest.mark.slow  # multi-minute: deselect with -m "not slow"
+
 
 @pytest.fixture(scope="module")
 def small():
