@@ -3,12 +3,14 @@
 For the Section-5.1 quadratic game: rounds and total exchanged bytes
 (star-topology cost model, Section 3) to reach optimality gap <= eps for
 centralized GDA (communicates every step), Local SGDA, FedGDA-GT, and the
-two scenario strategies (client sampling, sparsified corrections with
-error feedback).  Per-round payloads are strategy-derived
-(`CommStrategy.bytes_per_round`): FedGDA-GT pays 2x Local SGDA per round
-but reaches eps in O(log 1/eps) rounds; Local SGDA never reaches tight
-eps at all (bias floor); the compressed/partial variants land in between
-— cheaper rounds, noise-floored accuracy."""
+scenario strategies (client sampling, sparsified corrections with error
+feedback, stochastically quantized corrections at 8 bit and at 4 bit
+composed with top-10% sparsification).  Per-round payloads are
+strategy-derived (`CommStrategy.bytes_per_round`): FedGDA-GT pays 2x
+Local SGDA per round but reaches eps in O(log 1/eps) rounds; Local SGDA
+never reaches tight eps at all (bias floor); the compressed / partial /
+quantized variants land in between — cheaper rounds, noise-floored
+accuracy (the quantizer is unbiased, so its floor is the tightest)."""
 from __future__ import annotations
 
 import math
@@ -24,6 +26,7 @@ from repro.fed import (
     GradientTracking,
     LocalOnly,
     PartialParticipation,
+    QuantizedGT,
     comm_table,
 )
 from repro.problems import make_quadratic_problem, quadratic_minimax_point
@@ -52,6 +55,8 @@ def run(rows=None):
         "fedgda_gt": (GradientTracking(), K),
         "partial_gt_50": (PartialParticipation(participation=0.5, seed=0), K),
         "compressed_gt_10": (CompressedGT(compression_ratio=0.1), K),
+        "quantized_gt_8bit": (QuantizedGT(bits=8), K),
+        "quantized_gt_4bit_top10": (QuantizedGT(bits=4, ratio=0.1), K),
     }
     rounds_to_eps = {}
     strategies = {}
@@ -70,8 +75,9 @@ def run(rows=None):
 
     table = comm_table(x0, x0, K, rounds_to_eps)
     rows = [] if rows is None else rows
-    for strategy, name in strategies.items():
-        entry = table[strategy.name]
+    # comm_table preserves insertion order and suffixes duplicate names
+    # (two quantized_gt configs), so pair rows by order, not by name
+    for (strategy, name), entry in zip(strategies.items(), table.values()):
         rows.append(
             {
                 "algorithm": name,

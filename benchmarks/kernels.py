@@ -10,7 +10,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import flash_attention, gt_update_2d, ref, ssm_scan
+from repro.kernels import (
+    compress_correction_2d,
+    flash_attention,
+    gt_update_2d,
+    ref,
+    ssm_scan,
+)
 
 from .common import emit, timed
 
@@ -30,6 +36,23 @@ def run(rows=None):
         "kernel": "gt_update(512x512 f32)",
         "max_abs_err_vs_ref": f"{float(jnp.max(jnp.abs(got - want))):.2e}",
         "ref_us_per_call": f"{timed(lambda: rfn(z, g, c).block_until_ready()):.0f}",
+    })
+
+    # compress_correction: a 20-agent correction leaf, top-10% + 8-bit QSGD
+    kc, ke, ku = jax.random.split(jax.random.fold_in(key, 1), 3)
+    R, C, kk = 20, 4096, 410
+    c, e = jax.random.normal(kc, (R, C)), 0.1 * jax.random.normal(ke, (R, C))
+    ur = jax.random.uniform(ku, (R, C))
+    got = compress_correction_2d(c, e, None, ur, k=kk, bits=8, interpret=True)
+    want = ref.compress_correction_ref(c, e, None, ur, k=kk, bits=8)
+    rfn = jax.jit(
+        lambda a, b, u: ref.compress_correction_ref(a, b, None, u, k=kk, bits=8)
+    )
+    rfn(c, e, ur)[0].block_until_ready()
+    rows.append({
+        "kernel": "compress_correction(20x4096 f32, top-10% 8-bit+EF)",
+        "max_abs_err_vs_ref": f"{float(max(jnp.max(jnp.abs(g - w)) for g, w in zip(got, want))):.2e}",
+        "ref_us_per_call": f"{timed(lambda: rfn(c, e, ur)[0].block_until_ready()):.0f}",
     })
 
     # flash attention: gemma2-like tile

@@ -49,10 +49,13 @@ class ModelConfig:
     fed_mode: str = "A"  # A: agents over (pod,data); B: agents over (pod,)
     correction_dtype: Optional[str] = None  # e.g. "float8_e4m3fn"
     # communication strategy knobs (repro.fed.strategies): fraction of
-    # clients sampled per round and kept fraction of sparsified tracking
-    # corrections; 1.0 = plain FedGDA-GT for both
+    # clients sampled per round, kept fraction of sparsified tracking
+    # corrections, and stochastic-quantization bit-width for them;
+    # participation/compression_ratio 1.0 and quantization_bits >= 32 =
+    # plain FedGDA-GT
     participation: float = 1.0
     compression_ratio: float = 1.0
+    quantization_bits: int = 32
     # shape support
     supports_decode: bool = True
     supports_long_context: bool = False

@@ -7,6 +7,7 @@ from .strategies import (
     GradientTracking,
     LocalOnly,
     PartialParticipation,
+    QuantizedGT,
     resolve_strategy,
 )
 
@@ -20,5 +21,6 @@ __all__ = [
     "GradientTracking",
     "LocalOnly",
     "PartialParticipation",
+    "QuantizedGT",
     "resolve_strategy",
 ]

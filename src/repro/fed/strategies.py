@@ -6,7 +6,8 @@ communicate each round and HOW local drift is corrected (cf. Sharma et al.
 2022; Yang et al., SAGDA, 2022).  A `CommStrategy` captures that axis as
 data; `repro.core.engine.make_round` consumes it and emits a round
 function.  The engine reads only the hook protocol below, so strategies
-and engine stay import-decoupled (strategies -> core.types only).
+and engine stay import-decoupled (strategies -> core.types plus the
+kernels package for the fused compress-correction path).
 
 Protocol consumed by the engine (all trace-time unless noted):
   sync_every_step    aggregate after EVERY local step (centralized GDA)
@@ -30,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.types import Pytree
+from ..kernels.compress_correction import compress_leaf
 
 Weights = Optional[jax.Array]
 State = dict
@@ -41,14 +43,48 @@ def _payload_bytes(tree: Pytree) -> int:
     return sum(u.size * u.dtype.itemsize for u in jax.tree.leaves(tree))
 
 
+def _sparse_leaf_cost(u, ratio: float, index_bytes: int) -> Tuple[int, int]:
+    """(kept entries k, payload bytes) for one `ratio`-sparsified leaf:
+    kept values plus an integer index per kept value, never worse than
+    sending densely.  The single owner of the sparse pricing arithmetic —
+    both payload models below derive from it."""
+    dense = u.size * u.dtype.itemsize
+    if ratio >= 1:
+        return u.size, dense
+    k = max(1, math.ceil(ratio * u.size))
+    return k, min(dense, k * (u.dtype.itemsize + index_bytes))
+
+
 def _sparse_payload_bytes(tree: Pytree, ratio: float, index_bytes: int = 4) -> int:
-    """Bytes for a `ratio`-sparsified copy of `tree`: kept values plus an
-    integer index per kept value, never worse than sending densely."""
+    """Bytes for a `ratio`-sparsified copy of `tree`."""
+    return sum(
+        _sparse_leaf_cost(u, ratio, index_bytes)[1]
+        for u in jax.tree.leaves(tree)
+    )
+
+
+def _quantized_payload_bytes(
+    tree: Pytree,
+    ratio: float,
+    bits: int,
+    index_bytes: int = 4,
+    scale_bytes: int = 4,
+) -> int:
+    """Bytes for a `ratio`-sparsified, `bits`-bit stochastically quantized
+    copy of `tree`: kept values at bits/8 bytes each plus one fp32
+    quantization scale per leaf, and an integer index per kept value when
+    sparsified — never worse than the unquantized sparse encoding, which
+    is itself never worse than dense."""
     total = 0
     for u in jax.tree.leaves(tree):
         dense = u.size * u.dtype.itemsize
-        k = max(1, math.ceil(ratio * u.size))
-        total += min(dense, k * (u.dtype.itemsize + index_bytes))
+        k, sparse = _sparse_leaf_cost(u, ratio, index_bytes)
+        if bits < 32:
+            idx = k * index_bytes if ratio < 1 else 0
+            quant = math.ceil(k * bits / 8) + scale_bytes + idx
+        else:
+            quant = sparse
+        total += min(dense, sparse, quant)
     return total
 
 
@@ -171,40 +207,70 @@ class PartialParticipation(GradientTracking):
 
 
 @dataclasses.dataclass(frozen=True)
-class CompressedGT(CommStrategy):
-    """Gradient tracking with top-k / random-k sparsified corrections and
-    (optional) error feedback.
+class _CorrectionCompressor(CommStrategy):
+    """Shared machinery for strategies that transform the tracking
+    correction leaf-by-leaf — sparsification and/or stochastic
+    quantization with error feedback.
 
-    Each round the exact correction c_i = gbar - g_i is sparsified to a
-    `compression_ratio` fraction of its entries before driving the local
-    steps; what compression drops is accumulated in a per-agent feedback
-    buffer e_i and re-injected next round (c_i + e_i is compressed, the
-    residual becomes the new e_i) so the bias is compensated over time.
+    Concrete subclasses (CompressedGT, QuantizedGT) declare the knob
+    fields and the `_ratio` / `_bits` hooks; this base owns the state
+    layout (per-agent feedback buffers "ex"/"ey" + RNG "key"), the
+    per-leaf transform loop, and the dispatch to the fused Pallas
+    compress-correction kernel: lane-aligned 2D leaves take the fused
+    VMEM pass when `use_kernel` is set, everything else falls back to
+    the pure-jnp oracle (`repro.kernels.ref.compress_correction_ref`) —
+    both paths are the same math on the same uniform draws, so the
+    dispatch moves iterates by at most ~1 ulp."""
 
-    compression_ratio >= 1 is the identity configuration: compression is
-    elided and the round is EXACTLY GradientTracking.  Ratios < 1 void
-    the anchor-point cancellation, so the fused-k0 trick is disabled."""
-
-    compression_ratio: float = 0.1
-    mode: str = "topk"  # "topk" | "randk"
-    error_feedback: bool = True
-    seed: int = 0
-    name = "compressed_gt"
+    use_kernel: bool = False       # fused Pallas path on aligned 2D leaves
+    kernel_interpret: bool = True  # interpret=True is the CPU validation path
     use_correction = True
+    # knob defaults, overridden by concrete subclasses' dataclass fields
+    mode = "topk"
+    error_feedback = True
+    seed = 0
 
     def __post_init__(self):
         if self.mode not in ("topk", "randk"):
             raise ValueError(f"unknown compression mode {self.mode!r}")
 
+    # ------------------------------------------------------- knob hooks
+    @property
+    def _ratio(self) -> float:
+        """Kept fraction of correction entries per leaf (1.0 = dense)."""
+        raise NotImplementedError
+
+    @property
+    def _bits(self) -> int:
+        """Stochastic-quantization bit-width (>= 32 = no quantization)."""
+        return 32
+
+    # ------------------------------------------------- derived structure
+    @property
+    def _sparsifying(self) -> bool:
+        return self._ratio < 1.0
+
+    @property
+    def _quantizing(self) -> bool:
+        return self._bits < 32
+
+    @property
+    def _active(self) -> bool:
+        return self._sparsifying or self._quantizing
+
+    @property
+    def _needs_rng(self) -> bool:
+        # rand-k selection scores and/or stochastic-rounding draws
+        return self._quantizing or (self._sparsifying and self.mode == "randk")
+
     @property
     def exact_correction(self) -> bool:
-        return self.compression_ratio >= 1.0
+        # any lossy transform voids the anchor-point cancellation
+        return not self._active
 
     @property
     def stateful(self) -> bool:
-        return self.compression_ratio < 1.0 and (
-            self.error_feedback or self.mode == "randk"
-        )
+        return self._active and (self.error_feedback or self._needs_rng)
 
     def init_state(self, x, y, m):
         if not self.stateful:
@@ -222,16 +288,16 @@ class CompressedGT(CommStrategy):
             )
             state["ex"] = zeros(x)
             state["ey"] = zeros(y)
-        if self.mode == "randk":
+        if self._needs_rng:
             state["key"] = jax.random.PRNGKey(self.seed)
         return state
 
     def transform_correction(self, cx, cy, state):
-        if self.compression_ratio >= 1.0:
+        if not self._active:
             return cx, cy, state
         state = dict(state)
         sub = None
-        if self.mode == "randk":
+        if self._needs_rng:
             key, sub = jax.random.split(state["key"])
             state["key"] = key
 
@@ -242,26 +308,34 @@ class CompressedGT(CommStrategy):
             )
             chat_leaves, resid_leaves = [], []
             for i, (c, e) in enumerate(zip(leaves, eleaves)):
-                ceff = c if e is None else c + e.astype(c.dtype)
-                flat = ceff.reshape(ceff.shape[0], -1)
+                flat = c.reshape(c.shape[0], -1)
                 n = flat.shape[1]
-                k = max(1, math.ceil(self.compression_ratio * n))
-                if k >= n:
-                    mask = jnp.ones_like(flat)
-                elif self.mode == "topk":
-                    # scatter exactly k ones (ties broken by index) so the
-                    # kept fraction always matches what bytes_per_round
-                    # prices — a >=threshold mask would keep every tied
-                    # entry, degenerating to dense when the k-th magnitude
-                    # is 0
-                    idx = jax.lax.top_k(jnp.abs(flat), k)[1]
-                    rows = jnp.arange(flat.shape[0])[:, None]
-                    mask = jnp.zeros_like(flat).at[rows, idx].set(1.0)
-                else:
-                    mask = _randk_mask(flat, k, jax.random.fold_in(sub, 2 * i + tag))
-                chat = (flat * mask).reshape(ceff.shape)
-                chat_leaves.append(chat)
-                resid_leaves.append(None if e is None else ceff - chat)
+                k = max(1, math.ceil(self._ratio * n)) if self._sparsifying else n
+                leaf_key = (
+                    None if sub is None else jax.random.fold_in(sub, 2 * i + tag)
+                )
+                u_sel = u_rnd = None
+                if self.mode == "randk" and k < n:
+                    u_sel = jax.random.uniform(
+                        jax.random.fold_in(leaf_key, 0), flat.shape
+                    )
+                if self._quantizing:
+                    u_rnd = jax.random.uniform(
+                        jax.random.fold_in(leaf_key, 1), flat.shape
+                    )
+                chat, resid = compress_leaf(
+                    flat,
+                    None if e is None else e.reshape(flat.shape),
+                    u_sel,
+                    u_rnd,
+                    k=k,
+                    bits=self._bits,
+                    mode=self.mode,
+                    use_kernel=self.use_kernel,
+                    interpret=self.kernel_interpret,
+                )
+                chat_leaves.append(chat.reshape(c.shape))
+                resid_leaves.append(None if e is None else resid.reshape(c.shape))
             resid = (
                 jax.tree.unflatten(treedef, resid_leaves)
                 if err is not None
@@ -277,6 +351,34 @@ class CompressedGT(CommStrategy):
             state["ex"], state["ey"] = ex, ey
         return cx, cy, state
 
+
+@dataclasses.dataclass(frozen=True)
+class CompressedGT(_CorrectionCompressor):
+    """Gradient tracking with top-k / random-k sparsified corrections and
+    (optional) error feedback.
+
+    Each round the exact correction c_i = gbar - g_i is sparsified to a
+    `compression_ratio` fraction of its entries before driving the local
+    steps; what compression drops is accumulated in a per-agent feedback
+    buffer e_i and re-injected next round (c_i + e_i is compressed, the
+    residual becomes the new e_i) so the bias is compensated over time.
+    Exactly k entries are kept per agent row (earliest index wins ties),
+    so the kept fraction always matches what bytes_per_round prices.
+
+    compression_ratio >= 1 is the identity configuration: compression is
+    elided and the round is EXACTLY GradientTracking.  Ratios < 1 void
+    the anchor-point cancellation, so the fused-k0 trick is disabled."""
+
+    compression_ratio: float = 0.1
+    mode: str = "topk"  # "topk" | "randk"
+    error_feedback: bool = True
+    seed: int = 0
+    name = "compressed_gt"
+
+    @property
+    def _ratio(self) -> float:
+        return self.compression_ratio
+
     def bytes_per_round(self, x, y, num_local_steps):
         # up: sparsified grad + local model; down: sparsified global grad +
         # averaged model (models stay dense; only the tracked-gradient
@@ -285,15 +387,55 @@ class CompressedGT(CommStrategy):
         return 2 * dense + 2 * _sparse_payload_bytes((x, y), self.compression_ratio)
 
 
-def _randk_mask(flat: jax.Array, k: int, key: jax.Array) -> jax.Array:
-    m, n = flat.shape
-    keys = jax.random.split(key, m)
+@dataclasses.dataclass(frozen=True)
+class QuantizedGT(_CorrectionCompressor):
+    """Gradient tracking with QSGD-style stochastically quantized (and
+    optionally sparsified) corrections + error feedback (cf. Alistarh et
+    al. 2017; the communication-complexity focus of SAGDA and Sharma et
+    al. 2022 in PAPERS.md).
 
-    def one(kk):
-        idx = jax.random.permutation(kk, n)[:k]
-        return jnp.zeros((n,), flat.dtype).at[idx].set(1.0)
+    The kept entries of each correction leaf are mapped to a symmetric
+    `bits`-bit grid with a per-agent-row max-abs scale and rounded
+    STOCHASTICALLY (floor + Bernoulli(frac)), so the quantizer is
+    unbiased: E[Q(c)] = c.  The quantization error joins the
+    sparsification residual in the error-feedback buffer.  `ratio` < 1
+    additionally keeps only a top-k/rand-k fraction of entries before
+    quantizing (compose both axes of compression).
 
-    return jax.vmap(one)(keys)
+    bits >= 32 AND ratio >= 1 is the identity configuration: the round
+    is EXACTLY GradientTracking.  Any lossy setting voids the
+    anchor-point cancellation, so the fused-k0 trick is disabled."""
+
+    bits: int = 8
+    ratio: float = 1.0
+    mode: str = "topk"  # "topk" | "randk" (only used when ratio < 1)
+    error_feedback: bool = True
+    seed: int = 0
+    name = "quantized_gt"
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.bits < 2:
+            raise ValueError(
+                f"quantization needs bits >= 2 (sign + magnitude), got {self.bits}"
+            )
+
+    @property
+    def _ratio(self) -> float:
+        return self.ratio
+
+    @property
+    def _bits(self) -> int:
+        return self.bits
+
+    def bytes_per_round(self, x, y, num_local_steps):
+        # up: quantized sparsified grad + local model; down: quantized
+        # sparsified global grad + averaged model (models stay dense;
+        # only the tracked-gradient exchange is compressed)
+        dense = _payload_bytes((x, y))
+        return 2 * dense + 2 * _quantized_payload_bytes(
+            (x, y), self.ratio, self.bits
+        )
 
 
 # ------------------------------------------------------------------ registry
@@ -326,6 +468,14 @@ _ALIASES = {
         correction_dtype=kw.get("correction_dtype"),
         seed=kw.get("seed", 0),
     ),
+    "quantized_gt": lambda kw: QuantizedGT(
+        bits=kw.get("quantization_bits", 8),
+        ratio=kw.get("compression_ratio", 1.0),
+        mode=kw.get("compression_mode", "topk"),
+        error_feedback=kw.get("error_feedback", True),
+        correction_dtype=kw.get("correction_dtype"),
+        seed=kw.get("seed", 0),
+    ),
 }
 
 
@@ -334,8 +484,9 @@ def resolve_strategy(spec, **kwargs) -> CommStrategy:
 
     Accepts the legacy algorithm strings ("gda"/"sync_gda", "local_sgda",
     "fedgda_gt") plus the scenario-opening ones ("partial_gt",
-    "compressed_gt").  kwargs supply strategy hyperparameters
-    (correction_dtype, participation, compression_ratio, ...)."""
+    "compressed_gt", "quantized_gt").  kwargs supply strategy
+    hyperparameters (correction_dtype, participation, compression_ratio,
+    quantization_bits, ...)."""
     if isinstance(spec, CommStrategy):
         return spec
     try:

@@ -2,12 +2,20 @@
 interpret=True against the ref.py oracles).
 
 The paper itself contributes no kernel — its contribution is the outer
-communication schedule — so these serve the model substrate:
-  * gt_update       — fused FedGDA-GT inner update (one HBM pass)
+communication schedule — so these serve the schedule and the model
+substrate:
+  * gt_update            — fused FedGDA-GT inner update (one HBM pass)
+  * compress_correction  — fused select+quantize+error-feedback on tracking
+                           corrections (CompressedGT / QuantizedGT)
   * flash_attention — blocked online-softmax attention (causal/window/softcap)
   * ssm_scan        — chunked Mamba selective scan with VMEM-carried state
 """
 from .gt_update import gt_update_2d
+from .compress_correction import (
+    compress_correction_2d,
+    compress_leaf,
+    fusable_leaf,
+)
 from .flash_attention import flash_attention
 from .ssm_scan import ssm_scan
 from .ops import (
@@ -19,6 +27,9 @@ from . import ref
 
 __all__ = [
     "gt_update_2d",
+    "compress_correction_2d",
+    "compress_leaf",
+    "fusable_leaf",
     "flash_attention",
     "ssm_scan",
     "batched_ssm_scan",

@@ -10,6 +10,80 @@ def gt_update_ref(z, g, c, eta: float, sign: float):
     return z + sign * eta * (g + c.astype(g.dtype))
 
 
+def compute_dtype(dtype):
+    """f64 in, f64 math; anything narrower (f32/bf16/f16/float8) runs in
+    f32.  Explicit because jnp.promote_types has no implicit promotion
+    path for the float8 correction dtypes."""
+    return jnp.float64 if dtype == jnp.float64 else jnp.float32
+
+
+def stochastic_quantize(kept, u_rnd, bits: int, ct):
+    """QSGD core shared VERBATIM by the oracle and the Pallas kernel
+    (`compress_correction._compress_kernel` calls this inside the kernel
+    body): symmetric s = 2^(bits-1)-1 grid, per-row max-abs scale,
+    floor + Bernoulli(frac) rounding — unbiased given u_rnd ~ U[0,1).
+    The dequant is a constant-reciprocal multiply, not q*(safe/s): XLA
+    compiles the division differently inside vs outside the
+    interpret-mode kernel (1 f32 ulp), enough to flip a bf16 rounding
+    boundary — sharing one implementation keeps kernel == oracle."""
+    s = float(2 ** (bits - 1) - 1)
+    scale = jnp.max(jnp.abs(kept), axis=-1, keepdims=True)
+    safe = jnp.where(scale > 0, scale, jnp.ones_like(scale))
+    u = kept * (s / safe)
+    lo = jnp.floor(u)
+    q = lo + (u_rnd.astype(ct) < u - lo).astype(ct)
+    return q * (safe * (1.0 / s))
+
+
+def exact_k_mask(score, k: int):
+    """Boolean mask keeping exactly k entries per row of `score` [R, C]:
+    the k largest, earliest index winning ties (the `jax.lax.top_k`
+    order, so a >=threshold mask can never degenerate to dense when the
+    k-th score is tied or zero)."""
+    n = score.shape[-1]
+    if k >= n:
+        return jnp.ones(score.shape, bool)
+    thr = jax.lax.top_k(score, k)[0][..., -1:]
+    gt = score > thr
+    n_gt = jnp.sum(gt, axis=-1, keepdims=True)
+    tie = score == thr
+    tie_rank = jnp.cumsum(tie.astype(jnp.int32), axis=-1)
+    return gt | (tie & (tie_rank <= k - n_gt))
+
+
+def compress_correction_ref(c, e, u_sel, u_rnd, *, k: int, bits: int,
+                            mode: str = "topk"):
+    """Oracle of the fused compress-correction kernel on one flattened
+    leaf c [R, C] (R = agents): error-feedback injection, exact-k
+    selection, QSGD stochastic quantization, residual update.
+
+      ceff = c + e                         (e may be None)
+      kept = ceff * exact_k_mask(score)    score = |ceff| (topk) | u_sel (randk)
+      chat = round_stoch(kept/scale * s) * scale/s   per-row scale = max|kept|,
+                                           s = 2^(bits-1)-1; identity for bits>=32
+      resid = ceff - chat                  (what compression+quantization dropped)
+
+    u_sel / u_rnd are iid U[0,1) arrays of c's shape (keeping the k largest
+    uniforms IS a uniform k-subset; round_stoch(u) = floor(u) + [u_rnd < frac]).
+    Returns (chat, resid), both in c.dtype.  Math runs in
+    `compute_dtype(c.dtype)` exactly like the kernel."""
+    ct = compute_dtype(c.dtype)
+    ceff = c.astype(ct) if e is None else c.astype(ct) + e.astype(ct)
+    n = ceff.shape[-1]
+    if k < n:
+        score = jnp.abs(ceff) if mode == "topk" else u_sel.astype(ct)
+        kept = jnp.where(exact_k_mask(score, k), ceff, jnp.zeros_like(ceff))
+    else:
+        kept = ceff
+    if bits < 32:
+        chat = stochastic_quantize(kept, u_rnd, bits, ct)
+    else:
+        chat = kept
+    chat = chat.astype(c.dtype)
+    resid = (ceff - chat.astype(ct)).astype(c.dtype)
+    return chat, resid
+
+
 def flash_attention_ref(
     q, k, v, *, causal: bool = True, window: int = 0, softcap: float = 0.0
 ):

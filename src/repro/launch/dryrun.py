@@ -95,9 +95,15 @@ def run_one(
     moe_dispatch=None,
     participation=None,
     compression_ratio=None,
+    quantization_bits=None,
 ) -> Dict:
     cfg = get_config(arch)
-    if moe_dispatch or participation is not None or compression_ratio is not None:
+    if (
+        moe_dispatch
+        or participation is not None
+        or compression_ratio is not None
+        or quantization_bits is not None
+    ):
         import dataclasses as _dc
 
         repl = {}
@@ -107,6 +113,8 @@ def run_one(
             repl["participation"] = participation
         if compression_ratio is not None:
             repl["compression_ratio"] = compression_ratio
+        if quantization_bits is not None:
+            repl["quantization_bits"] = quantization_bits
         cfg = _dc.replace(cfg, **repl)
     shape = INPUT_SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -120,6 +128,9 @@ def run_one(
         "participation": cfg.participation if shape.kind == "train" else None,
         "compression_ratio": (
             cfg.compression_ratio if shape.kind == "train" else None
+        ),
+        "quantization_bits": (
+            cfg.quantization_bits if shape.kind == "train" else None
         ),
         "sharding_variant": sharding_variant,
         "sequence_parallel": sequence_parallel,
@@ -207,7 +218,11 @@ def main() -> None:
     ap.add_argument("--participation", type=float, default=None,
                     help="client fraction per round (partial_gt)")
     ap.add_argument("--compression-ratio", type=float, default=None,
-                    help="kept fraction of sparsified corrections (compressed_gt)")
+                    help="kept fraction of sparsified corrections "
+                         "(compressed_gt / quantized_gt)")
+    ap.add_argument("--quantization-bits", type=int, default=None,
+                    help="stochastic-quantization bit-width for tracking "
+                         "corrections (quantized_gt; >=32 disables)")
     ap.add_argument("--variant", default="baseline",
                     choices=["baseline", "megatron"])
     ap.add_argument("--no-seq-parallel", action="store_true")
@@ -216,6 +231,21 @@ def main() -> None:
     ap.add_argument("--moe-dispatch", default=None, choices=["einsum", "scatter"])
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
+
+    # an unset knob falls back to the registry's ACTIVE default for the
+    # strategy being dried-run — the ModelConfig defaults are the identity
+    # configuration, so `--algorithm quantized_gt` without
+    # --quantization-bits would otherwise lower plain FedGDA-GT and tag
+    # it as quantized (same for compressed_gt / partial_gt)
+    if args.algorithm == "quantized_gt" and args.quantization_bits is None:
+        args.quantization_bits = 8
+    if args.algorithm == "compressed_gt" and args.compression_ratio is None:
+        args.compression_ratio = 0.1
+    if (
+        args.algorithm in ("partial_gt", "partial_participation")
+        and args.participation is None
+    ):
+        args.participation = 0.5
 
     os.makedirs(args.out, exist_ok=True)
     if args.all:
@@ -235,6 +265,8 @@ def main() -> None:
                 tag += f"__p{args.participation:g}"
             if args.compression_ratio is not None:
                 tag += f"__r{args.compression_ratio:g}"
+            if args.quantization_bits is not None:
+                tag += f"__q{args.quantization_bits:d}"
             if args.variant != "baseline":
                 tag += f"__{args.variant}"
             if args.no_seq_parallel:
@@ -262,6 +294,7 @@ def main() -> None:
                     moe_dispatch=args.moe_dispatch,
                     participation=args.participation,
                     compression_ratio=args.compression_ratio,
+                    quantization_bits=args.quantization_bits,
                 )
                 with open(path, "w") as f:
                     json.dump(rec, f, indent=1)

@@ -4,9 +4,9 @@ train_step = ONE federated communication round lowered as a single jitted
 SPMD program on the production mesh, built by the unified round engine
 (`repro.core.engine.make_round`) for any `CommStrategy` — FedGDA-GT by
 default; baselines (local_sgda, sync_gda) and the scenario strategies
-(partial_gt, compressed_gt) share the same signature so the dry-run can
-compare their collective schedules directly.  Stateful strategies thread
-their state as an extra replicated step input.
+(partial_gt, compressed_gt, quantized_gt) share the same signature so the
+dry-run can compare their collective schedules directly.  Stateful
+strategies thread their state as an extra replicated step input.
 """
 from __future__ import annotations
 
@@ -109,6 +109,7 @@ def build_train_step(
         correction_dtype=_CORRECTION_DTYPES.get(cfg.correction_dtype),
         participation=cfg.participation,
         compression_ratio=cfg.compression_ratio,
+        quantization_bits=cfg.quantization_bits,
     )
     stateful = strategy.stateful
     rnd = make_round(

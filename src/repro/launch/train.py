@@ -1,12 +1,18 @@
 """End-to-end federated minimax training driver.
 
-Runs FedGDA-GT (or a baseline) over one of the assigned architectures on
-whatever devices exist (a host mesh locally; the production mesh on a real
-cluster), with synthetic heterogeneous federated data, metrics and
-checkpointing.
+Runs FedGDA-GT (or a baseline / scenario strategy — any
+`resolve_strategy` name: local_sgda, sync_gda, partial_gt, compressed_gt,
+quantized_gt) over one of the assigned architectures on whatever devices
+exist (a host mesh locally; the production mesh on a real cluster), with
+synthetic heterogeneous federated data, metrics and checkpointing.  The
+round comes from the unified engine (`make_round`), bitwise-identical to
+the legacy constructors for the legacy names (tests/test_engine_parity);
+stateful strategies (sampling RNG, error-feedback buffers) thread their
+state across rounds and into checkpoints.
 
     PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --reduced \
-        --rounds 50 --local-steps 8 --agents 4
+        --rounds 50 --local-steps 8 --agents 4 \
+        [--algorithm quantized_gt --quantization-bits 8]
 """
 from __future__ import annotations
 
@@ -19,9 +25,9 @@ import numpy as np
 
 from ..checkpoint import save_checkpoint
 from ..configs import get_config
-from ..core.fedgda_gt import make_fedgda_gt_round
-from ..core.local_sgda import make_local_sgda_round
+from ..core.engine import make_round
 from ..data import federated_token_batches
+from ..fed.strategies import resolve_strategy
 from ..models import init_params, num_params
 from ..problems.adversarial import (
     delta_projection,
@@ -42,10 +48,31 @@ def main() -> None:
     ap.add_argument("--eta", type=float, default=2e-3)
     ap.add_argument("--heterogeneity", type=int, default=7)
     ap.add_argument("--algorithm", default="fedgda_gt",
-                    choices=["fedgda_gt", "local_sgda"])
+                    help="any repro.fed.resolve_strategy name")
+    ap.add_argument("--participation", type=float, default=None,
+                    help="client fraction per round (partial_gt)")
+    ap.add_argument("--compression-ratio", type=float, default=None,
+                    help="kept fraction of sparsified corrections "
+                         "(compressed_gt / quantized_gt)")
+    ap.add_argument("--quantization-bits", type=int, default=None,
+                    help="stochastic-quantization bit-width "
+                         "(quantized_gt; >=32 disables)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
+
+    # resolve the strategy first: a bad --algorithm must fail before the
+    # expensive model/data setup below.  Only pass knobs the user set —
+    # unset flags must not override the registry defaults (e.g.
+    # compressed_gt's active 0.1 ratio)
+    knobs = {
+        "participation": args.participation,
+        "compression_ratio": args.compression_ratio,
+        "quantization_bits": args.quantization_bits,
+    }
+    strategy = resolve_strategy(
+        args.algorithm, **{k: v for k, v in knobs.items() if v is not None}
+    )
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -61,16 +88,12 @@ def main() -> None:
         args.seq_len, cfg.vocab_size, heterogeneity=args.heterogeneity,
     )
     loss = make_adversarial_loss(cfg, remat=False)
-    if args.algorithm == "fedgda_gt":
-        rnd = make_fedgda_gt_round(
-            loss, args.local_steps, args.eta, proj_y=delta_projection(1.0)
-        )
-    else:
-        rnd = make_local_sgda_round(
-            loss, args.local_steps, args.eta, args.eta,
-            proj_y=delta_projection(1.0),
-        )
-    rnd = jax.jit(rnd)
+    stateful = strategy.stateful
+    rnd = jax.jit(make_round(
+        loss, strategy, args.local_steps, args.eta,
+        proj_y=delta_projection(1.0), explicit_state=stateful,
+    ))
+    state = strategy.init_state(params, delta, args.agents) if stateful else None
 
     def global_loss(x, y):
         per = jax.vmap(loss, in_axes=(None, None, 0))(x, y, data)
@@ -79,14 +102,22 @@ def main() -> None:
     gl = jax.jit(global_loss)
     t0 = time.time()
     for t in range(args.rounds):
-        params, delta = rnd(params, delta, data)
+        if stateful:
+            params, delta, state = rnd(params, delta, data, state)
+        else:
+            params, delta = rnd(params, delta, data)
         if t % args.log_every == 0 or t == args.rounds - 1:
             lv = float(gl(params, delta))
             dn = float(jnp.linalg.norm(delta["delta"]))
             print(f"[round {t:4d}] loss={lv:.4f} |delta|={dn:.4f} "
                   f"({time.time()-t0:.1f}s)", flush=True)
         if args.ckpt_dir and (t + 1) % 50 == 0:
-            save_checkpoint(args.ckpt_dir, t + 1, {"x": params, "y": delta})
+            payload = {"x": params, "y": delta}
+            if state is not None:
+                # resuming without this replays RNG draws / zeroes the
+                # error-feedback buffers
+                payload["strategy_state"] = state
+            save_checkpoint(args.ckpt_dir, t + 1, payload)
     print("done.")
 
 

@@ -8,12 +8,18 @@ jax.config.update("jax_enable_x64", True)
 
 
 def pytest_configure(config):
-    # also declared in pytest.ini so `-m "not slow"` filtering is
-    # warning-free even when conftest isn't the one registering it
+    # also declared in pytest.ini so `-m "not slow"` / `-m kernel`
+    # filtering is warning-free even when conftest isn't the one
+    # registering them
     config.addinivalue_line(
         "markers",
         "slow: multi-minute system / arch-smoke tests; deselect with "
         '-m "not slow"',
+    )
+    config.addinivalue_line(
+        "markers",
+        "kernel: Pallas interpret-mode kernel suites; select with "
+        '-m kernel, deselect with -m "not kernel"',
     )
 
 

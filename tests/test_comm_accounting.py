@@ -17,6 +17,7 @@ from repro.fed import (
     GradientTracking,
     LocalOnly,
     PartialParticipation,
+    QuantizedGT,
     comm_table,
     resolve_strategy,
 )
@@ -112,6 +113,72 @@ class TestStrategyPayloads:
         ) <= 4 * _z(x, y)
 
 
+# ----------------------------------------------- quantized payloads
+class TestQuantizedPayloads:
+    def test_identity_configuration_prices_like_gradient_tracking(self, xy):
+        x, y = xy
+        assert QuantizedGT(bits=32, ratio=1.0).bytes_per_round(
+            x, y, K
+        ) == 4 * _z(x, y)
+        # bits >= 32 quantizes nothing: ratio alone reduces to CompressedGT
+        assert QuantizedGT(bits=32, ratio=0.5).bytes_per_round(
+            x, y, K
+        ) == CompressedGT(compression_ratio=0.5).bytes_per_round(x, y, K)
+
+    def test_bit_width_scaling(self, xy):
+        x, y = xy
+        costs = [
+            QuantizedGT(bits=b).bytes_per_round(x, y, K) for b in (2, 4, 8, 16)
+        ]
+        assert costs == sorted(costs) and costs[0] < costs[-1]
+        # exact model, dense ratio: dense models + ceil(n*bits/8) values
+        # + one 4-byte fp32 scale per leaf
+        z = _z(x, y)
+        for b, cost in zip((2, 4, 8, 16), costs):
+            expected = 2 * z + 2 * (
+                (int(np.ceil(P * b / 8)) + 4) + (int(np.ceil(Q * b / 8)) + 4)
+            )
+            assert cost == expected
+
+    def test_scale_metadata_overhead_is_priced(self, xy):
+        x, y = xy
+        # 64-bit values at 8 bits: exactly 1/8 the value bytes + 4 bytes
+        # of scale per leaf — the metadata shows up in the exact model
+        got = QuantizedGT(bits=8).bytes_per_round(x, y, K)
+        no_scale = 2 * _z(x, y) + 2 * (P + Q)
+        assert got == no_scale + 2 * 2 * 4
+
+    def test_sparsified_quantized_composition(self, xy):
+        x, y = xy
+        # ratio=0.1, bits=8: k values at 1 byte + 4-byte index each
+        # + 4-byte scale per leaf
+        k_x = int(np.ceil(0.1 * P))
+        k_y = int(np.ceil(0.1 * Q))
+        expected = 2 * _z(x, y) + 2 * (
+            (k_x * (1 + 4) + 4) + (k_y * (1 + 4) + 4)
+        )
+        assert QuantizedGT(bits=8, ratio=0.1).bytes_per_round(
+            x, y, K
+        ) == expected
+
+    def test_monotonicity_quantized_leq_sparsified_leq_dense(self, xy):
+        x, y = xy
+        dense = GradientTracking().bytes_per_round(x, y, K)
+        for r in (0.05, 0.1, 0.5, 1.0):
+            sparse = CompressedGT(compression_ratio=r).bytes_per_round(x, y, K)
+            quant = QuantizedGT(bits=8, ratio=r).bytes_per_round(x, y, K)
+            assert quant <= sparse <= dense
+
+    def test_quantized_payload_never_exceeds_sparse_or_dense(self, xy):
+        x, y = xy
+        # adversarial corner: tiny leaves where per-leaf scale overhead
+        # could dominate — the model clamps at the cheaper encodings
+        x2, y2 = jnp.zeros((2,)), jnp.zeros((1,))
+        q = QuantizedGT(bits=16, ratio=0.9).bytes_per_round(x2, y2, K)
+        s = CompressedGT(compression_ratio=0.9).bytes_per_round(x2, y2, K)
+        assert q <= s <= 4 * _z(x2, y2)
+
+
 # ----------------------------------------------------------- comm table
 class TestCommTable:
     def test_string_and_strategy_keys(self, xy):
@@ -142,6 +209,11 @@ class TestCommTable:
         assert isinstance(pp, PartialParticipation) and pp.participation == 0.3
         cg = resolve_strategy("compressed_gt", compression_ratio=0.2)
         assert isinstance(cg, CompressedGT) and cg.compression_ratio == 0.2
+        qg = resolve_strategy(
+            "quantized_gt", quantization_bits=4, compression_ratio=0.5
+        )
+        assert isinstance(qg, QuantizedGT) and qg.bits == 4 and qg.ratio == 0.5
+        assert resolve_strategy("quantized_gt").bits == 8  # active by default
         s = GradientTracking()
         assert resolve_strategy(s) is s
         with pytest.raises(ValueError):

@@ -1,0 +1,250 @@
+"""Fused compress-correction kernel conformance (deliverable: ISSUE 2).
+
+Three layers of agreement, all on CPU via interpret=True:
+
+  * kernel vs oracle — `compress_correction_2d` (Pallas) against
+    `ref.compress_correction_ref` (pure jnp) on aligned shapes, fp32 /
+    bf16 / fp64 corrections, topk / randk, with and without feedback
+    and quantization: <= 1e-6 (the two paths are the same math on the
+    same uniform draws, so they agree to the last bit in practice);
+  * dispatcher — `compress_leaf` takes the fused path exactly on
+    lane-aligned 2D leaves and the oracle otherwise, with identical
+    results either way;
+  * strategy — `CompressedGT` / `QuantizedGT` with `use_kernel=True`
+    match the pure-jnp fallback on odd pytrees mixing aligned and
+    unaligned leaves (to ~1 ulp: the kernel compiles as one XLA unit,
+    whose fusion may round differently than the eager per-op path).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fed import CompressedGT, QuantizedGT
+from repro.kernels import (
+    compress_correction_2d,
+    compress_leaf,
+    fusable_leaf,
+    ref,
+)
+
+pytestmark = pytest.mark.kernel  # Pallas interpret-mode suite
+
+F32, F64, BF16 = jnp.float32, jnp.float64, jnp.bfloat16
+ALIGNED = [(1, 128), (4, 128), (6, 256), (3, 384)]
+UNALIGNED = [(4, 100), (5, 37), (2, 130)]
+
+
+def _inputs(shape, dtype, seed=0):
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed), 4)
+    c = jax.random.normal(k1, shape, dtype)
+    e = (0.1 * jax.random.normal(k2, shape)).astype(dtype)
+    u_sel = jax.random.uniform(k3, shape)
+    u_rnd = jax.random.uniform(k4, shape)
+    return c, e, u_sel, u_rnd
+
+
+def _assert_pair_close(got, want, atol=1e-6):
+    for g, w, tag in (*zip(got, want, ("chat", "resid")),):
+        np.testing.assert_allclose(
+            np.asarray(g, np.float64),
+            np.asarray(w, np.float64),
+            rtol=0,
+            atol=atol,
+            err_msg=tag,
+        )
+
+
+# ------------------------------------------------------- kernel vs oracle
+class TestKernelMatchesReference:
+    @pytest.mark.parametrize("shape", ALIGNED)
+    @pytest.mark.parametrize("dtype", [F32, BF16])
+    @pytest.mark.parametrize("mode", ["topk", "randk"])
+    @pytest.mark.parametrize("bits", [32, 8, 4])
+    def test_matches_ref(self, shape, dtype, mode, bits):
+        c, e, u_sel, u_rnd = _inputs(shape, dtype)
+        k = max(1, shape[1] // 3)
+        got = compress_correction_2d(
+            c, e, u_sel, u_rnd, k=k, bits=bits, mode=mode, interpret=True
+        )
+        want = ref.compress_correction_ref(
+            c, e, u_sel, u_rnd, k=k, bits=bits, mode=mode
+        )
+        assert got[0].dtype == dtype and got[1].dtype == dtype
+        _assert_pair_close(got, want)
+
+    @pytest.mark.parametrize("shape", [(4, 128), (6, 256)])
+    def test_matches_ref_float64(self, shape):
+        """x64 corrections (the conftest default for convergence tests)."""
+        c, e, u_sel, u_rnd = _inputs(shape, F64)
+        got = compress_correction_2d(
+            c, e, u_sel, u_rnd, k=shape[1] // 4, bits=8, interpret=True
+        )
+        want = ref.compress_correction_ref(
+            c, e, u_sel, u_rnd, k=shape[1] // 4, bits=8
+        )
+        _assert_pair_close(got, want, atol=1e-12)
+
+    def test_float8_correction_dtype(self):
+        """The beyond-paper fp8 correction storage must flow through the
+        compressor (regression: promote_types has no float8 path, so the
+        compute dtype is chosen explicitly)."""
+        c, e, u_sel, u_rnd = _inputs((4, 128), F32, seed=9)
+        c8 = c.astype(jnp.float8_e4m3fn)
+        e8 = e.astype(jnp.float8_e4m3fn)
+        got = compress_correction_2d(
+            c8, e8, u_sel, u_rnd, k=32, bits=8, interpret=True
+        )
+        want = ref.compress_correction_ref(c8, e8, u_sel, u_rnd, k=32, bits=8)
+        assert got[0].dtype == jnp.float8_e4m3fn
+        _assert_pair_close(got, want, atol=0)
+        # and end-to-end through a strategy with correction_dtype=fp8
+        from repro.fed import resolve_strategy
+
+        s = resolve_strategy(
+            "compressed_gt",
+            compression_ratio=0.5,
+            correction_dtype=jnp.float8_e4m3fn,
+        )
+        m = 3
+        cx = jnp.ones((m, 8), jnp.float8_e4m3fn)
+        cy = jnp.ones((m, 2), jnp.float8_e4m3fn)
+        state = s.init_state(jnp.zeros(8), jnp.zeros(2), m)
+        cx2, cy2, _ = s.transform_correction(cx, cy, state)
+        assert cx2.dtype == jnp.float8_e4m3fn
+
+    @pytest.mark.parametrize("bits", [32, 8])
+    def test_no_feedback_path(self, bits):
+        """e=None: chat matches; the (ignored) residual equals ceff-chat."""
+        c, _, u_sel, u_rnd = _inputs((4, 256), F32, seed=1)
+        k = 64
+        got = compress_correction_2d(
+            c, None, u_sel, u_rnd, k=k, bits=bits, interpret=True
+        )
+        want = ref.compress_correction_ref(c, None, u_sel, u_rnd, k=k, bits=bits)
+        _assert_pair_close(got, want)
+
+    def test_exactly_k_kept_under_ties(self):
+        """Tied magnitudes (incl. all-zero rows) keep exactly k entries —
+        the property that keeps bytes_per_round honest."""
+        c = jnp.concatenate(
+            [jnp.ones((1, 128)), jnp.zeros((1, 128)), -jnp.ones((1, 128))]
+        )
+        got, _ = compress_correction_2d(c, None, None, None, k=32, interpret=True)
+        want, _ = ref.compress_correction_ref(c, None, None, None, k=32, bits=32)
+        kept = np.asarray(jnp.sum(got != 0, axis=-1))
+        np.testing.assert_array_equal(kept, [32, 0, 32])
+        _assert_pair_close((got,), (want,))
+
+    def test_feedback_residual_closes_the_books(self):
+        """chat + resid == c + e: nothing is lost, only deferred."""
+        c, e, u_sel, u_rnd = _inputs((6, 256), F32, seed=2)
+        chat, resid = compress_correction_2d(
+            c, e, u_sel, u_rnd, k=50, bits=4, mode="topk", interpret=True
+        )
+        np.testing.assert_allclose(
+            np.asarray(chat + resid), np.asarray(c + e), rtol=0, atol=1e-6
+        )
+
+    def test_block_rows_invariance(self):
+        """The row tiling must not change the result."""
+        c, e, u_sel, u_rnd = _inputs((8, 256), F32, seed=3)
+        a = compress_correction_2d(
+            c, e, u_sel, u_rnd, k=60, bits=8, block_rows=8, interpret=True
+        )
+        b = compress_correction_2d(
+            c, e, u_sel, u_rnd, k=60, bits=8, block_rows=2, interpret=True
+        )
+        _assert_pair_close(a, b, atol=0)
+
+
+# ----------------------------------------------------------- dispatcher
+class TestDispatcher:
+    @pytest.mark.parametrize("shape", ALIGNED)
+    def test_aligned_leaves_are_fusable(self, shape):
+        assert fusable_leaf(jnp.zeros(shape))
+
+    @pytest.mark.parametrize("shape", UNALIGNED)
+    def test_unaligned_leaves_fall_back(self, shape):
+        assert not fusable_leaf(jnp.zeros(shape))
+
+    @pytest.mark.parametrize("shape", ALIGNED + UNALIGNED)
+    @pytest.mark.parametrize("bits", [32, 8])
+    def test_dispatch_never_changes_the_result(self, shape, bits):
+        c, e, u_sel, u_rnd = _inputs(shape, F32, seed=4)
+        k = max(1, shape[1] // 3)
+        kw = dict(k=k, bits=bits, mode="topk")
+        fused = compress_leaf(c, e, u_sel, u_rnd, use_kernel=True, **kw)
+        plain = compress_leaf(c, e, u_sel, u_rnd, use_kernel=False, **kw)
+        _assert_pair_close(fused, plain)
+
+
+# ------------------------------------------------- strategy conformance
+def _tree(m, dtype):
+    """Odd pytree: aligned 2D, unaligned 2D, >2D, and tiny leaves."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    mk = lambda key, s: jax.random.normal(key, (m,) + s).astype(dtype)
+    return {
+        "aligned": mk(ks[0], (256,)),
+        "ragged": mk(ks[1], (37,)),
+        "matrix": mk(ks[2], (4, 32)),  # flattens to (m, 128): aligned
+        "tiny": mk(ks[3], (3,)),
+    }
+
+
+class TestStrategyConformance:
+    @pytest.mark.parametrize("dtype", [F32, BF16])
+    @pytest.mark.parametrize(
+        "mk",
+        [
+            lambda uk: CompressedGT(compression_ratio=0.25, use_kernel=uk),
+            lambda uk: QuantizedGT(bits=8, use_kernel=uk),
+            lambda uk: QuantizedGT(
+                bits=4, ratio=0.5, mode="randk", use_kernel=uk
+            ),
+        ],
+        ids=["compressed_topk", "quantized_dense", "quantized_randk"],
+    )
+    def test_use_kernel_matches_fallback_on_odd_trees(self, dtype, mk, rng):
+        m = 4
+        cx = _tree(m, dtype)
+        cy = {"delta": jax.random.normal(rng, (m, 128)).astype(dtype)}
+        out = {}
+        for uk in (True, False):
+            s = mk(uk)
+            state = s.init_state(
+                jax.tree.map(lambda u: u[0], cx),
+                jax.tree.map(lambda u: u[0], cy),
+                m,
+            )
+            out[uk] = s.transform_correction(cx, cy, state)
+        atol = 4e-2 if dtype == BF16 else 1e-6  # ~1-2 ulp at |c| <= ~4
+        for a, b in zip(jax.tree.leaves(out[True]), jax.tree.leaves(out[False])):
+            assert a.dtype == b.dtype and a.shape == b.shape
+            np.testing.assert_allclose(
+                np.asarray(a, np.float64), np.asarray(b, np.float64),
+                rtol=0, atol=atol,
+            )
+
+    def test_transform_preserves_structure_and_dtype(self):
+        m = 3
+        cx = _tree(m, F32)
+        cy = {"d": jnp.ones((m, 5), F32)}
+        s = QuantizedGT(bits=8, ratio=0.5, use_kernel=True)
+        state = s.init_state(
+            jax.tree.map(lambda u: u[0], cx),
+            jax.tree.map(lambda u: u[0], cy),
+            m,
+        )
+        cx2, cy2, state2 = s.transform_correction(cx, cy, state)
+        assert jax.tree.structure(cx2) == jax.tree.structure(cx)
+        assert jax.tree.structure(cy2) == jax.tree.structure(cy)
+        for a, b in zip(jax.tree.leaves(cx2), jax.tree.leaves(cx)):
+            assert a.shape == b.shape and a.dtype == b.dtype
+        # the RNG key advanced and feedback buffers took the residual
+        assert not np.array_equal(
+            np.asarray(state2["key"]), np.asarray(state["key"])
+        )
+        assert any(
+            float(jnp.max(jnp.abs(u))) > 0 for u in jax.tree.leaves(state2["ex"])
+        )

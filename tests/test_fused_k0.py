@@ -10,6 +10,9 @@ import numpy as np
 import pytest
 
 from repro.core import make_fedgda_gt_round
+
+pytestmark = pytest.mark.kernel  # fused-update suite, same selection knob
+# as the Pallas interpret suites (test_kernels / test_compress_kernel)
 from repro.core.types import (
     grad_xy,
     tree_broadcast_agents,

@@ -15,6 +15,8 @@ from repro.kernels import (
     ssm_scan,
 )
 
+pytestmark = pytest.mark.kernel  # Pallas interpret-mode suite
+
 F32, BF16 = jnp.float32, jnp.bfloat16
 
 

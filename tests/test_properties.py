@@ -11,6 +11,9 @@ Invariants covered:
   * fixed-point algebra: the Appendix-C closed form is a fixed point of the
     round map for any K, eta in the stable range
   * communication accounting: positivity and the paper's orderings
+  * correction compression (CompressedGT / QuantizedGT): pytree
+    structure/shape/dtype preservation, sent + residual == raw
+    correction, and exact identity in the bits -> inf / ratio -> 1 limits
 """
 import jax
 import jax.numpy as jnp
@@ -37,6 +40,7 @@ from repro.core import (
     tree_mean_over_agents,
     tree_sq_dist,
 )
+from repro.fed import CompressedGT, QuantizedGT
 from repro.problems import make_appendix_c_problem, make_quadratic_problem
 
 SETTINGS = dict(max_examples=25, deadline=None)
@@ -217,6 +221,99 @@ class TestAppendixCFixedPoint:
         fx, fy = appendix_c_fixed_point(1, eta, eta)
         np.testing.assert_allclose(fx, 3.3, rtol=1e-9)
         np.testing.assert_allclose(fy, 3.3, rtol=1e-9)
+
+
+# ------------------------------------------- compression invariants
+def _correction_trees(seed, m, d1, d2):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    cx = {
+        "a": jax.random.normal(k1, (m, d1)),
+        "b": jax.random.normal(k2, (m, 2, d2)),
+    }
+    cy = {"d": jax.random.normal(k3, (m, d2))}
+    return cx, cy
+
+
+def _x0(tree):
+    return jax.tree.map(lambda u: u[0], tree)
+
+
+class TestCompressionInvariants:
+    @given(
+        seed=st.integers(0, 10_000),
+        ratio=st.floats(0.05, 1.0),
+        bits=st.sampled_from([2, 4, 8, 32]),
+        mode=st.sampled_from(["topk", "randk"]),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_transform_preserves_structure_shape_dtype(
+        self, seed, ratio, bits, mode
+    ):
+        m = 3
+        cx, cy = _correction_trees(seed, m, 7, 4)
+        s = QuantizedGT(bits=bits, ratio=ratio, mode=mode, seed=seed)
+        state = s.init_state(_x0(cx), _x0(cy), m)
+        cx2, cy2, _ = s.transform_correction(cx, cy, state)
+        assert jax.tree.structure(cx2) == jax.tree.structure(cx)
+        assert jax.tree.structure(cy2) == jax.tree.structure(cy)
+        for a, b in zip(
+            jax.tree.leaves((cx2, cy2)), jax.tree.leaves((cx, cy))
+        ):
+            assert a.shape == b.shape and a.dtype == b.dtype
+
+    @given(
+        seed=st.integers(0, 10_000),
+        ratio=st.floats(0.05, 0.9),
+        bits=st.sampled_from([4, 8, 32]),
+        mode=st.sampled_from(["topk", "randk"]),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_sent_plus_residual_is_raw_correction(self, seed, ratio, bits, mode):
+        """With error feedback, what compression drops is exactly what
+        lands in the feedback buffer: chat + e' == c + e (here e = 0)."""
+        m = 3
+        cx, cy = _correction_trees(seed, m, 9, 5)
+        s = QuantizedGT(
+            bits=bits, ratio=ratio, mode=mode, seed=seed, error_feedback=True
+        )
+        state = s.init_state(_x0(cx), _x0(cy), m)
+        cx2, cy2, state2 = s.transform_correction(cx, cy, state)
+        for sent, resid, raw in (
+            *zip(
+                jax.tree.leaves(cx2),
+                jax.tree.leaves(state2["ex"]),
+                jax.tree.leaves(cx),
+            ),
+            *zip(
+                jax.tree.leaves(cy2),
+                jax.tree.leaves(state2["ey"]),
+                jax.tree.leaves(cy),
+            ),
+        ):
+            np.testing.assert_allclose(
+                np.asarray(sent + resid), np.asarray(raw), rtol=0, atol=1e-10
+            )
+
+    @given(seed=st.integers(0, 10_000))
+    @settings(max_examples=10, deadline=None)
+    def test_identity_limits_are_exact(self, seed):
+        """bits -> inf (>= 32) and ratio -> 1: the transform IS the
+        identity — arrays pass through unchanged and no state is kept."""
+        m = 4
+        cx, cy = _correction_trees(seed, m, 6, 3)
+        for s in (
+            QuantizedGT(bits=32, ratio=1.0, seed=seed),
+            CompressedGT(compression_ratio=1.0, seed=seed),
+        ):
+            assert not s.stateful and s.exact_correction
+            state = s.init_state(_x0(cx), _x0(cy), m)
+            assert state == {}
+            cx2, cy2, state2 = s.transform_correction(cx, cy, state)
+            for a, b in zip(
+                jax.tree.leaves((cx2, cy2)), jax.tree.leaves((cx, cy))
+            ):
+                assert a is b  # elided at trace time, not just allclose
+            assert state2 == {}
 
 
 # ---------------------------------------------------- comm accounting

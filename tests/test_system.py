@@ -118,6 +118,40 @@ class TestStepBuildersOnHostMesh:
                 bool(jnp.all(jnp.isfinite(u))) for u in jax.tree.leaves(x1)
             )
 
+    def test_quantized_train_step_threads_state(self):
+        """quantized_gt rides the same stateful path as partial_gt /
+        compressed_gt: rounding RNG + error-feedback buffers as a 4th
+        replicated step input."""
+        import dataclasses as _dc
+
+        cfg = _dc.replace(
+            get_config("granite-8b").reduced(), quantization_bits=8
+        )
+        try:
+            mesh = make_host_mesh(1, 1)
+        except AttributeError as e:  # pragma: no cover
+            pytest.skip(f"host mesh unavailable on this jax: {e}")
+        shape = ShapeConfig("tiny_train", seq_len=32, global_batch=2, kind="train")
+        with jax.set_mesh(mesh):
+            jitted, specs_fn = build_train_step(
+                cfg, mesh, algorithm="quantized_gt", num_local_steps=2, dtype=DT
+            )
+            sp = specs_fn(shape)
+            assert "state" in sp  # stateful: rounding RNG (+ EF buffers)
+            x = init_params(jax.random.PRNGKey(0), cfg, DT)
+            y = init_delta(cfg, DT)
+            batch = jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype), sp["batch"]
+            )
+            state = jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype), sp["state"]
+            )
+            x1, y1, state1 = jitted(shape)(x, y, batch, state)
+            assert all(
+                bool(jnp.all(jnp.isfinite(u))) for u in jax.tree.leaves(x1)
+            )
+            assert jax.tree.structure(state1) == jax.tree.structure(state)
+
     def test_prefill_and_decode_execute(self):
         cfg = get_config("starcoder2-7b").reduced()
         mesh = make_host_mesh(1, 1)
