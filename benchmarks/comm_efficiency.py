@@ -6,14 +6,25 @@ centralized GDA (communicates every step), Local SGDA, FedGDA-GT, and the
 scenario strategies (client sampling, sparsified corrections with error
 feedback, stochastically quantized corrections at 8 bit and at 4 bit
 composed with top-10% sparsification).  Per-round payloads are
-strategy-derived (`CommStrategy.bytes_per_round`): FedGDA-GT pays 2x
-Local SGDA per round but reaches eps in O(log 1/eps) rounds; Local SGDA
-never reaches tight eps at all (bias floor); the compressed / partial /
-quantized variants land in between — cheaper rounds, noise-floored
-accuracy (the quantizer is unbiased, so its floor is the tightest)."""
+strategy-derived (`CommStrategy.bytes_per_round`), and every row now also
+reports the MEASURED per-round bytes — the actual packed wire buffers of
+`repro.fed.transport` (the compressed strategies run with
+wire_transport=True, so the traffic the table describes is the traffic
+the round moves).  FedGDA-GT pays 2x Local SGDA per round but reaches eps
+in O(log 1/eps) rounds; Local SGDA never reaches tight eps at all (bias
+floor); the compressed / partial / quantized variants land in between —
+cheaper rounds, noise-floored accuracy (the quantizer is unbiased, so its
+floor is the tightest).
+
+`--check` skips the convergence runs and only audits the accounting:
+non-zero exit when measured packed payload bytes (headers excluded —
+they are fixed and accounted separately) exceed priced bytes by > 5%,
+so price/wire drift fails CI instead of shipping."""
 from __future__ import annotations
 
+import argparse
 import math
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -35,29 +46,69 @@ from .common import emit
 
 ETA, K, T = 1e-4, 20, 3000
 EPS = 1e-8
+DIM = 50
+CHECK_TOL = 0.05  # measured may exceed priced by at most 5% (headers)
+
+
+def _runs():
+    return {
+        "gda": (FullSync(), 1),
+        "local_sgda": (LocalOnly(), K),
+        "fedgda_gt": (GradientTracking(), K),
+        "partial_gt_50": (PartialParticipation(participation=0.5, seed=0), K),
+        "compressed_gt_10": (
+            CompressedGT(compression_ratio=0.1, wire_transport=True),
+            K,
+        ),
+        "quantized_gt_8bit": (QuantizedGT(bits=8, wire_transport=True), K),
+        "quantized_gt_4bit_top10": (
+            QuantizedGT(bits=4, ratio=0.1, wire_transport=True),
+            K,
+        ),
+    }
+
+
+def check(tol: float = CHECK_TOL) -> int:
+    """Audit priced vs measured bytes without running any training.
+    Returns the number of drifting strategies (0 = accounting holds).
+    The probe excludes the fixed per-leaf wire headers, so the whole
+    `tol` is real drift margin — a shrinking model cannot eat the gate
+    with header share, and real pricing drift cannot hide under it."""
+    from repro.fed import measured_bytes_per_round
+
+    jax.config.update("jax_enable_x64", True)  # the model run() audits
+    x0 = jnp.zeros(DIM)
+    bad = 0
+    for name, (strategy, _) in _runs().items():
+        priced = strategy.bytes_per_round(x0, x0, K)
+        payload = measured_bytes_per_round(
+            strategy, x0, x0, K, include_headers=False
+        )
+        drift = payload / priced - 1.0
+        # two-sided: underpricing (measured > priced) AND overpricing
+        # (priced > measured) both count as accounting drift
+        ok = abs(drift) <= tol
+        bad += not ok
+        print(
+            f"[{'ok' if ok else 'DRIFT'}] {name}: priced={priced} "
+            f"measured_payload={payload} ({drift:+.2%})"
+        )
+    return bad
 
 
 def run(rows=None):
     jax.config.update("jax_enable_x64", True)
     prob = make_quadratic_problem(
-        jax.random.PRNGKey(0), dim=50, num_samples=500, num_agents=20
+        jax.random.PRNGKey(0), dim=DIM, num_samples=500, num_agents=20
     )
     xs, ys = quadratic_minimax_point(prob)
 
     def metric(x, y):
         return {"gap": tree_sq_dist(x, xs) + tree_sq_dist(y, ys)}
 
-    x0 = jnp.zeros(50)
+    x0 = jnp.zeros(DIM)
     m = jax.tree.leaves(prob.agent_data)[0].shape[0]
-    runs = {
-        "gda": (FullSync(), 1),
-        "local_sgda": (LocalOnly(), K),
-        "fedgda_gt": (GradientTracking(), K),
-        "partial_gt_50": (PartialParticipation(participation=0.5, seed=0), K),
-        "compressed_gt_10": (CompressedGT(compression_ratio=0.1), K),
-        "quantized_gt_8bit": (QuantizedGT(bits=8), K),
-        "quantized_gt_4bit_top10": (QuantizedGT(bits=4, ratio=0.1), K),
-    }
+    runs = _runs()
     rounds_to_eps = {}
     strategies = {}
     for name, (strategy, k) in runs.items():
@@ -75,24 +126,44 @@ def run(rows=None):
 
     table = comm_table(x0, x0, K, rounds_to_eps)
     rows = [] if rows is None else rows
-    # comm_table preserves insertion order and suffixes duplicate names
-    # (two quantized_gt configs), so pair rows by order, not by name
+    # comm_table preserves insertion order and keys colliding base names
+    # by their full knob signature (two quantized_gt configs), so pair
+    # rows by order, not by name
     for (strategy, name), entry in zip(strategies.items(), table.values()):
         rows.append(
             {
                 "algorithm": name,
                 "bytes_per_round": int(entry["bytes_per_round"]),
+                "measured_bytes_per_round": int(
+                    entry["measured_bytes_per_round"]
+                ),
                 f"rounds_to_{EPS:g}": entry["rounds_to_eps"],
                 "total_bytes": entry["total_bytes"],
             }
         )
     emit(
         rows,
-        ["algorithm", "bytes_per_round", f"rounds_to_{EPS:g}", "total_bytes"],
+        [
+            "algorithm",
+            "bytes_per_round",
+            "measured_bytes_per_round",
+            f"rounds_to_{EPS:g}",
+            "total_bytes",
+        ],
         f"communication to reach gap<={EPS:g} (quadratic game, K={K})",
     )
     return rows
 
 
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="audit measured packed bytes against the analytic price "
+        f"(> {CHECK_TOL:.0%} drift exits non-zero); skips training",
+    )
+    args = ap.parse_args()
+    if args.check:
+        sys.exit(1 if check() else 0)
     run()

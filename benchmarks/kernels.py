@@ -14,6 +14,7 @@ from repro.kernels import (
     compress_correction_2d,
     flash_attention,
     gt_update_2d,
+    pack_payload_2d,
     ref,
     ssm_scan,
 )
@@ -52,6 +53,23 @@ def run(rows=None):
     rows.append({
         "kernel": "compress_correction(20x4096 f32, top-10% 8-bit+EF)",
         "max_abs_err_vs_ref": f"{float(max(jnp.max(jnp.abs(g - w)) for g, w in zip(got, want))):.2e}",
+        "ref_us_per_call": f"{timed(lambda: rfn(c, e, ur)[0].block_until_ready()):.0f}",
+    })
+
+    # pack_payload: same leaf, packed to the actual wire format
+    got = pack_payload_2d(
+        c, e, None, ur, k=kk, bits=8, encoding="quant", interpret=True
+    )
+    want = ref.pack_payload_ref(c, e, None, ur, k=kk, bits=8, encoding="quant")
+    rfn = jax.jit(
+        lambda a, b, u: ref.pack_payload_ref(
+            a, b, None, u, k=kk, bits=8, encoding="quant"
+        )
+    )
+    rfn(c, e, ur)[0].block_until_ready()
+    rows.append({
+        "kernel": "pack_payload(20x4096 f32, top-10% 8-bit, uint32 words)",
+        "max_abs_err_vs_ref": f"{max(float(np.max(np.abs(np.asarray(g, np.float64) - np.asarray(w, np.float64)))) for g, w in zip(got, want)):.2e}",
         "ref_us_per_call": f"{timed(lambda: rfn(c, e, ur)[0].block_until_ready()):.0f}",
     })
 

@@ -64,11 +64,16 @@ def main() -> None:
         "FedGDA-GT   K=20  50% client sampling": (
             PartialParticipation(participation=0.5, seed=0), K,
         ),
+        # wire_transport: the corrections are really encoded as packed
+        # (value, index, scale) payloads and decoded server-side — same
+        # iterates bit for bit, payload bytes matching bytes_per_round
         "FedGDA-GT   K=20  top-10% corrections + error feedback": (
-            CompressedGT(compression_ratio=0.1, mode="topk"), K,
+            CompressedGT(
+                compression_ratio=0.1, mode="topk", wire_transport=True
+            ), K,
         ),
         "FedGDA-GT   K=20  8-bit quantized corrections (unbiased + EF)": (
-            QuantizedGT(bits=8, seed=0), K,
+            QuantizedGT(bits=8, seed=0, wire_transport=True), K,
         ),
     }
     x0 = jnp.zeros(50)

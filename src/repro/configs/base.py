@@ -56,6 +56,11 @@ class ModelConfig:
     participation: float = 1.0
     compression_ratio: float = 1.0
     quantization_bits: int = 32
+    # encode compressed corrections as REAL packed (value, index, scale)
+    # payloads (repro.fed.transport) instead of dense masked trees —
+    # identical iterates, packed payload bytes matching bytes_per_round
+    # (the multi-host collective over packed buffers is a roadmap item)
+    wire_transport: bool = False
     # shape support
     supports_decode: bool = True
     supports_long_context: bool = False

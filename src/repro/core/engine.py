@@ -153,6 +153,15 @@ def make_round(
                 cx = jax.tree.map(corr, gbar_x, g0.gx)
                 cy = jax.tree.map(corr, gbar_y, g0.gy)
                 cx, cy, state = strategy.transform_correction(cx, cy, state)
+                # wire-transport strategies hand back PACKED payloads
+                # (repro.fed.transport.PackedTree — duck-typed on the
+                # `decode` hook to keep the engine import-decoupled):
+                # the server gathers the packed buffers and scatter-adds
+                # them back to dense corrections before the local steps
+                if hasattr(cx, "decode"):
+                    cx = cx.decode()
+                if hasattr(cy, "decode"):
+                    cy = cy.decode()
                 fused = bool(strategy.exact_correction)
             elif use_corr:
                 # m == 1: the correction is identically zero and elided

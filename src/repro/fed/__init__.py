@@ -10,6 +10,16 @@ from .strategies import (
     QuantizedGT,
     resolve_strategy,
 )
+from .transport import (
+    HEADER_BYTES,
+    LeafPayload,
+    LeafSpec,
+    PackedTree,
+    decode_leaf,
+    encode_leaf,
+    measured_bytes_per_round,
+    wire_header_overhead,
+)
 
 __all__ = [
     "FederatedRunner",
@@ -23,4 +33,12 @@ __all__ = [
     "PartialParticipation",
     "QuantizedGT",
     "resolve_strategy",
+    "HEADER_BYTES",
+    "LeafPayload",
+    "LeafSpec",
+    "PackedTree",
+    "decode_leaf",
+    "encode_leaf",
+    "measured_bytes_per_round",
+    "wire_header_overhead",
 ]

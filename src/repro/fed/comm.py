@@ -5,18 +5,63 @@ Bytes exchanged between ONE agent and the server to reach a target accuracy:
   O(log 1/eps) rounds instead of O(1/eps) — this table quantifies the paper's
   headline claim.  Per-round payloads are strategy-derived
   (`CommStrategy.bytes_per_round`), so compressed / partially-participating
-  variants are priced by the same table.
+  variants are priced by the same table — and every row also carries the
+  MEASURED per-round bytes (`transport.measured_bytes_per_round`, probing
+  the actual packed wire buffers), so analytic and empirical accounting are
+  compared on every run.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
+from collections import Counter
 from typing import Any, Dict
 
-import jax
-
 from .strategies import CommStrategy, resolve_strategy
+from .transport import measured_bytes_per_round
 
 Pytree = Any
+
+
+def knob_signature(strategy: CommStrategy, fields=None) -> str:
+    """Deterministic rendering of a strategy's hyperparameter knobs
+    (dataclass fields in declaration order) — the collision-proof row
+    key for `comm_table`.  `fields` restricts to a subset of field
+    names; by default every non-default knob is rendered, so keys stay
+    short and stable when new fields grow onto the dataclasses."""
+    if not dataclasses.is_dataclass(strategy):
+        return repr(strategy)
+    parts = []
+    for f in dataclasses.fields(strategy):
+        v = getattr(strategy, f.name)
+        if fields is not None:
+            if f.name not in fields:
+                continue
+        elif f.default is not dataclasses.MISSING and v == f.default:
+            continue
+        parts.append(f"{f.name}={v!r}")
+    return ",".join(parts)
+
+
+def _collision_fields(strategies) -> set:
+    """Field names that disambiguate a group of same-class strategies:
+    anything set away from its default on any member, plus anything that
+    differs across the group (covers members that only differ in a
+    knob whose value on one of them IS the default)."""
+    names = set()
+    for s in strategies:
+        if not dataclasses.is_dataclass(s):
+            continue
+        for f in dataclasses.fields(s):
+            v = getattr(s, f.name)
+            if f.default is dataclasses.MISSING or v != f.default:
+                names.add(f.name)
+            elif any(
+                dataclasses.is_dataclass(o) and getattr(o, f.name, v) != v
+                for o in strategies
+            ):
+                names.add(f.name)
+    return names
 
 
 def comm_table(
@@ -24,19 +69,45 @@ def comm_table(
 ) -> Dict[str, Dict[str, float]]:
     """rounds_to_eps: measured rounds to reach the target per algorithm
     (math.inf if never reached), keyed by legacy algorithm name or by a
-    `CommStrategy` instance.  Returns per-algorithm bytes/round and total
-    bytes to target, keyed by name."""
-    out = {}
+    `CommStrategy` instance.  Returns per-algorithm bytes/round (priced
+    AND measured) and total bytes to target, keyed by name.
+
+    Legacy STRING keys always keep their plain name (the documented
+    contract — `table["fedgda_gt"]` works whatever else is in the dict).
+    Strategy-instance entries whose base name collides are keyed by
+    their distinguishing knob signature — deterministic in the knobs
+    themselves, independent of insertion order (the old `name#k`
+    suffixing numbered rows by arrival, so reordering the input dict
+    silently relabeled them).  Entries indistinguishable even by knobs
+    get a `+` suffix."""
+    resolved = []
     for algo, rounds in rounds_to_eps.items():
         strategy = resolve_strategy(algo)
+        base = algo if isinstance(algo, str) else strategy.name
+        resolved.append((base, isinstance(algo, str), strategy, rounds))
+    counts = Counter(base for base, _, _, _ in resolved)
+    keys = {
+        b: _collision_fields([s for bb, _, s, _ in resolved if bb == b])
+        for b, n in counts.items()
+        if n > 1
+    }
+    out = {}
+    for base, is_str, strategy, rounds in resolved:
+        name = base
+        if counts[base] > 1 and not is_str:
+            sig = knob_signature(strategy, keys[base])
+            # an instance row never takes the bare name in a collision —
+            # that is reserved for a legacy string key whatever the
+            # insertion order
+            name = f"{base}[{sig}]" if sig else f"{base}+"
+        while name in out:  # indistinguishable entries: keep both rows
+            name += "+"    # with a deterministic suffix
         per_round = strategy.bytes_per_round(x, y, num_local_steps)
+        measured = measured_bytes_per_round(strategy, x, y, num_local_steps)
         total = per_round * rounds if math.isfinite(rounds) else math.inf
-        name = algo if isinstance(algo, str) else strategy.name
-        if name in out:
-            # same strategy class, different hyperparameters: keep both rows
-            name = f"{name}#{sum(1 for k in out if k.split('#')[0] == name)}"
         out[name] = {
             "bytes_per_round": float(per_round),
+            "measured_bytes_per_round": float(measured),
             "rounds_to_eps": float(rounds),
             "total_bytes": float(total),
         }

@@ -142,3 +142,21 @@ class FederatedRunner:
 
     def metric_series(self, name: str) -> np.ndarray:
         return np.array([s.metrics[name] for s in self.history])
+
+    def wire_report(self, x: Pytree, y: Pytree, num_local_steps: int) -> Dict:
+        """Priced vs measured per-round communication for this runner's
+        strategy: the analytic `bytes_per_round` next to the probe of the
+        actual packed buffer lengths (`transport.measured_bytes_per_round`,
+        headers included).  Requires a strategy-built runner."""
+        if self._strategy is None:
+            raise ValueError("wire_report needs a runner built from_strategy")
+        from .transport import measured_bytes_per_round
+
+        return {
+            "bytes_per_round": int(
+                self._strategy.bytes_per_round(x, y, num_local_steps)
+            ),
+            "measured_bytes_per_round": measured_bytes_per_round(
+                self._strategy, x, y, num_local_steps
+            ),
+        }

@@ -19,12 +19,16 @@ Protocol consumed by the engine (all trace-time unless noted):
   init_state(x,y,m)  build that state (RNG keys, error-feedback buffers)
   sample_weights(state, m) -> (weights | None, state)   [traced]
   transform_correction(cx, cy, state) -> (cx, cy, state) [traced]
+                     cx/cy may come back as `transport.PackedTree` wire
+                     payloads (objects with a `.decode()` hook) instead
+                     of dense trees; the engine decodes before use
   bytes_per_round(x, y, K)  analytic star-topology payload per agent
+                     (`transport.measured_bytes_per_round` is the
+                     empirical counterpart probing packed buffers)
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any, Optional, Tuple
 
 import jax
@@ -32,60 +36,39 @@ import jax.numpy as jnp
 
 from ..core.types import Pytree
 from ..kernels.compress_correction import compress_leaf
+from .transport import (
+    LeafSpec,
+    PackedTree,
+    dense_payload_bytes as _payload_bytes,
+    encode_leaf,
+)
 
 Weights = Optional[jax.Array]
 State = dict
 
 
-def _payload_bytes(tree: Pytree) -> int:
-    """Dense payload bytes of one model copy (works on arrays and
-    ShapeDtypeStructs alike)."""
-    return sum(u.size * u.dtype.itemsize for u in jax.tree.leaves(tree))
-
-
-def _sparse_leaf_cost(u, ratio: float, index_bytes: int) -> Tuple[int, int]:
-    """(kept entries k, payload bytes) for one `ratio`-sparsified leaf:
-    kept values plus an integer index per kept value, never worse than
-    sending densely.  The single owner of the sparse pricing arithmetic —
-    both payload models below derive from it."""
-    dense = u.size * u.dtype.itemsize
-    if ratio >= 1:
-        return u.size, dense
-    k = max(1, math.ceil(ratio * u.size))
-    return k, min(dense, k * (u.dtype.itemsize + index_bytes))
-
-
-def _sparse_payload_bytes(tree: Pytree, ratio: float, index_bytes: int = 4) -> int:
-    """Bytes for a `ratio`-sparsified copy of `tree`."""
+def _compressed_payload_bytes(tree: Pytree, ratio: float, bits: int = 32,
+                              value_dtype=None) -> int:
+    """Bytes for a `ratio`-sparsified, `bits`-bit stochastically
+    quantized copy of `tree` (bits >= 32: sparsification only): kept
+    values — bit-packed at the power-of-two storage width, padded to
+    whole uint32 words per row, when quantizing — plus an integer index
+    per kept value when sparsified (uint16 up to 2**16 columns, not a
+    hard-coded 4 bytes) and ONE quantization scale per quantization
+    GROUP — a last-axis row, exactly how `QuantizedGT` scales the grid.
+    The layout arithmetic lives in `transport.LeafSpec` — the same
+    object that shapes the packed encoder's buffers — so priced bytes
+    equal packed buffer lengths by construction, and each leaf
+    degenerates to the unquantized-sparse or dense encoding whenever
+    that is cheaper.  `value_dtype` overrides the leaf dtype — the
+    correction exchange is priced at the strategy's `correction_dtype`
+    when one is set, since that is what the encoder actually packs."""
     return sum(
-        _sparse_leaf_cost(u, ratio, index_bytes)[1]
+        LeafSpec.build(
+            u.shape, value_dtype or u.dtype, ratio, bits
+        ).wire_bytes()
         for u in jax.tree.leaves(tree)
     )
-
-
-def _quantized_payload_bytes(
-    tree: Pytree,
-    ratio: float,
-    bits: int,
-    index_bytes: int = 4,
-    scale_bytes: int = 4,
-) -> int:
-    """Bytes for a `ratio`-sparsified, `bits`-bit stochastically quantized
-    copy of `tree`: kept values at bits/8 bytes each plus one fp32
-    quantization scale per leaf, and an integer index per kept value when
-    sparsified — never worse than the unquantized sparse encoding, which
-    is itself never worse than dense."""
-    total = 0
-    for u in jax.tree.leaves(tree):
-        dense = u.size * u.dtype.itemsize
-        k, sparse = _sparse_leaf_cost(u, ratio, index_bytes)
-        if bits < 32:
-            idx = k * index_bytes if ratio < 1 else 0
-            quant = math.ceil(k * bits / 8) + scale_bytes + idx
-        else:
-            quant = sparse
-        total += min(dense, sparse, quant)
-    return total
 
 
 @dataclasses.dataclass(frozen=True)
@@ -220,10 +203,22 @@ class _CorrectionCompressor(CommStrategy):
     VMEM pass when `use_kernel` is set, everything else falls back to
     the pure-jnp oracle (`repro.kernels.ref.compress_correction_ref`) —
     both paths are the same math on the same uniform draws, so the
-    dispatch moves iterates by at most ~1 ulp."""
+    dispatch moves iterates by at most ~1 ulp.
+
+    Each leaf is laid out as [m * rows, cols] with last-axis rows as the
+    selection/quantization groups (`transport.wire_rows_cols`): vectors
+    are one group per agent, matrices get per-channel scales and
+    per-channel top-k — the same layout `bytes_per_round` prices.
+
+    With `wire_transport` set, `transform_correction` returns
+    `transport.PackedTree`s — REAL packed (value, index, scale) wire
+    payloads — instead of dense masked trees; the engine scatter-adds
+    them back on decode.  Both paths run identical math on identical
+    draws, so wire on/off produces bitwise-identical GT iterates."""
 
     use_kernel: bool = False       # fused Pallas path on aligned 2D leaves
     kernel_interpret: bool = True  # interpret=True is the CPU validation path
+    wire_transport: bool = False   # emit packed payloads, not dense trees
     use_correction = True
     # knob defaults, overridden by concrete subclasses' dataclass fields
     mode = "topk"
@@ -307,10 +302,14 @@ class _CorrectionCompressor(CommStrategy):
                 jax.tree.leaves(err) if err is not None else [None] * len(leaves)
             )
             chat_leaves, resid_leaves = [], []
+            payloads, specs, shapes = [], [], []
             for i, (c, e) in enumerate(zip(leaves, eleaves)):
-                flat = c.reshape(c.shape[0], -1)
-                n = flat.shape[1]
-                k = max(1, math.ceil(self._ratio * n)) if self._sparsifying else n
+                m = c.shape[0]
+                spec = LeafSpec.build(
+                    c.shape[1:], c.dtype, self._ratio, self._bits, self.mode
+                )
+                flat = c.reshape(m * spec.rows, spec.cols)
+                k, n = spec.k, spec.cols
                 leaf_key = (
                     None if sub is None else jax.random.fold_in(sub, 2 * i + tag)
                 )
@@ -323,25 +322,44 @@ class _CorrectionCompressor(CommStrategy):
                     u_rnd = jax.random.uniform(
                         jax.random.fold_in(leaf_key, 1), flat.shape
                     )
-                chat, resid = compress_leaf(
-                    flat,
-                    None if e is None else e.reshape(flat.shape),
-                    u_sel,
-                    u_rnd,
-                    k=k,
-                    bits=self._bits,
-                    mode=self.mode,
-                    use_kernel=self.use_kernel,
-                    interpret=self.kernel_interpret,
-                )
-                chat_leaves.append(chat.reshape(c.shape))
+                e_flat = None if e is None else e.reshape(flat.shape)
+                if self.wire_transport:
+                    payload, resid = encode_leaf(
+                        flat, e_flat, u_sel, u_rnd, spec.stacked(m),
+                        use_kernel=self.use_kernel,
+                        interpret=self.kernel_interpret,
+                    )
+                    payloads.append(payload)
+                    specs.append(spec.stacked(m))
+                    shapes.append(c.shape)
+                else:
+                    chat, resid = compress_leaf(
+                        flat,
+                        e_flat,
+                        u_sel,
+                        u_rnd,
+                        k=k,
+                        bits=self._bits,
+                        mode=self.mode,
+                        use_kernel=self.use_kernel,
+                        interpret=self.kernel_interpret,
+                    )
+                    chat_leaves.append(chat.reshape(c.shape))
                 resid_leaves.append(None if e is None else resid.reshape(c.shape))
             resid = (
                 jax.tree.unflatten(treedef, resid_leaves)
                 if err is not None
                 else None
             )
-            return jax.tree.unflatten(treedef, chat_leaves), resid
+            if self.wire_transport:
+                chat = PackedTree(
+                    payloads, specs, treedef, shapes,
+                    use_kernel=self.use_kernel,
+                    interpret=self.kernel_interpret,
+                )
+            else:
+                chat = jax.tree.unflatten(treedef, chat_leaves)
+            return chat, resid
 
         ex = state.get("ex") if self.error_feedback else None
         ey = state.get("ey") if self.error_feedback else None
@@ -384,7 +402,10 @@ class CompressedGT(_CorrectionCompressor):
         # averaged model (models stay dense; only the tracked-gradient
         # exchange is compressed)
         dense = _payload_bytes((x, y))
-        return 2 * dense + 2 * _sparse_payload_bytes((x, y), self.compression_ratio)
+        return 2 * dense + 2 * _compressed_payload_bytes(
+            (x, y), self.compression_ratio,
+            value_dtype=self.correction_dtype,
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -433,8 +454,9 @@ class QuantizedGT(_CorrectionCompressor):
         # sparsified global grad + averaged model (models stay dense;
         # only the tracked-gradient exchange is compressed)
         dense = _payload_bytes((x, y))
-        return 2 * dense + 2 * _quantized_payload_bytes(
-            (x, y), self.ratio, self.bits
+        return 2 * dense + 2 * _compressed_payload_bytes(
+            (x, y), self.ratio, self.bits,
+            value_dtype=self.correction_dtype,
         )
 
 
@@ -467,6 +489,8 @@ _ALIASES = {
         error_feedback=kw.get("error_feedback", True),
         correction_dtype=kw.get("correction_dtype"),
         seed=kw.get("seed", 0),
+        use_kernel=kw.get("use_kernel", False),
+        wire_transport=kw.get("wire_transport", False),
     ),
     "quantized_gt": lambda kw: QuantizedGT(
         bits=kw.get("quantization_bits", 8),
@@ -475,6 +499,8 @@ _ALIASES = {
         error_feedback=kw.get("error_feedback", True),
         correction_dtype=kw.get("correction_dtype"),
         seed=kw.get("seed", 0),
+        use_kernel=kw.get("use_kernel", False),
+        wire_transport=kw.get("wire_transport", False),
     ),
 }
 

@@ -7,6 +7,9 @@ substrate:
   * gt_update            — fused FedGDA-GT inner update (one HBM pass)
   * compress_correction  — fused select+quantize+error-feedback on tracking
                            corrections (CompressedGT / QuantizedGT)
+  * pack_payload         — fused select+quantize+BIT-PACK to the actual
+                           sparse wire format (and the fused unpack+
+                           dequant+scatter-add inverse) for fed.transport
   * flash_attention — blocked online-softmax attention (causal/window/softcap)
   * ssm_scan        — chunked Mamba selective scan with VMEM-carried state
 """
@@ -16,6 +19,7 @@ from .compress_correction import (
     compress_leaf,
     fusable_leaf,
 )
+from .pack_payload import pack_payload_2d, unpack_payload_2d
 from .flash_attention import flash_attention
 from .ssm_scan import ssm_scan
 from .ops import (
@@ -30,6 +34,8 @@ __all__ = [
     "compress_correction_2d",
     "compress_leaf",
     "fusable_leaf",
+    "pack_payload_2d",
+    "unpack_payload_2d",
     "flash_attention",
     "ssm_scan",
     "batched_ssm_scan",

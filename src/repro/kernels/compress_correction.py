@@ -68,6 +68,20 @@ def _row_block(R: int, want: int) -> int:
     return br
 
 
+def _operand(arr, dtype, spec):
+    """Stand-in for an unused kernel operand: the python-level gates in
+    the kernel bodies are trace-time constants, so a None operand is
+    never read — but pallas_call arity is fixed, so substitute one
+    (1, LANE) tile pinned to block (0, 0) so nothing dense is
+    materialized or streamed through VMEM.  Shared by every kernel in
+    this package that takes optional uniforms/feedback inputs."""
+    if arr is None:
+        return jnp.zeros((1, LANE), dtype), pl.BlockSpec(
+            (1, LANE), lambda i: (0, 0)
+        )
+    return arr, spec
+
+
 def compress_correction_2d(
     c: jax.Array,  # [R, C], C % 128 == 0
     e: Optional[jax.Array],  # [R, C] feedback residual, or None
@@ -93,22 +107,9 @@ def compress_correction_2d(
     br = _row_block(R, block_rows)
     spec = pl.BlockSpec((br, C), lambda i: (i, 0))
     has_feedback = e is not None
-
-    def operand(arr):
-        # unused operands (no feedback / no randk / no quantization) are
-        # never read — the python-level gates in the kernel are trace-time
-        # constants — but pallas_call arity is fixed: stand in with one
-        # (1, LANE) tile pinned to block (0, 0) so nothing dense is
-        # materialized or streamed through VMEM
-        if arr is None:
-            return jnp.zeros((1, LANE), c.dtype), pl.BlockSpec(
-                (1, LANE), lambda i: (0, 0)
-            )
-        return arr, spec
-
-    e_arr, e_spec = operand(e)
-    us_arr, us_spec = operand(u_sel)
-    ur_arr, ur_spec = operand(u_rnd)
+    e_arr, e_spec = _operand(e, c.dtype, spec)
+    us_arr, us_spec = _operand(u_sel, c.dtype, spec)
+    ur_arr, ur_spec = _operand(u_rnd, c.dtype, spec)
     kern = functools.partial(
         _compress_kernel, k=k, bits=bits, mode=mode, has_feedback=has_feedback
     )

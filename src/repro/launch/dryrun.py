@@ -96,6 +96,7 @@ def run_one(
     participation=None,
     compression_ratio=None,
     quantization_bits=None,
+    wire_transport=False,
 ) -> Dict:
     cfg = get_config(arch)
     if (
@@ -103,6 +104,7 @@ def run_one(
         or participation is not None
         or compression_ratio is not None
         or quantization_bits is not None
+        or wire_transport
     ):
         import dataclasses as _dc
 
@@ -115,6 +117,8 @@ def run_one(
             repl["compression_ratio"] = compression_ratio
         if quantization_bits is not None:
             repl["quantization_bits"] = quantization_bits
+        if wire_transport:
+            repl["wire_transport"] = True
         cfg = _dc.replace(cfg, **repl)
     shape = INPUT_SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -131,6 +135,9 @@ def run_one(
         ),
         "quantization_bits": (
             cfg.quantization_bits if shape.kind == "train" else None
+        ),
+        "wire_transport": (
+            cfg.wire_transport if shape.kind == "train" else None
         ),
         "sharding_variant": sharding_variant,
         "sequence_parallel": sequence_parallel,
@@ -223,6 +230,12 @@ def main() -> None:
     ap.add_argument("--quantization-bits", type=int, default=None,
                     help="stochastic-quantization bit-width for tracking "
                          "corrections (quantized_gt; >=32 disables)")
+    ap.add_argument("--wire-transport", action="store_true",
+                    help="encode compressed corrections as packed "
+                         "(value, index, scale) payloads inside the step "
+                         "(payload bytes match bytes_per_round; lowering "
+                         "the packed buffers onto an actual multi-host "
+                         "collective is the roadmap follow-up)")
     ap.add_argument("--variant", default="baseline",
                     choices=["baseline", "megatron"])
     ap.add_argument("--no-seq-parallel", action="store_true")
@@ -267,6 +280,8 @@ def main() -> None:
                 tag += f"__r{args.compression_ratio:g}"
             if args.quantization_bits is not None:
                 tag += f"__q{args.quantization_bits:d}"
+            if args.wire_transport:
+                tag += "__wire"
             if args.variant != "baseline":
                 tag += f"__{args.variant}"
             if args.no_seq_parallel:
@@ -295,6 +310,7 @@ def main() -> None:
                     participation=args.participation,
                     compression_ratio=args.compression_ratio,
                     quantization_bits=args.quantization_bits,
+                    wire_transport=args.wire_transport,
                 )
                 with open(path, "w") as f:
                     json.dump(rec, f, indent=1)

@@ -110,6 +110,7 @@ def build_train_step(
         participation=cfg.participation,
         compression_ratio=cfg.compression_ratio,
         quantization_bits=cfg.quantization_bits,
+        wire_transport=cfg.wire_transport,
     )
     stateful = strategy.stateful
     rnd = make_round(

@@ -57,6 +57,10 @@ def main() -> None:
     ap.add_argument("--quantization-bits", type=int, default=None,
                     help="stochastic-quantization bit-width "
                          "(quantized_gt; >=32 disables)")
+    ap.add_argument("--wire-transport", action="store_true",
+                    help="move compressed corrections as packed "
+                         "(value, index, scale) payloads "
+                         "(compressed_gt / quantized_gt)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
@@ -69,6 +73,7 @@ def main() -> None:
         "participation": args.participation,
         "compression_ratio": args.compression_ratio,
         "quantization_bits": args.quantization_bits,
+        "wire_transport": args.wire_transport or None,
     }
     strategy = resolve_strategy(
         args.algorithm, **{k: v for k, v in knobs.items() if v is not None}

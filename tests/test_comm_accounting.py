@@ -2,10 +2,22 @@
 
 `communication_bytes_per_round` is now a thin veneer over
 `CommStrategy.bytes_per_round`; these tests pin the legacy string API to
-its historical values AND the new per-strategy payload models (client
+its historical values AND the per-strategy payload models (client
 sampling scales the expected payload; the compression ratio is reflected
 in the sparsified-correction bytes, with index overhead, never exceeding
-the dense cost)."""
+the dense cost).
+
+Since the wire-transport PR the payload models are derived from
+`transport.LeafSpec` — the object that also shapes the packed encoder's
+buffers — so the pinned arithmetic here is the EXACT wire format:
+  * index width follows the row length (uint16 below 2**16 columns, int32
+    above), not a hard-coded 4 bytes;
+  * quantized values are bit-packed at the power-of-two storage width and
+    padded to whole uint32 words per row;
+  * ONE quantization scale is priced per quantization GROUP (a last-axis
+    row, stored at the compute dtype: fp32, or fp64 for f64 leaves) — not
+    one per leaf (the per-leaf scale bug this PR fixes)."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -23,6 +35,13 @@ from repro.fed import (
 )
 
 P, Q, K = 1000, 10, 16
+IDX = 2  # uint16 indices: both P and Q rows are shorter than 2**16
+SCALE = 8  # per-row scale at the compute dtype of f64 leaves
+
+
+def _words(k, bits):
+    """uint32 words per row of k `bits`-bit levels (bits in {2,4,8,16})."""
+    return int(np.ceil(k * bits / 32))
 
 
 @pytest.fixture(scope="module")
@@ -96,21 +115,38 @@ class TestStrategyPayloads:
         assert all(c < dense for c in costs)  # compression saves bytes
         assert costs == sorted(costs)  # monotone in the ratio
         assert all(c > 2 * z for c in costs)  # models stay dense
-        # exact model: dense models + (value + 4-byte index) per kept entry
+        # exact model: dense models + (value + uint16 index) per kept entry
         k_x = int(np.ceil(0.1 * P))
         k_y = int(np.ceil(0.1 * Q))
-        expected = 2 * z + 2 * (k_x * (8 + 4) + k_y * (8 + 4))
+        expected = 2 * z + 2 * (k_x * (8 + IDX) + k_y * (8 + IDX))
         assert CompressedGT(compression_ratio=0.1).bytes_per_round(
             x, y, K
         ) == expected
 
     def test_sparse_payload_never_exceeds_dense(self, xy):
         x, y = xy
-        # with 12 bytes/entry vs 8 dense, ratio ~0.9 would "cost" more
+        # with 10 bytes/entry vs 8 dense, ratio ~0.9 would "cost" more
         # sparsified than dense — the model clamps at the dense payload
         assert CompressedGT(compression_ratio=0.9).bytes_per_round(
             x, y, K
         ) <= 4 * _z(x, y)
+
+    def test_index_width_follows_row_length(self):
+        """uint16 indices while the max index cols - 1 fits (unsigned:
+        int16 would overflow at 2**15), int32 beyond — the same width
+        the packed encoder emits (satellite: no hard-coded 4-byte
+        indices)."""
+        small = jnp.zeros((2**16,))
+        big = jnp.zeros((2**16 + 1,))
+        y0 = jnp.zeros(())  # scalar leaf: always sent densely (8 bytes)
+        for x0, idx_b in ((small, 2), (big, 4)):
+            k = int(np.ceil(0.1 * x0.size))
+            got = CompressedGT(compression_ratio=0.1).bytes_per_round(
+                x0, y0, K
+            )
+            # dense models up+down, then the sparsified correction
+            # exchange: (value + index) per kept entry, scalar y dense
+            assert got == 2 * (x0.size * 8 + 8) + 2 * (k * (8 + idx_b) + 8)
 
 
 # ----------------------------------------------- quantized payloads
@@ -131,32 +167,64 @@ class TestQuantizedPayloads:
             QuantizedGT(bits=b).bytes_per_round(x, y, K) for b in (2, 4, 8, 16)
         ]
         assert costs == sorted(costs) and costs[0] < costs[-1]
-        # exact model, dense ratio: dense models + ceil(n*bits/8) values
-        # + one 4-byte fp32 scale per leaf
+        # exact model, dense ratio: dense models + bit-packed levels
+        # padded to whole uint32 words per row + one scale per row (at
+        # the compute dtype: 8 bytes for these f64 leaves)
         z = _z(x, y)
         for b, cost in zip((2, 4, 8, 16), costs):
             expected = 2 * z + 2 * (
-                (int(np.ceil(P * b / 8)) + 4) + (int(np.ceil(Q * b / 8)) + 4)
+                (4 * _words(P, b) + SCALE) + (4 * _words(Q, b) + SCALE)
             )
             assert cost == expected
 
     def test_scale_metadata_overhead_is_priced(self, xy):
         x, y = xy
-        # 64-bit values at 8 bits: exactly 1/8 the value bytes + 4 bytes
-        # of scale per leaf — the metadata shows up in the exact model
+        # 64-bit values at 8 bits: word-padded 1-byte levels + one
+        # per-ROW scale (the per-leaf scale bug: these 1-D leaves are one
+        # quantization group each, and the price says so explicitly)
         got = QuantizedGT(bits=8).bytes_per_round(x, y, K)
-        no_scale = 2 * _z(x, y) + 2 * (P + Q)
-        assert got == no_scale + 2 * 2 * 4
+        no_scale = 2 * _z(x, y) + 2 * (4 * _words(P, 8) + 4 * _words(Q, 8))
+        assert got == no_scale + 2 * 2 * SCALE
+
+    def test_scale_priced_per_quantization_group(self):
+        """REGRESSION (this PR): a multi-row leaf carries one scale per
+        last-axis row — the groups `QuantizedGT` actually scales — and
+        the priced bytes equal the packed payload length exactly."""
+        from repro.fed import LeafSpec, encode_leaf
+
+        rows, cols, bits = 4, 32, 8
+        x = jnp.zeros((rows, cols))  # f64 under the conftest x64 flag
+        spec = LeafSpec.build(x.shape, x.dtype, 1.0, bits)
+        assert (spec.rows, spec.cols) == (rows, cols)
+        # one scale per ROW, not one per leaf:
+        per_row = 4 * _words(cols, bits) + SCALE
+        assert spec.wire_bytes() == rows * per_row
+        # and the strategy pricing uses the same layout
+        y = jnp.zeros(())
+        got = QuantizedGT(bits=bits).bytes_per_round(x, y, K)
+        assert got == 2 * (x.size * 8 + 8) + 2 * (rows * per_row + 8)
+        # pinned against the ACTUAL packed buffers, not just arithmetic
+        c = jax.random.normal(jax.random.PRNGKey(0), (rows, cols))
+        u = jax.random.uniform(jax.random.PRNGKey(1), (rows, cols))
+        payload, _ = encode_leaf(c, None, None, u, spec)
+        assert payload.nbytes == spec.wire_bytes()
+        assert payload.scales.shape == (rows, 1)
 
     def test_sparsified_quantized_composition(self, xy):
         x, y = xy
-        # ratio=0.1, bits=8: k values at 1 byte + 4-byte index each
-        # + 4-byte scale per leaf
+        # ratio=0.1, bits=8: word-padded 1-byte levels + uint16 index per
+        # kept entry + one scale per row.  The tiny y leaf (k=1) is
+        # CHEAPER at full storage width (8+2 bytes) than bit-packed
+        # (4-byte word + 8-byte scale + 2-byte index): the model — and
+        # the packed encoder, same LeafSpec — degenerate to the sparse
+        # ENCODING for it (the values themselves stay quantized: bits
+        # applies to the whole tree so the estimator is uniform).
         k_x = int(np.ceil(0.1 * P))
         k_y = int(np.ceil(0.1 * Q))
-        expected = 2 * _z(x, y) + 2 * (
-            (k_x * (1 + 4) + 4) + (k_y * (1 + 4) + 4)
-        )
+        x_quant = 4 * _words(k_x, 8) + k_x * IDX + SCALE
+        y_sparse = k_y * (8 + IDX)
+        assert y_sparse < 4 * _words(k_y, 8) + k_y * IDX + SCALE
+        expected = 2 * _z(x, y) + 2 * (x_quant + y_sparse)
         assert QuantizedGT(bits=8, ratio=0.1).bytes_per_round(
             x, y, K
         ) == expected
@@ -199,6 +267,63 @@ class TestCommTable:
         cgt = table["compressed_gt"]
         assert cgt["bytes_per_round"] < 4 * z
         assert cgt["total_bytes"] == cgt["bytes_per_round"] * 80.0
+
+    def test_measured_bytes_reported_per_row(self, xy):
+        """Every row carries the empirical packed-buffer measurement next
+        to the analytic price; dense strategies measure exactly their
+        price, compressed ones within the fixed per-leaf headers."""
+        from repro.fed import wire_header_overhead
+
+        x, y = xy
+        table = comm_table(
+            x, y, K,
+            {
+                "fedgda_gt": 10.0,
+                QuantizedGT(bits=8, wire_transport=True): 10.0,
+            },
+        )
+        gt = table["fedgda_gt"]
+        assert gt["measured_bytes_per_round"] == gt["bytes_per_round"]
+        qt = table["quantized_gt"]
+        overhead = qt["measured_bytes_per_round"] - qt["bytes_per_round"]
+        assert 0 <= overhead <= wire_header_overhead(x, y)
+
+    def test_collision_keys_are_order_independent(self, xy):
+        """REGRESSION (this PR): two instances of one strategy class used
+        to get positional `name#k` suffixes, so reordering the input dict
+        silently relabeled rows.  Rows now key on the full knob
+        signature — identical keys whichever order the entries arrive."""
+        x, y = xy
+        a = CompressedGT(compression_ratio=0.1)
+        b = CompressedGT(compression_ratio=0.25)
+        t_ab = comm_table(x, y, K, {a: 10.0, b: 20.0, "fedgda_gt": 5.0})
+        t_ba = comm_table(x, y, K, {"fedgda_gt": 5.0, b: 20.0, a: 10.0})
+        assert set(t_ab) == set(t_ba)
+        key_a = next(k for k in t_ab if "0.1" in k)
+        assert "compression_ratio=0.1" in key_a  # knobs, not arrival order
+        for k in t_ab:
+            assert t_ab[k]["bytes_per_round"] == t_ba[k]["bytes_per_round"]
+            assert t_ab[k]["rounds_to_eps"] == t_ba[k]["rounds_to_eps"]
+        # the unique base name stays unsuffixed
+        assert "fedgda_gt" in t_ab
+
+    def test_legacy_string_keys_survive_collisions(self, xy):
+        """Documented contract: a legacy STRING key is always a row key
+        verbatim, even when a strategy instance of the same class is in
+        the dict; only the instance row gets the knob suffix."""
+        x, y = xy
+        t = comm_table(
+            x, y, K, {"quantized_gt": 10.0, QuantizedGT(bits=4): 20.0}
+        )
+        assert "quantized_gt" in t
+        assert t["quantized_gt"]["rounds_to_eps"] == 10.0
+        inst = next(k for k in t if k.startswith("quantized_gt["))
+        assert "bits=4" in inst and t[inst]["rounds_to_eps"] == 20.0
+        # string + indistinguishable instance: deterministic '+' suffix
+        t2 = comm_table(
+            x, y, K, {"quantized_gt": 10.0, QuantizedGT(bits=8): 20.0}
+        )
+        assert set(t2) == {"quantized_gt", "quantized_gt+"}
 
     def test_resolve_strategy_roundtrip(self):
         assert isinstance(resolve_strategy("sync_gda"), FullSync)

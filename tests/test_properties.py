@@ -14,6 +14,9 @@ Invariants covered:
   * correction compression (CompressedGT / QuantizedGT): pytree
     structure/shape/dtype preservation, sent + residual == raw
     correction, and exact identity in the bits -> inf / ratio -> 1 limits
+  * wire transport (fed.transport): decode(encode(c)) == the dense
+    compressed correction EXACTLY for every mode x bits x dtype, and the
+    packed payload length == the priced bytes, on arbitrary shapes
 """
 import jax
 import jax.numpy as jnp
@@ -314,6 +317,54 @@ class TestCompressionInvariants:
             ):
                 assert a is b  # elided at trace time, not just allclose
             assert state2 == {}
+
+
+# ------------------------------------------- wire-transport round-trip
+class TestWireTransportRoundTrip:
+    @given(
+        seed=st.integers(0, 10_000),
+        rows=st.integers(1, 6),
+        cols=st.integers(1, 300),
+        ratio=st.floats(0.05, 1.0),
+        bits=st.sampled_from([2, 3, 4, 8, 16, 32]),
+        mode=st.sampled_from(["topk", "randk"]),
+        dtype=st.sampled_from(["float32", "float64", "bfloat16"]),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_decode_encode_is_masked_correction_exactly(
+        self, seed, rows, cols, ratio, bits, mode, dtype
+    ):
+        """decode(encode(c)) == the dense compressed correction, exactly,
+        for every mode x bits x dtype on arbitrary [rows, cols] leaves —
+        and the packed buffers weigh exactly what the pricing says."""
+        import dataclasses
+
+        from repro.fed.transport import LeafSpec, decode_leaf, encode_leaf
+        from repro.kernels.compress_correction import compress_leaf
+
+        dt = jnp.dtype(dtype)
+        spec = dataclasses.replace(
+            LeafSpec.build((cols,), dt, ratio, bits, mode), rows=rows
+        )
+        k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed), 4)
+        c = jax.random.normal(k1, (rows, cols)).astype(dt)
+        e = (0.1 * jax.random.normal(k2, (rows, cols))).astype(dt)
+        u_sel = jax.random.uniform(k3, (rows, cols))
+        u_rnd = jax.random.uniform(k4, (rows, cols))
+        payload, resid = encode_leaf(c, e, u_sel, u_rnd, spec)
+        decoded = decode_leaf(payload, spec)
+        chat, resid_dense = compress_leaf(
+            c, e, u_sel, u_rnd, k=spec.k, bits=bits, mode=mode
+        )
+        np.testing.assert_array_equal(
+            np.asarray(decoded, np.float64), np.asarray(chat, np.float64)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(resid, np.float64), np.asarray(resid_dense, np.float64)
+        )
+        assert payload.nbytes == spec.wire_bytes()
+        if payload.indices is not None:
+            assert payload.indices.dtype == spec.index_dtype
 
 
 # ---------------------------------------------------- comm accounting

@@ -1,0 +1,434 @@
+"""Sparse wire transport for compressed corrections (deliverable: ISSUE 3).
+
+Four layers of guarantees:
+
+  * round-trip — decode(encode(c)) reproduces the dense compressed
+    correction chat EXACTLY (indices/words bitwise; values land via an
+    exact scatter-add) for every encoding x bits x dtype, on aligned,
+    unaligned, multi-row and degenerate (scalar/tiny) leaves, and the
+    residual the encoder emits is the dense path's residual bitwise —
+    so error feedback cannot tell the wire from the dense tree;
+  * accounting — `LeafSpec.wire_bytes` (which IS the strategies'
+    payload pricing) equals the measured packed buffer lengths, both
+    per leaf (`probe_leaf_bytes` / `LeafPayload.nbytes`) and per round
+    (`measured_bytes_per_round` vs `bytes_per_round`, exact without
+    headers, within `wire_header_overhead` with them);
+  * engine — wire_transport on/off produces bitwise-identical GT
+    iterates round after round, and the bits>=32 + ratio>=1 identity
+    configuration degenerates to the dense GradientTracking path;
+  * comm table — rows report measured next to priced bytes and key
+    colliding strategies by knob signature (order-independent).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_round, run_strategy_rounds
+from repro.fed import (
+    CompressedGT,
+    GradientTracking,
+    HEADER_BYTES,
+    LeafSpec,
+    PackedTree,
+    QuantizedGT,
+    decode_leaf,
+    encode_leaf,
+    measured_bytes_per_round,
+    wire_header_overhead,
+)
+from repro.fed.transport import probe_leaf_bytes, wire_rows_cols
+from repro.kernels.compress_correction import compress_leaf
+from repro.problems import make_quadratic_problem
+
+F32, F64, BF16 = jnp.float32, jnp.float64, jnp.bfloat16
+
+# per-agent leaf shapes: aligned vector, unaligned vector, matrix
+# (multi-row groups), odd 3-D, scalar, tiny
+SHAPES = [(256,), (37,), (4, 32), (2, 3, 64), (), (3,)]
+CONFIGS = [  # (ratio, bits, mode)
+    (0.25, 32, "topk"),
+    (0.25, 8, "topk"),
+    (0.5, 4, "randk"),
+    (1.0, 8, "topk"),
+    (1.0, 2, "topk"),
+    (0.1, 16, "randk"),
+]
+
+
+def _leaf(shape, dtype, m=3, seed=0):
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed), 4)
+    c = jax.random.normal(k1, (m,) + shape).astype(dtype)
+    e = (0.1 * jax.random.normal(k2, (m,) + shape)).astype(dtype)
+    spec = LeafSpec.build(shape, dtype, 1.0, 32).stacked(m)
+    u_sel = jax.random.uniform(k3, (spec.rows, spec.cols))
+    u_rnd = jax.random.uniform(k4, (spec.rows, spec.cols))
+    return c, e, u_sel, u_rnd
+
+
+# ------------------------------------------------------------- round-trip
+class TestRoundTrip:
+    @pytest.mark.parametrize("dtype", [F32, F64, BF16])
+    @pytest.mark.parametrize("shape", SHAPES)
+    @pytest.mark.parametrize("ratio,bits,mode", CONFIGS)
+    def test_decode_encode_is_dense_compress(self, dtype, shape, ratio,
+                                             bits, mode):
+        """decode(encode(c)) == the masked/quantized chat of the dense
+        compress path, and the residuals agree bitwise — on the SAME
+        uniform draws the two paths are the same math."""
+        m = 3
+        c, e, u_sel, u_rnd = _leaf(shape, dtype, m)
+        spec = LeafSpec.build(shape, dtype, ratio, bits, mode).stacked(m)
+        flat = c.reshape(spec.rows, spec.cols)
+        e_flat = e.reshape(flat.shape)
+        payload, resid = encode_leaf(flat, e_flat, u_sel, u_rnd, spec)
+        decoded = decode_leaf(payload, spec)
+        chat, resid_dense = compress_leaf(
+            flat, e_flat, u_sel, u_rnd, k=spec.k, bits=bits, mode=mode
+        )
+        np.testing.assert_array_equal(
+            np.asarray(decoded, np.float64), np.asarray(chat, np.float64)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(resid, np.float64), np.asarray(resid_dense, np.float64)
+        )
+        assert decoded.dtype == dtype
+
+    @pytest.mark.parametrize(
+        "encoding", ["dense", "sparse", "quant", "quant_dense"]
+    )
+    def test_each_encoding_round_trips(self, encoding):
+        """Force every encoding (not just the cheapest) through the
+        codec: words/indices are bitwise-stable, values exact."""
+        c, e, u_sel, u_rnd = _leaf((64,), F32, m=4, seed=1)
+        spec = LeafSpec.build((64,), F32, 0.25, 6)  # 6 -> stored at 8 bits
+        spec = dataclasses.replace(spec.stacked(4), encoding=encoding)
+        flat = c.reshape(spec.rows, spec.cols)
+        payload, _ = encode_leaf(flat, None, u_sel, u_rnd, spec)
+        a = decode_leaf(payload, spec)
+        b = decode_leaf(payload, spec)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        chat, _ = compress_leaf(
+            flat, None, u_sel, u_rnd, k=spec.k, bits=spec.bits, mode=spec.mode
+        )
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(chat))
+
+    def test_residual_closes_the_books_through_the_wire(self):
+        """chat(decoded) + resid == c + e: packing defers, never loses."""
+        c, e, u_sel, u_rnd = _leaf((128,), F64, m=2, seed=2)
+        spec = LeafSpec.build((128,), F64, 0.3, 4).stacked(2)
+        flat, e_flat = c.reshape(spec.rows, spec.cols), e.reshape(2, 128)
+        payload, resid = encode_leaf(flat, e_flat, u_sel, u_rnd, spec)
+        decoded = decode_leaf(payload, spec)
+        np.testing.assert_allclose(
+            np.asarray(decoded + resid), np.asarray(flat + e_flat),
+            rtol=0, atol=1e-12,
+        )
+
+    def test_grid_edge_levels_survive_the_word_packer(self):
+        """REGRESSION (review): fp rounding can land kept*(s/safe) an ulp
+        outside [-s, s] (scale 6.4059205 in f32 gives 127*(s/x)*x =
+        127.00001), so stochastic rounding could emit level -s-1 == -1 ==
+        uint32 0xFFFFFFFF, whose carry corrupts every neighbour in its
+        packed word.  quantize_levels clamps to the grid, so the wire
+        round-trip stays exact at both grid edges."""
+        x = 6.4059205
+        c = jnp.array([[-x, x / 2, 0.0, x] + [0.0] * 60], F32)
+        spec = dataclasses.replace(
+            LeafSpec.build((64,), F32, 1.0, 8), encoding="quant"
+        )
+        # u_rnd high: floor survives the Bernoulli, the worst case
+        u_rnd = jnp.full(c.shape, 0.999, F32)
+        payload, resid = encode_leaf(c, None, None, u_rnd, spec)
+        decoded = decode_leaf(payload, spec)
+        chat, _ = compress_leaf(c, None, None, u_rnd, k=64, bits=8)
+        np.testing.assert_array_equal(np.asarray(decoded), np.asarray(chat))
+        # levels live strictly inside the 8-bit budget: no 0xFFFFFFFF
+        lvls = np.asarray(decoded[0, :4]) * (127.0 / np.max(np.abs(c)))
+        assert np.all(np.abs(np.round(lvls)) <= 127)
+
+    def test_zero_rows_survive(self):
+        """All-zero rows (zero quantization scale) decode to zeros."""
+        spec = dataclasses.replace(
+            LeafSpec.build((128,), F32, 0.25, 8), rows=3
+        )
+        c = jnp.zeros((3, 128), F32)
+        u = jax.random.uniform(jax.random.PRNGKey(3), (3, 128))
+        payload, resid = encode_leaf(c, None, u, u, spec)
+        assert not bool(jnp.any(decode_leaf(payload, spec)))
+        assert not bool(jnp.any(resid))
+
+
+# ------------------------------------------------------------ wire layout
+class TestLeafSpec:
+    def test_rows_are_quantization_groups(self):
+        assert wire_rows_cols(()) == (1, 1)
+        assert wire_rows_cols((7,)) == (1, 7)
+        assert wire_rows_cols((4, 32)) == (4, 32)
+        assert wire_rows_cols((2, 3, 64)) == (6, 64)
+
+    def test_index_width_derives_from_row_length(self):
+        # UNSIGNED halfword: int16 would overflow at 2**15 columns; the
+        # max stored index is cols - 1, so uint16 covers cols == 2**16
+        assert LeafSpec.build((100,), F32, 0.1, 32).index_dtype == jnp.uint16
+        assert (
+            LeafSpec.build((2**16,), F32, 0.1, 32).index_dtype == jnp.uint16
+        )
+        assert (
+            LeafSpec.build((2**16 + 1,), F32, 0.1, 32).index_dtype
+            == jnp.int32
+        )
+        # a matrix with many short rows still indexes within a row
+        assert (
+            LeafSpec.build((2**17, 8), F32, 0.5, 32).index_dtype == jnp.uint16
+        )
+
+    def test_halfword_indices_above_int16_range_round_trip(self):
+        """REGRESSION (review): rows with 2**15 < cols < 2**16 keep
+        2-byte indices; a signed int16 would wrap negative above 32767
+        and the scatter-add would silently misplace the tail of the
+        row.  Kept entries beyond column 32768 must survive the wire."""
+        cols = 40_000
+        spec = LeafSpec.build((cols,), F32, 0.001, 32)
+        assert spec.index_dtype == jnp.uint16 and spec.encoding == "sparse"
+        c = jnp.zeros((1, cols), F32).at[0, cols - 2].set(7.0)
+        payload, _ = encode_leaf(c, None, None, None, spec)
+        assert int(jnp.max(payload.indices.astype(jnp.int32))) == cols - 2
+        decoded = decode_leaf(payload, spec)
+        np.testing.assert_array_equal(np.asarray(decoded), np.asarray(c))
+
+    def test_encoding_chooses_cheapest(self):
+        # near-dense ratio: value+index costs more than sending densely
+        assert LeafSpec.build((100,), F64, 0.9, 32).encoding == "dense"
+        # genuinely sparse, unquantized
+        assert LeafSpec.build((100,), F64, 0.1, 32).encoding == "sparse"
+        # quantization wins on a long row
+        assert LeafSpec.build((1000,), F64, 0.1, 8).encoding == "quant"
+        # tiny row: the per-row scale overhead loses to plain sparse
+        assert LeafSpec.build((10,), F64, 0.1, 8).encoding == "sparse"
+        # mid/high kept fraction: packing ALL levels with implicit
+        # indices beats paying an index per kept level
+        spec = LeafSpec.build((1000,), F64, 0.9, 8)
+        assert spec.encoding == "quant_dense"
+        # 250 words + one f64 scale vs 900 levels + 900 uint16 indices
+        assert spec.wire_bytes() == 4 * 250 + 8
+
+    def test_identity_config_is_verbatim_dense(self):
+        spec = LeafSpec.build((64,), F32, 1.0, 32)
+        assert spec.encoding == "dense" and spec.k == 64
+        c = jax.random.normal(jax.random.PRNGKey(4), (1, 64), F32)
+        payload, _ = encode_leaf(c, None, None, None, spec)
+        assert payload.indices is None and payload.scales is None
+        np.testing.assert_array_equal(np.asarray(payload.data), np.asarray(c))
+        np.testing.assert_array_equal(
+            np.asarray(decode_leaf(payload, spec)), np.asarray(c)
+        )
+
+
+# ------------------------------------------------------ bytes accounting
+class TestMeasuredBytes:
+    @pytest.mark.parametrize("dtype", [F32, F64, BF16])
+    @pytest.mark.parametrize("shape", SHAPES)
+    @pytest.mark.parametrize("ratio,bits,mode", CONFIGS)
+    def test_price_equals_packed_length(self, dtype, shape, ratio, bits,
+                                        mode):
+        """The analytic price, the abstract probe and the concrete packed
+        buffers are the same number — agreement by construction."""
+        spec = LeafSpec.build(shape, dtype, ratio, bits, mode)
+        assert probe_leaf_bytes(spec) == spec.wire_bytes()
+        c, e, u_sel, u_rnd = _leaf(shape, dtype, m=1, seed=5)
+        flat = c.reshape(spec.rows, spec.cols)
+        payload, _ = encode_leaf(
+            flat, e.reshape(flat.shape), u_sel, u_rnd, spec
+        )
+        assert payload.nbytes == spec.wire_bytes()
+
+    def test_measured_matches_priced_per_round(self):
+        x = jnp.zeros((1000,))
+        y = jnp.zeros((10,))
+        for s in (
+            CompressedGT(compression_ratio=0.1, wire_transport=True),
+            CompressedGT(
+                compression_ratio=0.25, mode="randk", wire_transport=True
+            ),
+            QuantizedGT(bits=8, wire_transport=True),
+            QuantizedGT(bits=4, ratio=0.1, wire_transport=True),
+            QuantizedGT(
+                bits=2, ratio=0.5, mode="randk", wire_transport=True
+            ),
+        ):
+            priced = s.bytes_per_round(x, y, 16)
+            bare = measured_bytes_per_round(
+                s, x, y, 16, include_headers=False
+            )
+            assert bare == priced, s
+            full = measured_bytes_per_round(s, x, y, 16)
+            assert full - bare == wire_header_overhead(x, y)
+            assert wire_header_overhead(x, y) == 2 * 2 * HEADER_BYTES
+
+    def test_dense_strategies_measure_their_price(self):
+        x, y = jnp.zeros((100,)), jnp.zeros((5,))
+        for s in (GradientTracking(), QuantizedGT(bits=32, ratio=1.0)):
+            assert measured_bytes_per_round(s, x, y, 8) == s.bytes_per_round(
+                x, y, 8
+            )
+
+    def test_correction_dtype_is_what_gets_priced_and_measured(self):
+        """REGRESSION (review): the engine casts corrections to
+        `correction_dtype` before the transform, so both the analytic
+        price and the measured probe must use that dtype for the
+        correction exchange — and they must equal what the strategy's
+        PackedTree actually weighs."""
+        x, y = jnp.zeros((256,)), jnp.zeros((64,))
+        s = QuantizedGT(
+            bits=8, ratio=0.5, wire_transport=True,
+            correction_dtype=jnp.bfloat16, seed=0,
+        )
+        priced = s.bytes_per_round(x, y, 16)
+        bare = measured_bytes_per_round(s, x, y, 16, include_headers=False)
+        assert bare == priced
+        # and against the real packed buffers the transform emits
+        m = 2
+        cx = jnp.zeros((m,) + x.shape, jnp.bfloat16)
+        cy = jnp.zeros((m,) + y.shape, jnp.bfloat16)
+        px, py, _ = s.transform_correction(cx, cy, s.init_state(x, y, m))
+        dense_models = 2 * (x.size * 8 + y.size * 8)
+        assert priced == dense_models + 2 * (
+            (px.wire_bytes() + py.wire_bytes()) // m
+        )
+
+    def test_wire_off_measures_dense_traffic(self):
+        """REGRESSION (review): a compressor with wire_transport OFF
+        still moves dense masked corrections — its measurement is the
+        dense gradient-tracking cost, NOT its compressed price; the gap
+        is what enabling the wire buys."""
+        x, y = jnp.zeros((1000,)), jnp.zeros((10,))
+        dense_round = 4 * (x.size * 8 + y.size * 8)
+        for off, on in (
+            (CompressedGT(compression_ratio=0.1),
+             CompressedGT(compression_ratio=0.1, wire_transport=True)),
+            (QuantizedGT(bits=8),
+             QuantizedGT(bits=8, wire_transport=True)),
+        ):
+            assert off.bytes_per_round(x, y, 16) == on.bytes_per_round(
+                x, y, 16
+            )
+            assert measured_bytes_per_round(off, x, y, 16) == dense_round
+            assert measured_bytes_per_round(on, x, y, 16) < dense_round
+
+    def test_packed_tree_reports_its_bytes(self):
+        s = QuantizedGT(bits=8, ratio=0.5, wire_transport=True)
+        m = 4
+        cx = {"a": jax.random.normal(jax.random.PRNGKey(6), (m, 256))}
+        cy = {"d": jax.random.normal(jax.random.PRNGKey(7), (m, 64))}
+        state = s.init_state(
+            jax.tree.map(lambda u: u[0], cx),
+            jax.tree.map(lambda u: u[0], cy), m,
+        )
+        px, py, _ = s.transform_correction(cx, cy, state)
+        assert isinstance(px, PackedTree) and isinstance(py, PackedTree)
+        # the stacked payload is m agents' worth of the per-agent price
+        per_agent = LeafSpec.build((256,), cx["a"].dtype, 0.5, 8).wire_bytes()
+        assert px.wire_bytes() == m * per_agent
+        assert px.total_bytes() == px.wire_bytes() + HEADER_BYTES
+
+
+# ------------------------------------------------------------ engine path
+class TestEngineWireParity:
+    @pytest.fixture(scope="class")
+    def quad(self):
+        return make_quadratic_problem(
+            jax.random.PRNGKey(0), dim=6, num_samples=20, num_agents=4
+        )
+
+    @pytest.mark.parametrize(
+        "mk",
+        [
+            lambda w: CompressedGT(compression_ratio=0.25, wire_transport=w),
+            lambda w: QuantizedGT(bits=8, wire_transport=w),
+            lambda w: QuantizedGT(
+                bits=4, ratio=0.5, mode="randk", wire_transport=w
+            ),
+            lambda w: CompressedGT(
+                compression_ratio=0.25, error_feedback=False, wire_transport=w
+            ),
+        ],
+        ids=["compressed", "quantized", "quantized_randk", "no_feedback"],
+    )
+    def test_wire_and_dense_paths_are_bitwise_identical(self, quad, mk):
+        """The packed payload carries exactly the dense chat, so turning
+        the wire on cannot move a single bit of the iterates."""
+        x0 = jnp.zeros(6)
+        outs = {}
+        for w in (False, True):
+            s = mk(w)
+            rnd = jax.jit(
+                make_round(quad.loss, s, 4, 1e-3, explicit_state=True)
+            )
+            (xT, yT, _), _ = run_strategy_rounds(
+                rnd, x0, x0, quad.agent_data, 5, s.init_state(x0, x0, 4)
+            )
+            outs[w] = (np.asarray(xT), np.asarray(yT))
+        np.testing.assert_array_equal(outs[False][0], outs[True][0])
+        np.testing.assert_array_equal(outs[False][1], outs[True][1])
+
+    def test_identity_config_degenerates_to_dense_gt(self, quad):
+        """bits>=32 + ratio>=1 with the wire on IS GradientTracking —
+        bitwise, keeping the existing parity suites meaningful."""
+        s = QuantizedGT(bits=32, ratio=1.0, wire_transport=True)
+        assert not s.stateful and s.exact_correction
+        ra = jax.jit(make_round(quad.loss, s, 4, 1e-3))
+        rb = jax.jit(make_round(quad.loss, GradientTracking(), 4, 1e-3))
+        xa = xb = jnp.ones(6)
+        ya = yb = -jnp.ones(6)
+        for t in range(4):
+            xa, ya = ra(xa, ya, quad.agent_data)
+            xb, yb = rb(xb, yb, quad.agent_data)
+            assert bool(jnp.all(xa == xb)) and bool(jnp.all(ya == yb)), t
+
+    def test_transform_returns_packed_trees_with_decode_hook(self):
+        """The engine detects wire payloads by the duck-typed `decode`
+        hook; the decoded tree matches the dense transform exactly."""
+        s_wire = QuantizedGT(bits=8, ratio=0.25, wire_transport=True)
+        s_dense = QuantizedGT(bits=8, ratio=0.25)
+        m = 3
+        mk = lambda key, sh: jax.random.normal(key, (m,) + sh)
+        ks = jax.random.split(jax.random.PRNGKey(8), 3)
+        cx = {"a": mk(ks[0], (128,)), "b": mk(ks[1], (4, 32))}
+        cy = {"d": mk(ks[2], (37,))}
+        x0 = jax.tree.map(lambda u: u[0], cx)
+        y0 = jax.tree.map(lambda u: u[0], cy)
+        pw = s_wire.transform_correction(
+            cx, cy, s_wire.init_state(x0, y0, m)
+        )
+        pd = s_dense.transform_correction(
+            cx, cy, s_dense.init_state(x0, y0, m)
+        )
+        assert hasattr(pw[0], "decode")
+        for a, b in zip(
+            jax.tree.leaves((pw[0].decode(), pw[1].decode())),
+            jax.tree.leaves((pd[0], pd[1])),
+        ):
+            assert a.shape == b.shape and a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # error-feedback buffers agree too (resid is path-independent)
+        for a, b in zip(jax.tree.leaves(pw[2]), jax.tree.leaves(pd[2])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_runner_wire_report(self, quad):
+        from repro.fed import FederatedRunner
+
+        runner = FederatedRunner.from_strategy(
+            quad.loss,
+            QuantizedGT(bits=8, wire_transport=True),
+            quad.agent_data,
+            num_local_steps=4,
+            eta_x=1e-3,
+        )
+        x0 = jnp.zeros(6)
+        rep = runner.wire_report(x0, x0, 4)
+        assert rep["measured_bytes_per_round"] - rep["bytes_per_round"] == (
+            wire_header_overhead(x0, x0)
+        )
