@@ -6,14 +6,27 @@ EXECUTED collective bytes per round from the trip-count-scaled HLO census.
 
 Expected (DESIGN.md §2): per round, Local SGDA moves ~1 model of traffic,
 FedGDA-GT ~2x that (tracked gradient + aggregate), sync GDA ~K x.  Rounds
-to eps come from benchmarks/fig1; total = product."""
+to eps come from benchmarks/fig1; total = product.
+
+Async-runtime artifacts (dry-run `--runtime async`, tag `__async`) also
+carry the census of the packed-payload all-gather — the collective the
+multi-host launch path actually drives (launch/multihost.py).  Its
+all-gather bytes must equal both the LeafSpec-derived expectation and the
+m-agent payload share of `transport.measured_bytes_per_round`:
+`--check-async` exits non-zero when they drift apart by more than 10%,
+which is the wire-level closure of the byte-accounting story (priced ==
+packed == gathered on the interconnect)."""
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
+import sys
 
 from .common import emit
+
+ASYNC_TOL = 0.10  # all-gather bytes may drift from the payload by <= 10%
 
 
 def _coll_bytes(rec):
@@ -32,6 +45,8 @@ def run(rows=None, dryrun_dir: str = "experiments/dryrun"):
         if rec["kind"] != "train":
             continue
         algo = rec.get("algorithm") or "fedgda_gt"
+        if rec.get("runtime", "sync") != "sync":
+            algo += f"[{rec['runtime']}]"
         key = (rec["arch"], rec["shape"], rec["mesh"])
         combos.setdefault(key, {})[algo] = rec
     for (arch, shape, mesh), algos in sorted(combos.items()):
@@ -40,6 +55,7 @@ def run(rows=None, dryrun_dir: str = "experiments/dryrun"):
         base = _coll_bytes(algos.get("local_sgda", {})) or None
         for algo, rec in sorted(algos.items()):
             b = _coll_bytes(rec)
+            gather = rec.get("gather_census", {}).get("all-gather", {})
             rows.append(
                 {
                     "arch": arch,
@@ -48,13 +64,17 @@ def run(rows=None, dryrun_dir: str = "experiments/dryrun"):
                     "algorithm": algo,
                     "collective_GiB_per_round": f"{b / 2**30:.3f}",
                     "vs_local_sgda": f"{b / base:.2f}x" if base else "",
+                    "payload_gather_KiB": (
+                        f"{gather['bytes'] / 2**10:.1f}" if gather else ""
+                    ),
                 }
             )
     if rows:
         emit(
             rows,
             ["arch", "shape", "mesh", "algorithm",
-             "collective_GiB_per_round", "vs_local_sgda"],
+             "collective_GiB_per_round", "vs_local_sgda",
+             "payload_gather_KiB"],
             "per-round collective traffic by algorithm (HLO census)",
         )
     else:
@@ -62,5 +82,51 @@ def run(rows=None, dryrun_dir: str = "experiments/dryrun"):
     return rows
 
 
+def check_async(dryrun_dir: str = "experiments/dryrun",
+                tol: float = ASYNC_TOL) -> int:
+    """Audit every async-runtime artifact: the gather program's
+    all-gather collective bytes vs (a) the LeafSpec expectation stored at
+    lower time and (b) the m-agent payload share of
+    `measured_bytes_per_round`.  Returns the number of drifting records
+    (0 = the interconnect moves exactly the priced payload)."""
+    checked = bad = 0
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(path))
+        if "gather_census" not in rec:
+            continue
+        checked += 1
+        gathered = rec["gather_census"].get("all-gather", {}).get("bytes", 0)
+        expected = rec.get("expected_gather_bytes", 0)
+        wire = rec.get("wire", {})
+        target = wire.get("num_agents", 0) * wire.get(
+            "payload_share_per_agent", 0
+        )
+        drifts = [
+            gathered / ref - 1.0 for ref in (expected, target) if ref
+        ]
+        ok = bool(drifts) and all(abs(d) <= tol for d in drifts)
+        bad += not ok
+        print(
+            f"[{'ok' if ok else 'DRIFT'}] {os.path.basename(path)}: "
+            f"gathered={gathered} expected={expected} "
+            f"m*payload_share={target}"
+        )
+    if not checked:
+        print("check-async: no __async dry-run artifacts found")
+        return 1
+    return bad
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--dryrun-dir", default="experiments/dryrun")
+    ap.add_argument(
+        "--check-async",
+        action="store_true",
+        help="gate async-mode all-gather bytes against the measured "
+        f"payload (> {ASYNC_TOL:.0%} drift exits non-zero)",
+    )
+    args = ap.parse_args()
+    if args.check_async:
+        sys.exit(1 if check_async(args.dryrun_dir) else 0)
+    run(dryrun_dir=args.dryrun_dir)

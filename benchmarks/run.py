@@ -9,6 +9,7 @@ Tables:
   fig3        — Local SGDA fixed-point bias vs K (paper Fig 3 / App C)
   generalization — Theorem-2 bound vs measured gap (paper Sec 4)
   comm        — bytes-to-accuracy, star-topology model (paper headline)
+  overlap     — wall-clock round latency, sync vs async runtime
   collectives — per-round collective traffic by algorithm (HLO census)
   kernels     — Pallas kernels vs ref oracles
   roofline    — three-term roofline per (arch x shape) (deliverable g)
@@ -38,6 +39,7 @@ def main() -> None:
         "fig3": fig3_fixed_point.run,
         "generalization": generalization.run,
         "comm": comm_efficiency.run,
+        "overlap": comm_efficiency.overlap,
         "collectives": comm_collectives.run,
         "kernels": kernels.run,
         "roofline": roofline.run,

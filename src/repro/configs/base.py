@@ -59,8 +59,13 @@ class ModelConfig:
     # encode compressed corrections as REAL packed (value, index, scale)
     # payloads (repro.fed.transport) instead of dense masked trees —
     # identical iterates, packed payload bytes matching bytes_per_round
-    # (the multi-host collective over packed buffers is a roadmap item)
     wire_transport: bool = False
+    # round execution schedule: "sync" lowers the whole round as one
+    # fused program; "async" is the phase-dispatched runtime
+    # (fed.async_runtime / launch.multihost) — per-agent-shard phase
+    # programs, server-side exchange, packed-payload all-gather (the
+    # dry-run tags its artifacts "__async" and adds the gather census)
+    runtime: str = "sync"
     # shape support
     supports_decode: bool = True
     supports_long_context: bool = False

@@ -9,7 +9,18 @@ from .types import (
     tree_sq_dist,
 )
 from .projections import l2_ball_proj, box_proj, simplex_proj
-from .engine import default_update, make_round, run_strategy_rounds
+from .engine import (
+    RoundPhases,
+    RoundState,
+    agent_mean,
+    agent_weighted_sum,
+    anchor_step,
+    default_update,
+    make_phases,
+    make_round,
+    run_strategy_rounds,
+    tracking_corrections,
+)
 from .gda import make_gda_step, make_gda_step_reference, run_rounds
 from .local_sgda import (
     make_local_sgda_round,
@@ -43,9 +54,16 @@ __all__ = [
     "l2_ball_proj",
     "box_proj",
     "simplex_proj",
+    "RoundPhases",
+    "RoundState",
+    "agent_mean",
+    "agent_weighted_sum",
+    "anchor_step",
     "default_update",
+    "make_phases",
     "make_round",
     "run_strategy_rounds",
+    "tracking_corrections",
     "make_gda_step",
     "make_gda_step_reference",
     "run_rounds",

@@ -1,33 +1,49 @@
-"""Unified federated minimax round engine.
+"""Phase-split federated minimax round engine.
 
-`make_round(loss, strategy, ...)` emits one communication round of the
-generic federated descent-ascent template
+One communication round of the generic federated descent-ascent template
+is four **phases**, each a pure function over an explicit `RoundState`:
 
-  1. server broadcasts (x^t, y^t); a strategy may sample participants
-  2. (if the strategy corrects drift) agents exchange gradients once and
-     form the tracking correction c_i = gbar - g_i, possibly transformed
-     (reduced dtype, sparsification, error feedback)
-  3. K local GDA steps, each adding c_i to the local gradient
-  4. server aggregates (weighted by participation) and projects
+  broadcast             server ships (x^t, y^t) to the agents; a strategy
+                        may sample participants (client-sampling weights)
+  exchange_corrections  (if the strategy corrects drift) agents exchange
+                        gradients once at the anchor point and form the
+                        tracking correction c_i = gbar - g_i, possibly
+                        transformed (reduced dtype, sparsification,
+                        quantization, error feedback, packed wire payloads)
+  local_steps           K local GDA steps, each adding c_i to the local
+                        gradient (fused-k0 anchor step when the correction
+                        is exact — see below)
+  aggregate             server aggregates (weighted by participation) and
+                        projects
+
+`make_phases(loss, strategy, ...)` builds the four phase functions for a
+strategy; `make_round` is their fused single-program composition and
+reproduces the pre-split monolithic round BITWISE (the phase split only
+reorganizes the trace — same primitives, same order; see
+tests/test_phases.py and tests/test_engine_parity.py).  Runtimes that
+dispatch phases separately — `repro.fed.async_runtime` drives per-agent-
+shard `broadcast`/`local_steps` programs on their own devices and splits
+`exchange_corrections` between the shards (anchor gradients) and the
+server (transform) — consume the same phase functions, so there is one
+oracle for the round math whatever the execution schedule.
 
 The legacy constructors — `make_gda_step`, `make_local_sgda_round`,
-`make_fedgda_gt_round` — are thin wrappers over this engine with the
-`FullSync` / `LocalOnly` / `GradientTracking` strategies; the engine
-reproduces their iterate sequences exactly (bitwise for gradient
-tracking — see tests/test_engine_parity.py).  Strategies are duck-typed
-(`repro.fed.strategies.CommStrategy` is the reference protocol), which
-keeps this module free of `repro.fed` imports.
+`make_fedgda_gt_round` — remain thin wrappers over this engine with the
+`FullSync` / `LocalOnly` / `GradientTracking` strategies.  Strategies are
+duck-typed (`repro.fed.strategies.CommStrategy` is the reference
+protocol), which keeps this module free of `repro.fed` imports.
 
 Fused k=0 (§Perf, exact): when the correction is exact, the first local
 gradient is evaluated at the same point as the tracking gradient, so
 g_i + c_i == gbar and the step reduces to z <- z -/+ eta * gbar, saving
 one full gradient evaluation per round.  Strategies whose corrections are
-inexact (sparsified) report `exact_correction = False` and take the
-literal K-step schedule instead.
+inexact (sparsified/quantized) report `exact_correction = False` and take
+the literal K-step schedule instead.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+import dataclasses
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +57,10 @@ from .types import (
     tree_broadcast_agents,
 )
 
+#: sentinel distinguishing "no override" from an explicit None weight
+#: override in `broadcast` (None means uniform averaging)
+_UNSET = object()
+
 
 def default_update(z: Pytree, g: Pytree, c: Pytree, eta, sign: float) -> Pytree:
     """z <- z + sign*eta*(g + c); sign=-1 descent (x), +1 ascent (y)."""
@@ -49,7 +69,7 @@ def default_update(z: Pytree, g: Pytree, c: Pytree, eta, sign: float) -> Pytree:
     )
 
 
-def _agent_mean(tree: Pytree, weights) -> Pytree:
+def agent_mean(tree: Pytree, weights) -> Pytree:
     """Uniform mean over the agent axis (weights None — the bitwise-pinned
     legacy path) or a weighted sum with participation weights."""
     if weights is None:
@@ -59,11 +79,258 @@ def _agent_mean(tree: Pytree, weights) -> Pytree:
     )
 
 
-def _anchor_step(zs: Pytree, gbar: Pytree, eta, sign: float) -> Pytree:
+def agent_weighted_sum(tree: Pytree, weights) -> Pytree:
+    """Partial aggregate of one agent SHARD: the weighted sum (weights
+    None: plain sum — divide by the global m after combining shards).
+    Shard runtimes combine these server-side; `agent_mean` is the
+    single-program equivalent."""
+    if weights is None:
+        return jax.tree.map(lambda u: jnp.sum(u, axis=0), tree)
+    return jax.tree.map(
+        lambda u: jnp.tensordot(weights.astype(u.dtype), u, axes=1), tree
+    )
+
+
+def anchor_step(zs: Pytree, gbar: Pytree, eta, sign: float) -> Pytree:
     """The fused k=0 local step: every agent moves by the global gradient."""
     return jax.tree.map(
         lambda u, gb: u + sign * eta * gb[None].astype(u.dtype), zs, gbar
     )
+
+
+def tracking_corrections(
+    gx: Pytree, gy: Pytree, gbar_x: Pytree, gbar_y: Pytree, cdt=None
+):
+    """The raw tracking corrections c_i = gbar - g_i per agent, optionally
+    stored reduced (`cdt`).  One owner for the formation across every
+    schedule: the fused exchange phase, the async runtime's server
+    exchange and the multi-host shard encode all call this."""
+
+    def corr(gbar, gi):
+        c = gbar[None] - gi
+        if cdt is not None:
+            c = c.astype(cdt)
+        return c
+
+    return jax.tree.map(corr, gbar_x, gx), jax.tree.map(corr, gbar_y, gy)
+
+
+# kept as private aliases — pre-split internal names, still referenced by
+# downstream forks of the monolithic engine
+_agent_mean = agent_mean
+_anchor_step = anchor_step
+
+
+@dataclasses.dataclass
+class RoundState:
+    """Explicit state threaded through the round phases.
+
+    A registered-dataclass pytree, so separately-jitted phase programs can
+    take and return it directly; `fused` is static metadata (it gates
+    whether `local_steps` takes the anchor shortcut and must be known at
+    trace time).
+
+    Fields are populated progressively: `broadcast` fills xs/ys/weights,
+    `exchange_corrections` fills cx/cy/gbar_x/gbar_y/fused, `local_steps`
+    advances xs/ys, `aggregate` consumes the lot.  Unused fields stay
+    None (empty subtrees)."""
+
+    x: Pytree                      # global iterates at round start
+    y: Pytree
+    state: Pytree                  # strategy state (RNG, EF buffers)
+    xs: Pytree = None              # per-agent iterates [m, ...]
+    ys: Pytree = None
+    weights: Optional[jax.Array] = None  # participation weights (None=uniform)
+    cx: Pytree = None              # tracking corrections [m, ...]
+    cy: Pytree = None
+    gbar_x: Pytree = None          # anchor-point global gradients
+    gbar_y: Pytree = None
+    fused: bool = False            # static: anchor shortcut applies
+
+
+jax.tree_util.register_dataclass(
+    RoundState,
+    data_fields=(
+        "x", "y", "state", "xs", "ys", "weights",
+        "cx", "cy", "gbar_x", "gbar_y",
+    ),
+    meta_fields=("fused",),
+)
+
+
+class RoundPhases(NamedTuple):
+    """The four phase functions for one strategy (see module docstring).
+
+    broadcast(x, y, agent_data, state, *, weights=...) -> RoundState
+    exchange_corrections(rs, agent_data) -> RoundState
+    local_steps(rs, agent_data) -> RoundState
+    aggregate(rs) -> (x1, y1, state)
+
+    Each is pure and shard-agnostic: the agent count is read from
+    `agent_data` at trace time, so the same functions serve the fused
+    single-program round (`make_round`) and per-shard dispatch
+    (`fed.async_runtime`).  `broadcast`'s keyword-only `weights` lets a
+    sharded runtime sample participation ONCE server-side and feed each
+    shard its slice instead of re-sampling per shard."""
+
+    broadcast: Callable
+    exchange_corrections: Callable
+    local_steps: Callable
+    aggregate: Callable
+
+
+def _num_agents(agent_data: Pytree) -> int:
+    return jax.tree.leaves(agent_data)[0].shape[0]
+
+
+def make_phases(
+    loss: LossFn,
+    strategy,
+    num_local_steps: int,
+    eta_x: float,
+    eta_y: Optional[float] = None,
+    *,
+    proj_x: ProjFn = identity_proj,
+    proj_y: ProjFn = identity_proj,
+    update_fn: Callable = default_update,
+    constrain_agents: Optional[Callable] = None,
+) -> RoundPhases:
+    """Build the four round phases for `strategy` (see RoundPhases)."""
+    if eta_y is None:
+        eta_y = eta_x
+    gfn = grad_xy(loss)
+
+    if getattr(strategy, "sync_every_step", False):
+        # FullSync: K communicated steps, each a centralized GDA update.
+        # There is no per-agent divergence to broadcast or correct, so
+        # broadcast/exchange are identities and the whole round lives in
+        # local_steps (each "local" step IS a global aggregate).
+        vg = jax.vmap(gfn, in_axes=(None, None, 0))
+
+        def gda_step(x, y, agent_data):
+            g = vg(x, y, agent_data)
+            gx = jax.tree.map(lambda u: jnp.mean(u, axis=0), g.gx)
+            gy = jax.tree.map(lambda u: jnp.mean(u, axis=0), g.gy)
+            x1 = proj_x(jax.tree.map(lambda u, v: u - eta_x * v, x, gx))
+            y1 = proj_y(jax.tree.map(lambda u, v: u + eta_y * v, y, gy))
+            return x1, y1
+
+        def broadcast(x, y, agent_data, state, *, weights=_UNSET):
+            del agent_data, weights
+            return RoundState(x=x, y=y, state=state)
+
+        def exchange_corrections(rs, agent_data):
+            del agent_data
+            return rs
+
+        def local_steps(rs, agent_data):
+            x, y = rs.x, rs.y
+            if num_local_steps == 1:
+                x, y = gda_step(x, y, agent_data)
+            else:
+                (x, y), _ = jax.lax.scan(
+                    lambda c, _: (gda_step(*c, agent_data), None),
+                    (x, y),
+                    None,
+                    length=num_local_steps,
+                )
+            return dataclasses.replace(rs, x=x, y=y)
+
+        def aggregate(rs):
+            return rs.x, rs.y, rs.state
+
+        return RoundPhases(broadcast, exchange_corrections, local_steps, aggregate)
+
+    vgrad = jax.vmap(gfn, in_axes=(0, 0, 0))
+    use_corr = bool(getattr(strategy, "use_correction", False))
+    cdt = getattr(strategy, "correction_dtype", None)
+
+    def broadcast(x, y, agent_data, state, *, weights=_UNSET):
+        m = _num_agents(agent_data)
+        if weights is _UNSET:
+            weights, state = strategy.sample_weights(state, m)
+        xs = tree_broadcast_agents(x, m)
+        ys = tree_broadcast_agents(y, m)
+        if constrain_agents is not None:
+            xs, ys = constrain_agents(xs, ys)
+        return RoundState(
+            x=x, y=y, state=state, xs=xs, ys=ys, weights=weights
+        )
+
+    def exchange_corrections(rs, agent_data):
+        if not use_corr:
+            return rs
+        m = _num_agents(agent_data)
+        state = rs.state
+        if m > 1:
+            # one gradient exchange at the anchor point
+            g0 = vgrad(rs.xs, rs.ys, agent_data)
+            gbar_x = agent_mean(g0.gx, rs.weights)
+            gbar_y = agent_mean(g0.gy, rs.weights)
+            cx, cy = tracking_corrections(g0.gx, g0.gy, gbar_x, gbar_y, cdt)
+            cx, cy, state = strategy.transform_correction(cx, cy, state)
+            # wire-transport strategies hand back PACKED payloads
+            # (repro.fed.transport.PackedTree — duck-typed on the
+            # `decode` hook to keep the engine import-decoupled):
+            # the server gathers the packed buffers and scatter-adds
+            # them back to dense corrections before the local steps
+            if hasattr(cx, "decode"):
+                cx = cx.decode()
+            if hasattr(cy, "decode"):
+                cy = cy.decode()
+            fused = bool(strategy.exact_correction)
+            return dataclasses.replace(
+                rs, cx=cx, cy=cy, gbar_x=gbar_x, gbar_y=gbar_y,
+                fused=fused, state=state,
+            )
+        # m == 1: the correction is identically zero and elided
+        cx = jax.tree.map(jnp.zeros_like, rs.xs)
+        cy = jax.tree.map(jnp.zeros_like, rs.ys)
+        return dataclasses.replace(rs, cx=cx, cy=cy)
+
+    def local_steps(rs, agent_data):
+        xs, ys = rs.xs, rs.ys
+        if use_corr:
+            cx, cy = rs.cx, rs.cy
+
+            def inner(carry, _):
+                xs, ys = carry
+                g = vgrad(xs, ys, agent_data)
+                xs = update_fn(xs, g.gx, cx, eta_x, -1.0)
+                ys = update_fn(ys, g.gy, cy, eta_y, +1.0)
+                if constrain_agents is not None:
+                    # re-anchor the scan carry's sharding every step
+                    xs, ys = constrain_agents(xs, ys)
+                return (xs, ys), None
+
+        else:
+
+            def inner(carry, _):
+                xs, ys = carry
+                g = vgrad(xs, ys, agent_data)
+                xs = jax.tree.map(lambda u, v: u - eta_x * v, xs, g.gx)
+                ys = jax.tree.map(lambda u, v: u + eta_y * v, ys, g.gy)
+                return (xs, ys), None
+
+        inner_steps = num_local_steps
+        if rs.fused:
+            xs = anchor_step(xs, rs.gbar_x, eta_x, -1.0)
+            ys = anchor_step(ys, rs.gbar_y, eta_y, +1.0)
+            if constrain_agents is not None:
+                xs, ys = constrain_agents(xs, ys)
+            inner_steps -= 1
+        if inner_steps > 0:
+            (xs, ys), _ = jax.lax.scan(
+                inner, (xs, ys), None, length=inner_steps
+            )
+        return dataclasses.replace(rs, xs=xs, ys=ys)
+
+    def aggregate(rs):
+        x1 = proj_x(agent_mean(rs.xs, rs.weights))
+        y1 = proj_y(agent_mean(rs.ys, rs.weights))
+        return x1, y1, rs.state
+
+    return RoundPhases(broadcast, exchange_corrections, local_steps, aggregate)
 
 
 def make_round(
@@ -79,7 +346,8 @@ def make_round(
     constrain_agents: Optional[Callable] = None,
     explicit_state: Optional[bool] = None,
 ) -> Callable:
-    """Build one communication round for `strategy`.
+    """Build one communication round for `strategy`: the fused
+    single-program composition of the four phases (`make_phases`).
 
     Returns `round(x, y, agent_data) -> (x, y)` for stateless strategies.
     Stateful strategies (client sampling RNG, error-feedback buffers)
@@ -88,8 +356,6 @@ def make_round(
     `explicit_state=True` to force that signature for stateless
     strategies too (useful when mixing strategies under one scan).
     """
-    if eta_y is None:
-        eta_y = eta_x
     stateful = bool(getattr(strategy, "stateful", False))
     if explicit_state is None:
         explicit_state = stateful
@@ -98,111 +364,23 @@ def make_round(
             f"strategy {strategy!r} carries cross-round state; build with "
             "explicit_state=True and thread `state` through the rounds"
         )
-    gfn = grad_xy(loss)
+    phases = make_phases(
+        loss,
+        strategy,
+        num_local_steps,
+        eta_x,
+        eta_y,
+        proj_x=proj_x,
+        proj_y=proj_y,
+        update_fn=update_fn,
+        constrain_agents=constrain_agents,
+    )
 
-    if getattr(strategy, "sync_every_step", False):
-        # FullSync: K communicated steps, each a centralized GDA update
-        vg = jax.vmap(gfn, in_axes=(None, None, 0))
-
-        def gda_step(x, y, agent_data):
-            g = vg(x, y, agent_data)
-            gx = jax.tree.map(lambda u: jnp.mean(u, axis=0), g.gx)
-            gy = jax.tree.map(lambda u: jnp.mean(u, axis=0), g.gy)
-            x1 = proj_x(jax.tree.map(lambda u, v: u - eta_x * v, x, gx))
-            y1 = proj_y(jax.tree.map(lambda u, v: u + eta_y * v, y, gy))
-            return x1, y1
-
-        def core(x, y, agent_data, state):
-            if num_local_steps == 1:
-                x, y = gda_step(x, y, agent_data)
-            else:
-                (x, y), _ = jax.lax.scan(
-                    lambda c, _: (gda_step(*c, agent_data), None),
-                    (x, y),
-                    None,
-                    length=num_local_steps,
-                )
-            return x, y, state
-
-    else:
-        vgrad = jax.vmap(gfn, in_axes=(0, 0, 0))
-        use_corr = bool(getattr(strategy, "use_correction", False))
-        cdt = getattr(strategy, "correction_dtype", None)
-
-        def core(x, y, agent_data, state):
-            m = jax.tree.leaves(agent_data)[0].shape[0]
-            weights, state = strategy.sample_weights(state, m)
-            xs = tree_broadcast_agents(x, m)
-            ys = tree_broadcast_agents(y, m)
-            if constrain_agents is not None:
-                xs, ys = constrain_agents(xs, ys)
-
-            fused = False
-            if use_corr and m > 1:
-                # one gradient exchange at the anchor point
-                g0 = vgrad(xs, ys, agent_data)
-                gbar_x = _agent_mean(g0.gx, weights)
-                gbar_y = _agent_mean(g0.gy, weights)
-
-                def corr(gbar, gi):
-                    c = gbar[None] - gi
-                    if cdt is not None:
-                        c = c.astype(cdt)
-                    return c
-
-                cx = jax.tree.map(corr, gbar_x, g0.gx)
-                cy = jax.tree.map(corr, gbar_y, g0.gy)
-                cx, cy, state = strategy.transform_correction(cx, cy, state)
-                # wire-transport strategies hand back PACKED payloads
-                # (repro.fed.transport.PackedTree — duck-typed on the
-                # `decode` hook to keep the engine import-decoupled):
-                # the server gathers the packed buffers and scatter-adds
-                # them back to dense corrections before the local steps
-                if hasattr(cx, "decode"):
-                    cx = cx.decode()
-                if hasattr(cy, "decode"):
-                    cy = cy.decode()
-                fused = bool(strategy.exact_correction)
-            elif use_corr:
-                # m == 1: the correction is identically zero and elided
-                cx = jax.tree.map(jnp.zeros_like, xs)
-                cy = jax.tree.map(jnp.zeros_like, ys)
-
-            if use_corr:
-
-                def inner(carry, _):
-                    xs, ys = carry
-                    g = vgrad(xs, ys, agent_data)
-                    xs = update_fn(xs, g.gx, cx, eta_x, -1.0)
-                    ys = update_fn(ys, g.gy, cy, eta_y, +1.0)
-                    if constrain_agents is not None:
-                        # re-anchor the scan carry's sharding every step
-                        xs, ys = constrain_agents(xs, ys)
-                    return (xs, ys), None
-
-            else:
-
-                def inner(carry, _):
-                    xs, ys = carry
-                    g = vgrad(xs, ys, agent_data)
-                    xs = jax.tree.map(lambda u, v: u - eta_x * v, xs, g.gx)
-                    ys = jax.tree.map(lambda u, v: u + eta_y * v, ys, g.gy)
-                    return (xs, ys), None
-
-            inner_steps = num_local_steps
-            if fused:
-                xs = _anchor_step(xs, gbar_x, eta_x, -1.0)
-                ys = _anchor_step(ys, gbar_y, eta_y, +1.0)
-                if constrain_agents is not None:
-                    xs, ys = constrain_agents(xs, ys)
-                inner_steps -= 1
-            if inner_steps > 0:
-                (xs, ys), _ = jax.lax.scan(
-                    inner, (xs, ys), None, length=inner_steps
-                )
-            x1 = proj_x(_agent_mean(xs, weights))
-            y1 = proj_y(_agent_mean(ys, weights))
-            return x1, y1, state
+    def core(x, y, agent_data, state):
+        rs = phases.broadcast(x, y, agent_data, state)
+        rs = phases.exchange_corrections(rs, agent_data)
+        rs = phases.local_steps(rs, agent_data)
+        return phases.aggregate(rs)
 
     if explicit_state:
         return core

@@ -1,4 +1,5 @@
 from .runtime import FederatedRunner, RoundStats
+from .async_runtime import AsyncFederatedRunner
 from .comm import comm_table
 from .strategies import (
     CommStrategy,
@@ -22,6 +23,7 @@ from .transport import (
 )
 
 __all__ = [
+    "AsyncFederatedRunner",
     "FederatedRunner",
     "RoundStats",
     "comm_table",

@@ -1,0 +1,474 @@
+"""Asynchronous multi-device federated round driver.
+
+`AsyncFederatedRunner` executes the SAME round phases as the fused
+single-program engine (`repro.core.engine.make_phases`) but dispatches
+them per **agent shard** on separate devices, so the schedule — not the
+math — changes:
+
+  * the m agents are split into contiguous shards, one per device; each
+    shard's `agent_data` slice and per-agent strategy state (error-
+    feedback buffers — `strategy.sharded_state_keys`) live on that
+    shard's device permanently, instead of replicating the full stack;
+  * `broadcast` + the anchor-gradient half of `exchange_corrections`
+    run per shard as independently dispatched programs (one XLA stream
+    per device — jax's async dispatch keeps every shard's queue busy
+    while the host runs ahead);
+  * the server half of the exchange — participation sampling, gbar,
+    forming c_i = gbar - g_i, the strategy's `transform_correction`
+    (identical code, identical RNG draws as the sync path, so iterates
+    match `FederatedRunner` to fp tolerance) and the packed-payload
+    decode — runs on the server device over the gathered gradients;
+  * `local_steps` runs per shard with its correction slice; the shard
+    returns a weighted PARTIAL aggregate (`core.agent_weighted_sum`),
+    and the server combines + projects;
+  * the next round's `broadcast` transfer is **double-buffered**: the
+    server enqueues `jax.device_put` of (x^{t+1}, y^{t+1}) to every
+    shard device as soon as the aggregate is dispatched (before its
+    values are ready), while the previous round's broadcast buffers are
+    still feeding trailing local steps — and those consumed buffers are
+    donated into the local-step program, so the transfer of round t+1
+    overlaps the tail of round t instead of serializing behind it.
+
+FullSync (sync_every_step) has no local divergence to overlap: the
+runner executes its K communicated steps as K (per-shard grad-sum →
+server combine) exchanges per round — which is exactly why it is K times
+more expensive on the wire, now visible as wall-clock in
+`benchmarks/comm_efficiency.py --overlap`.
+
+The fp-tolerance contract with the sync runner holds because per-agent
+gradients and local steps are elementwise identical computations on
+shard slices, and every random draw (participation sampling, rand-k
+selection scores, stochastic-rounding uniforms) happens once, server-
+side, through the very same `strategy` code path; only the aggregate's
+reduction order differs (per-shard sums combined server-side vs one
+mean), which is the usual ~ulp-level float non-associativity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..core.engine import (
+    agent_mean,
+    agent_weighted_sum,
+    make_phases,
+    tracking_corrections,
+)
+from ..core.types import Pytree, grad_xy, identity_proj
+from .runtime import RoundStats, RunnerHistoryMixin
+from .strategies import resolve_strategy
+
+
+def _num_agents(agent_data: Pytree) -> int:
+    return jax.tree.leaves(agent_data)[0].shape[0]
+
+
+def _slice_agents(tree: Pytree, lo: int, hi: int) -> Pytree:
+    return jax.tree.map(lambda u: u[lo:hi], tree)
+
+
+def largest_shard_count(m: int, n_devices: int) -> int:
+    """Most shards we can use: the largest divisor of m that fits the
+    device count (contiguous equal shards keep every program shape
+    static and identical across shards — one compilation serves all).
+    Shared with `launch.multihost`."""
+    for n in range(min(m, n_devices), 0, -1):
+        if m % n == 0:
+            return n
+    return 1
+
+
+def concat_on_device(parts: List[Pytree], device) -> Pytree:
+    """Gather per-shard pytrees onto one device and re-stack the agent
+    axis (the up-link transfer of a sharded schedule).  Shared with
+    `launch.multihost`."""
+    parts = [jax.device_put(p, device) for p in parts]
+    if len(parts) == 1:
+        return parts[0]
+    return jax.tree.map(lambda *u: jnp.concatenate(u, axis=0), *parts)
+
+
+class AsyncFederatedRunner(RunnerHistoryMixin):
+    """Drive federated rounds with per-agent-shard phase programs on
+    separate devices (see module docstring).
+
+    Mirrors `FederatedRunner`'s surface: `run(x, y, num_rounds)` returns
+    the final iterates, `history` / `metric_series` record per-round
+    metrics, `wire_report` prices the strategy.  Construction takes the
+    loss + strategy directly (there is no externally-built round
+    function to wrap — the runner owns the phase schedule)."""
+
+    def __init__(
+        self,
+        loss: Callable,
+        strategy,
+        agent_data: Pytree,
+        num_local_steps: int,
+        eta_x: float,
+        eta_y: Optional[float] = None,
+        *,
+        proj_x: Callable = identity_proj,
+        proj_y: Callable = identity_proj,
+        metric_fn: Optional[Callable] = None,
+        devices: Optional[Sequence] = None,
+        **strategy_kwargs,
+    ):
+        self._strategy = resolve_strategy(strategy, **strategy_kwargs)
+        self._K = num_local_steps
+        self._eta_x = eta_x
+        self._eta_y = eta_x if eta_y is None else eta_y
+        self._proj_x = proj_x
+        self._proj_y = proj_y
+        self._m = _num_agents(agent_data)
+
+        devices = list(devices) if devices is not None else jax.local_devices()
+        self._n_shards = largest_shard_count(self._m, len(devices))
+        self._per = self._m // self._n_shards
+        #: server device: owns the exchange transform, sampling RNG and
+        #: the aggregate; also hosts shard 0 (a dedicated server device
+        #: would idle during local steps on small hosts)
+        self._server = devices[0]
+        self._shard_devices = devices[: self._n_shards]
+        self._data_s = [
+            jax.device_put(
+                _slice_agents(agent_data, i * self._per, (i + 1) * self._per),
+                d,
+            )
+            for i, d in enumerate(self._shard_devices)
+        ]
+
+        self._phases = make_phases(
+            loss,
+            self._strategy,
+            num_local_steps,
+            eta_x,
+            eta_y,
+            proj_x=proj_x,
+            proj_y=proj_y,
+        )
+        self._gfn = grad_xy(loss)
+        self._vgrad = jax.vmap(self._gfn, in_axes=(0, 0, 0))
+        self._use_corr = bool(getattr(self._strategy, "use_correction", False))
+        self._sync_every = bool(
+            getattr(self._strategy, "sync_every_step", False)
+        )
+        self._cdt = getattr(self._strategy, "correction_dtype", None)
+        self._fused = (
+            self._use_corr
+            and self._m > 1
+            and bool(self._strategy.exact_correction)
+        )
+        self._build_programs()
+
+        self._metric_fn = jax.jit(metric_fn) if metric_fn else None
+        self._server_state: Dict = {}
+        self._shard_state: Optional[List[Dict]] = None
+        self.history: List[RoundStats] = []
+
+    # ------------------------------------------------------------ programs
+    def _build_programs(self) -> None:
+        ph = self._phases
+        strategy = self._strategy
+        cdt = self._cdt
+        fused = self._fused
+
+        def shard_grads(x, y, data_s):
+            """Per-shard anchor gradients (the up half of the exchange)."""
+            rs = ph.broadcast(x, y, data_s, {}, weights=None)
+            g = self._vgrad(rs.xs, rs.ys, data_s)
+            return g.gx, g.gy
+
+        def shard_point_grads(x, y, data_s):
+            """Per-agent gradients at the SHARED point (FullSync: every
+            'local' step is evaluated at the current global iterate)."""
+            g = jax.vmap(self._gfn, in_axes=(None, None, 0))(x, y, data_s)
+            return g.gx, g.gy
+
+        def fullsync_step(x, y, gx, gy):
+            """One centralized GDA step from gathered per-agent grads."""
+            gxm = agent_mean(gx, None)
+            gym = agent_mean(gy, None)
+            x1 = self._proj_x(
+                jax.tree.map(lambda u, v: u - self._eta_x * v, x, gxm)
+            )
+            y1 = self._proj_y(
+                jax.tree.map(lambda u, v: u + self._eta_y * v, y, gym)
+            )
+            return x1, y1
+
+        def server_exchange(gx, gy, state, weights):
+            """Server half of exchange_corrections: gbar, corrections,
+            strategy transform (same draws as the sync path), decode."""
+            gbar_x = agent_mean(gx, weights)
+            gbar_y = agent_mean(gy, weights)
+            cx, cy = tracking_corrections(gx, gy, gbar_x, gbar_y, cdt)
+            cx, cy, state = strategy.transform_correction(cx, cy, state)
+            if hasattr(cx, "decode"):
+                cx = cx.decode()
+            if hasattr(cy, "decode"):
+                cy = cy.decode()
+            return cx, cy, gbar_x, gbar_y, state
+
+        def shard_steps(x, y, data_s, cx_s, cy_s, gbar_x, gbar_y, w_s):
+            """Per-shard local_steps + partial aggregate.  The broadcast
+            buffers (x, y) are DONATED — by the time this runs they have
+            served the gradient program, and freeing them lets the next
+            round's double-buffered transfer land without growing the
+            working set."""
+            rs = ph.broadcast(x, y, data_s, {}, weights=None)
+            rs = dataclasses.replace(
+                rs, cx=cx_s, cy=cy_s, gbar_x=gbar_x, gbar_y=gbar_y,
+                fused=fused,
+            )
+            rs = ph.local_steps(rs, data_s)
+            return (
+                agent_weighted_sum(rs.xs, w_s),
+                agent_weighted_sum(rs.ys, w_s),
+            )
+
+        def server_combine(x_sums, y_sums):
+            """Combine the shards' partial aggregates and project.  The
+            shard sums already carry the participation weights (or 1/m
+            for uniform averaging), so the combine is a plain sum."""
+            x1 = jax.tree.map(lambda *u: sum(u), *x_sums)
+            y1 = jax.tree.map(lambda *u: sum(u), *y_sums)
+            return self._proj_x(x1), self._proj_y(y1)
+
+        def zeros_like_agents(bx, by):
+            """m == 1: the correction is identically zero and elided."""
+            z = lambda t: jax.tree.map(
+                lambda u: jnp.zeros((1,) + u.shape, u.dtype), t
+            )
+            return z(bx), z(by)
+
+        self._shard_grads = jax.jit(shard_grads)
+        self._shard_point_grads = jax.jit(shard_point_grads)
+        self._fullsync_step = jax.jit(fullsync_step)
+        self._server_exchange = jax.jit(server_exchange)
+        self._shard_steps = jax.jit(shard_steps, donate_argnums=(0, 1))
+        self._server_combine = jax.jit(server_combine)
+        self._zeros_like_agents = jax.jit(zeros_like_agents)
+
+    # ---------------------------------------------------------- state plumbing
+    def _init_state(self, x: Pytree, y: Pytree) -> None:
+        strategy = self._strategy
+        if not getattr(strategy, "stateful", False):
+            self._server_state = {}
+            self._shard_state = [{} for _ in range(self._n_shards)]
+            return
+        full = strategy.init_state(x, y, self._m)
+        sharded_keys = tuple(
+            k for k in getattr(strategy, "sharded_state_keys", ()) if k in full
+        )
+        self._server_state = {
+            k: jax.device_put(v, self._server)
+            for k, v in full.items()
+            if k not in sharded_keys
+        }
+        per = self._per
+        self._shard_state = [
+            {
+                k: jax.device_put(
+                    _slice_agents(full[k], i * per, (i + 1) * per), d
+                )
+                for k in sharded_keys
+            }
+            for i, d in enumerate(self._shard_devices)
+        ]
+        self._sharded_keys = sharded_keys
+
+    def _gather_state(self) -> Dict:
+        """Full strategy state on the server device: sharded entries are
+        gathered (they ride the same up-link as the corrections they
+        compensate), the rest already live there."""
+        state = dict(self._server_state)
+        for k in getattr(self, "_sharded_keys", ()):
+            parts = [
+                jax.device_put(s[k], self._server) for s in self._shard_state
+            ]
+            state[k] = jax.tree.map(
+                lambda *u: jnp.concatenate(u, axis=0), *parts
+            )
+        return state
+
+    def _scatter_state(self, state: Dict) -> None:
+        """Split the transform's updated state back: per-agent entries to
+        their shard devices, the rest stays server-side."""
+        per = self._per
+        for k in getattr(self, "_sharded_keys", ()):
+            full = state.pop(k)
+            for i, (s, d) in enumerate(
+                zip(self._shard_state, self._shard_devices)
+            ):
+                s[k] = jax.device_put(
+                    _slice_agents(full, i * per, (i + 1) * per), d
+                )
+        self._server_state = state
+
+    # ------------------------------------------------------------- round loop
+    def _round_weights(self):
+        """Participation sampling, once per round, server-side — shards
+        receive their weight slices instead of re-sampling (the draws
+        must match the sync path's exactly)."""
+        strategy = self._strategy
+        state = self._server_state
+        weights, state = strategy.sample_weights(state, self._m)
+        self._server_state = state
+        if weights is None:
+            w = jnp.full((self._m,), 1.0 / self._m)
+        else:
+            w = weights
+        per = self._per
+        w_slices = [
+            jax.device_put(w[i * per : (i + 1) * per], d)
+            for i, d in enumerate(self._shard_devices)
+        ]
+        return weights, w_slices
+
+    def _run_fullsync_round(self, x, y):
+        """FullSync: K communicated steps; each is a per-shard gradient
+        fan-out + server combine (no local divergence to overlap)."""
+        for _ in range(self._K):
+            gs = [
+                self._shard_point_grads(
+                    jax.device_put(x, d), jax.device_put(y, d), data
+                )
+                for d, data in zip(self._shard_devices, self._data_s)
+            ]
+            gx = self._concat_server([g[0] for g in gs])
+            gy = self._concat_server([g[1] for g in gs])
+            x, y = self._fullsync_step(x, y, gx, gy)
+        return x, y
+
+    def _bcast(self, x, y) -> List:
+        """Double-buffer fill: fresh per-shard (x, y) broadcast buffers.
+        Cross-device `device_put` transfers into a new buffer; for the
+        shard sharing the server device the copy is explicit —
+        `device_put` to the resident device is a no-op alias, and these
+        buffers are DONATED into the local-step program, which must
+        never delete an array the caller (or the next round) still
+        owns."""
+        out = []
+        for d in self._shard_devices:
+            if d == self._server:
+                out.append(
+                    (jax.tree.map(jnp.copy, x), jax.tree.map(jnp.copy, y))
+                )
+            else:
+                out.append((jax.device_put(x, d), jax.device_put(y, d)))
+        return out
+
+    def _concat_server(self, parts: List[Pytree]) -> Pytree:
+        return concat_on_device(parts, self._server)
+
+    def run(
+        self,
+        x: Pytree,
+        y: Pytree,
+        num_rounds: int,
+        log_every: int = 0,
+        state: Optional[Pytree] = None,
+    ):
+        x = jax.device_put(x, self._server)
+        y = jax.device_put(y, self._server)
+        if self._shard_state is None:
+            self._init_state(x, y)
+            if state is not None:
+                # resume: re-split a checkpointed full state
+                self._scatter_state(dict(state))
+        # double-buffered broadcast: the per-shard (x, y) copies for the
+        # round ABOUT to run; refreshed (device_put enqueued) as soon as
+        # the aggregate producing the next iterates is dispatched.
+        # FullSync has no local phase to pre-feed — its per-step fan-out
+        # transfers live inside _run_fullsync_round
+        bcast = None if self._sync_every else self._bcast(x, y)
+        for t in range(num_rounds):
+            t0 = time.perf_counter()
+            if self._sync_every:
+                x, y = self._run_fullsync_round(x, y)
+            else:
+                x, y, bcast = self._run_round(x, y, bcast)
+            metrics = {}
+            if self._metric_fn is not None:
+                metrics = {
+                    k: float(v) for k, v in self._metric_fn(x, y).items()
+                }
+            dt = time.perf_counter() - t0
+            self.history.append(RoundStats(t, metrics, dt))
+            if log_every and (t % log_every == 0 or t == num_rounds - 1):
+                msg = " ".join(f"{k}={v:.3e}" for k, v in metrics.items())
+                print(f"[async round {t:5d}] {msg} ({dt*1e3:.1f} ms)")
+        jax.block_until_ready((x, y))
+        return x, y
+
+    def _run_round(self, x, y, bcast):
+        weights, w_slices = self._round_weights()
+        per = self._per
+        cx_s = cy_s = [None] * self._n_shards
+        gbx_s = gby_s = [None] * self._n_shards
+        if self._use_corr and self._m > 1:
+            # fan-out: every shard's anchor-gradient program is dispatched
+            # before any result is awaited (async dispatch == one stream
+            # per device); the device_put gathers below overlap shards
+            # that are still computing
+            gs = [
+                self._shard_grads(bx, by, data)
+                for (bx, by), data in zip(bcast, self._data_s)
+            ]
+            gx = self._concat_server([g[0] for g in gs])
+            gy = self._concat_server([g[1] for g in gs])
+            full_state = self._gather_state()
+            cx, cy, gbar_x, gbar_y, new_state = self._server_exchange(
+                gx, gy, full_state, weights
+            )
+            self._scatter_state(dict(new_state))
+            # down-link: correction slices + the global anchor gradient
+            cx_s = [
+                jax.device_put(_slice_agents(cx, i * per, (i + 1) * per), d)
+                for i, d in enumerate(self._shard_devices)
+            ]
+            cy_s = [
+                jax.device_put(_slice_agents(cy, i * per, (i + 1) * per), d)
+                for i, d in enumerate(self._shard_devices)
+            ]
+            gbx_s = [jax.device_put(gbar_x, d) for d in self._shard_devices]
+            gby_s = [jax.device_put(gbar_y, d) for d in self._shard_devices]
+        elif self._use_corr:
+            # m == 1: correction identically zero — build it shard-side
+            z = [self._zeros_like_agents(bx, by) for (bx, by) in bcast]
+            cx_s = [zi[0] for zi in z]
+            cy_s = [zi[1] for zi in z]
+
+        sums = [
+            self._shard_steps(
+                bx, by, data, cxi, cyi, gbxi, gbyi, wi
+            )
+            for (bx, by), data, cxi, cyi, gbxi, gbyi, wi in zip(
+                bcast, self._data_s, cx_s, cy_s, gbx_s, gby_s, w_slices
+            )
+        ]
+        x1, y1 = self._server_combine(
+            [jax.device_put(a, self._server) for a, _ in sums],
+            [jax.device_put(b, self._server) for _, b in sums],
+        )
+        # double-buffer flip: enqueue next round's broadcast immediately
+        # (the transfers ride behind the still-executing local steps; the
+        # donated buffers they replace free as those programs retire)
+        return x1, y1, self._bcast(x1, y1)
+
+    # ------------------------------------------------------------- reporting
+    def wire_report(self, x: Pytree, y: Pytree, num_local_steps: int) -> Dict:
+        from .transport import measured_bytes_per_round
+
+        return {
+            "bytes_per_round": int(
+                self._strategy.bytes_per_round(x, y, num_local_steps)
+            ),
+            "measured_bytes_per_round": measured_bytes_per_round(
+                self._strategy, x, y, num_local_steps
+            ),
+        }

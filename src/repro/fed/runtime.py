@@ -1,12 +1,23 @@
-"""Federated round orchestration with metric logging and checkpointing.
+"""Synchronous federated round orchestration (single fused program).
 
 `FederatedRunner` drives any round function produced by `repro.core` —
-legacy constructors or the unified engine (`make_round`) with any
-`CommStrategy` — records per-round metrics on the host, and periodically
-checkpoints; the single-host counterpart of `repro.launch.train`.
-Stateful strategies (client-sampling RNG, error-feedback buffers) have
-their state initialized lazily on the first round and threaded across
-rounds; build via `FederatedRunner.from_strategy` for that path.
+legacy constructors or the phase-split engine (`make_round`, the fused
+composition of the `broadcast` / `exchange_corrections` / `local_steps` /
+`aggregate` phases) with any `CommStrategy` — records per-round metrics
+on the host, and periodically checkpoints; the single-host counterpart of
+`repro.launch.train`.  Stateful strategies (client-sampling RNG,
+error-feedback buffers) have their state initialized lazily on the first
+round and threaded across rounds; build via `FederatedRunner.from_strategy`
+for that path.
+
+This runner executes each round as ONE jitted program on the default
+device: broadcast, exchange and K local steps lower together, so nothing
+overlaps and strategy state is replicated.  Its asynchronous counterpart
+— `repro.fed.async_runtime.AsyncFederatedRunner` — dispatches the same
+phase functions per agent shard on separate devices, overlaps the
+correction exchange with trailing local steps, and shards per-agent
+strategy state; the two agree on iterates to fp tolerance
+(tests/test_async_runtime.py).
 """
 from __future__ import annotations
 
@@ -29,7 +40,22 @@ class RoundStats:
     seconds: float
 
 
-class FederatedRunner:
+class RunnerHistoryMixin:
+    """Per-round history shared by the sync and async runners."""
+
+    history: List[RoundStats]
+
+    def metric_series(self, name: str) -> np.ndarray:
+        available = sorted({k for s in self.history for k in s.metrics})
+        if self.history and name not in available:
+            raise ValueError(
+                f"unknown metric {name!r}; available metric keys: "
+                f"{available}"
+            )
+        return np.array([s.metrics[name] for s in self.history])
+
+
+class FederatedRunner(RunnerHistoryMixin):
     def __init__(
         self,
         round_fn: Callable,
@@ -139,9 +165,6 @@ class FederatedRunner:
                     payload["strategy_state"] = self._state
                 save_checkpoint(self._ckpt_dir, t + 1, payload)
         return x, y
-
-    def metric_series(self, name: str) -> np.ndarray:
-        return np.array([s.metrics[name] for s in self.history])
 
     def wire_report(self, x: Pytree, y: Pytree, num_local_steps: int) -> Dict:
         """Priced vs measured per-round communication for this runner's

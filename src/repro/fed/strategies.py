@@ -93,6 +93,15 @@ class CommStrategy:
     def init_state(self, x: Pytree, y: Pytree, m: int) -> State:
         return {}
 
+    @property
+    def sharded_state_keys(self) -> Tuple[str, ...]:
+        """Top-level state entries whose leaves carry a leading per-agent
+        axis.  A sharded runtime (`fed.async_runtime`, `launch.multihost`)
+        stores these as per-shard slices living on the agents' devices
+        instead of replicating the whole stack; everything else (sampling
+        / rounding RNG keys) stays server-side."""
+        return ()
+
     def sample_weights(self, state: State, m: int) -> Tuple[Weights, State]:
         """None means exact uniform averaging over all m agents (the
         bitwise-pinned legacy path); otherwise a length-m weight vector
@@ -266,6 +275,13 @@ class _CorrectionCompressor(CommStrategy):
     @property
     def stateful(self) -> bool:
         return self._active and (self.error_feedback or self._needs_rng)
+
+    @property
+    def sharded_state_keys(self) -> Tuple[str, ...]:
+        # per-agent error-feedback buffers shard; the RNG key does not
+        if self._active and self.error_feedback:
+            return ("ex", "ey")
+        return ()
 
     def init_state(self, x, y, m):
         if not self.stateful:

@@ -97,6 +97,7 @@ def run_one(
     compression_ratio=None,
     quantization_bits=None,
     wire_transport=False,
+    runtime="sync",
 ) -> Dict:
     cfg = get_config(arch)
     if (
@@ -120,6 +121,10 @@ def run_one(
         if wire_transport:
             repl["wire_transport"] = True
         cfg = _dc.replace(cfg, **repl)
+    if runtime != "sync":
+        import dataclasses as _dc
+
+        cfg = _dc.replace(cfg, runtime=runtime)
     shape = INPUT_SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
     rec: Dict = {
@@ -139,6 +144,7 @@ def run_one(
         "wire_transport": (
             cfg.wire_transport if shape.kind == "train" else None
         ),
+        "runtime": cfg.runtime if shape.kind == "train" else None,
         "sharding_variant": sharding_variant,
         "sequence_parallel": sequence_parallel,
         "h_shard": h_shard,
@@ -202,6 +208,55 @@ def run_one(
         from .hlo_census import HloCensus
 
         rec["census"] = HloCensus(hlo).summary()
+
+        if cfg.runtime == "async" and shape.kind == "train":
+            # the async runtime's packed-payload all-gather, lowered and
+            # censused on its own: interconnect bytes must equal the wire
+            # payload (comm_collectives --check-async gates the drift).
+            # Only correction strategies at full participation gather a
+            # payload — for anything else (sync_gda, local_sgda, sampled
+            # partial_gt) there is no wire record to census and the
+            # (measured - 2*dense)/2 share below would be meaningless
+            import jax.numpy as jnp
+
+            from ..fed.transport import (
+                dense_payload_bytes,
+                measured_bytes_per_round,
+            )
+            from .mesh import num_agents
+            from .steps import (
+                _resolve_cfg_strategy,
+                abstract_params,
+                build_gather_decode_train_step,
+                delta_struct,
+            )
+
+            strategy = _resolve_cfg_strategy(cfg, algorithm)
+            if (
+                getattr(strategy, "use_correction", False)
+                and getattr(strategy, "participation", 1.0) >= 1.0
+            ):
+                jg, argsg, expected = build_gather_decode_train_step(
+                    cfg, mesh, algorithm=algorithm
+                )
+                cg = jg.lower(*argsg).compile()
+                rec["gather_census"] = HloCensus(cg.as_text()).summary()[
+                    "collectives_executed"
+                ]
+                rec["expected_gather_bytes"] = int(expected)
+                x = abstract_params(cfg, jnp.bfloat16)
+                y = delta_struct(cfg, jnp.bfloat16)
+                meas = int(
+                    measured_bytes_per_round(
+                        strategy, x, y, num_local_steps, include_headers=False
+                    )
+                )
+                dense = int(dense_payload_bytes((x, y)))
+                rec["wire"] = {
+                    "measured_bytes_per_round": meas,
+                    "payload_share_per_agent": max(0, (meas - 2 * dense) // 2),
+                    "num_agents": num_agents(mesh, cfg.fed_mode),
+                }
     return rec
 
 
@@ -233,9 +288,12 @@ def main() -> None:
     ap.add_argument("--wire-transport", action="store_true",
                     help="encode compressed corrections as packed "
                          "(value, index, scale) payloads inside the step "
-                         "(payload bytes match bytes_per_round; lowering "
-                         "the packed buffers onto an actual multi-host "
-                         "collective is the roadmap follow-up)")
+                         "(payload bytes match bytes_per_round)")
+    ap.add_argument("--runtime", default="sync", choices=["sync", "async"],
+                    help="round schedule: sync lowers the fused round; "
+                         "async additionally lowers + censuses the "
+                         "packed-payload all-gather of the phase-"
+                         "dispatched runtime (tag __async)")
     ap.add_argument("--variant", default="baseline",
                     choices=["baseline", "megatron"])
     ap.add_argument("--no-seq-parallel", action="store_true")
@@ -282,6 +340,8 @@ def main() -> None:
                 tag += f"__q{args.quantization_bits:d}"
             if args.wire_transport:
                 tag += "__wire"
+            if args.runtime != "sync":
+                tag += f"__{args.runtime}"
             if args.variant != "baseline":
                 tag += f"__{args.variant}"
             if args.no_seq_parallel:
@@ -311,6 +371,7 @@ def main() -> None:
                     compression_ratio=args.compression_ratio,
                     quantization_bits=args.quantization_bits,
                     wire_transport=args.wire_transport,
+                    runtime=args.runtime,
                 )
                 with open(path, "w") as f:
                     json.dump(rec, f, indent=1)

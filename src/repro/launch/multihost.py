@@ -1,0 +1,439 @@
+"""Multi-host federated launch path: agents on devices, packed wire gather.
+
+The fused single-program engine moves corrections between agents and
+server inside one XLA program, so the bytes that `fed.transport` so
+carefully packs never cross a real interconnect.  This module is the
+launch path where they do:
+
+  * `init_distributed` — `jax.distributed`-aware process bootstrap
+    (gated: a single-process run is a no-op, so the same entry point
+    serves laptops and multi-host pods; under multi-host,
+    `jax.devices()` spans every host and the agent shards below land on
+    remote devices automatically);
+  * `MultiHostRunner` — each agent shard lives on its own device with
+    its own strategy-state slice (error-feedback buffers AND the
+    rounding/selection RNG — draws are per-shard, folded by shard
+    index).  Per round, shards compute anchor gradients, the server
+    forms gbar, each shard ENCODES its correction as a
+    `transport.PackedTree` payload on-device, and the server
+    **all-gathers the packed buffers** — shape-static per-agent byte
+    buffers, so interconnect traffic equals the strategy's
+    `measured_bytes_per_round` payload share — and DECODES server-side;
+    the decoded correction slices ride the down-link into per-shard
+    local steps, and the server combines the partial aggregates.  Every
+    round's actual gathered byte count lands in `wire_log`;
+  * `build_gather_decode_step` — the same gather, lowered as one SPMD
+    program on a production mesh (payload buffers sharded over the fed
+    axes, decode replicated) for the dry-run HLO census: the program's
+    all-gather collective bytes must track `measured_bytes_per_round`
+    (benchmarks/comm_collectives.py --check-async gates that).
+
+Unlike `fed.async_runtime` (whose exchange transform runs server-side so
+its draws — and therefore iterates — match the sync runner exactly), the
+multi-host path draws per shard: iterates are statistically equivalent
+but not bitwise-reproducible against the single-program round.  What IS
+pinned: the server-side decode of the gathered payloads reproduces each
+shard's own decode bitwise (same buffers, same `decode_leaf`), and the
+gathered size equals the priced payload (tests/test_async_runtime.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..core.engine import (
+    agent_mean,
+    agent_weighted_sum,
+    make_phases,
+    tracking_corrections,
+)
+from ..core.types import Pytree, grad_xy, identity_proj
+from ..fed.async_runtime import concat_on_device, largest_shard_count
+from ..fed.strategies import resolve_strategy
+from ..fed.transport import (
+    LeafSpec,
+    PackedTree,
+    decode_leaf,
+    encode_leaf,
+)
+
+__all__ = [
+    "MultiHostRunner",
+    "build_gather_decode_step",
+    "expected_gather_bytes",
+    "init_distributed",
+    "leaf_specs",
+    "payload_structs",
+]
+
+
+def init_distributed(
+    coordinator_address: Optional[str] = None,
+    num_processes: Optional[int] = None,
+    process_id: Optional[int] = None,
+) -> bool:
+    """Initialize `jax.distributed` when a multi-process launch is
+    configured (explicit arguments or the standard JAX_COORDINATOR_*
+    environment), and no-op otherwise.  Returns True when a multi-host
+    runtime was actually brought up.  Safe to call unconditionally from
+    launch scripts: single-process development runs skip straight to the
+    local devices."""
+    coordinator_address = coordinator_address or os.environ.get(
+        "JAX_COORDINATOR_ADDRESS"
+    )
+    if coordinator_address is None:
+        return False
+    if num_processes is None:
+        num_processes = int(os.environ.get("JAX_NUM_PROCESSES", "1"))
+    if process_id is None:
+        process_id = int(os.environ.get("JAX_PROCESS_ID", "0"))
+    jax.distributed.initialize(
+        coordinator_address=coordinator_address,
+        num_processes=num_processes,
+        process_id=process_id,
+    )
+    return True
+
+
+# --------------------------------------------------------------------------
+# packed-payload layout shared by the runner and the census program
+# --------------------------------------------------------------------------
+def leaf_specs(strategy, tree: Pytree, m: int) -> List[LeafSpec]:
+    """The stacked wire layout of every leaf of one correction tree for
+    `m` agents — exactly the specs `transform_correction` builds, so the
+    runner's host-side PackedTree reconstruction and the strategy's
+    in-trace encode cannot disagree."""
+    cdt = getattr(strategy, "correction_dtype", None)
+    ratio = getattr(strategy, "_ratio", 1.0)
+    bits = getattr(strategy, "_bits", 32)
+    mode = getattr(strategy, "mode", "topk")
+    return [
+        LeafSpec.build(u.shape, cdt or u.dtype, ratio, bits, mode).stacked(m)
+        for u in jax.tree.leaves(tree)
+    ]
+
+
+def payload_structs(specs: Sequence[LeafSpec]) -> List:
+    """ShapeDtypeStructs of each spec's packed buffers (via eval_shape of
+    the encoder — the probe never trusts the layout arithmetic)."""
+    out = []
+    for spec in specs:
+        c = jax.ShapeDtypeStruct((spec.rows, spec.cols), spec.dtype)
+        u = jax.ShapeDtypeStruct((spec.rows, spec.cols), jnp.float32)
+        out.append(
+            jax.eval_shape(lambda cc, uu: encode_leaf(cc, None, uu, uu, spec)[0], c, u)
+        )
+    return out
+
+
+def expected_gather_bytes(strategy, x: Pytree, y: Pytree, m: int) -> int:
+    """Packed payload bytes the server gathers per round (both correction
+    trees, all m agents, headers excluded) — the number the census'
+    all-gather bytes and the runner's `wire_log` must track."""
+    return sum(
+        s.wire_bytes() for s in leaf_specs(strategy, (x, y), m)
+    )
+
+
+# --------------------------------------------------------------------------
+# multi-host round driver
+# --------------------------------------------------------------------------
+class MultiHostRunner:
+    """Federated rounds with per-device agent shards and a packed-payload
+    gather (see module docstring).  Requires a correction strategy (the
+    GT family — there is no payload to gather otherwise)."""
+
+    def __init__(
+        self,
+        loss: Callable,
+        strategy,
+        agent_data: Pytree,
+        num_local_steps: int,
+        eta_x: float,
+        eta_y: Optional[float] = None,
+        *,
+        proj_x: Callable = identity_proj,
+        proj_y: Callable = identity_proj,
+        devices: Optional[Sequence] = None,
+        **strategy_kwargs,
+    ):
+        self._strategy = resolve_strategy(strategy, **strategy_kwargs)
+        if not getattr(self._strategy, "use_correction", False):
+            raise ValueError(
+                "MultiHostRunner gathers correction payloads; strategy "
+                f"{self._strategy.name!r} exchanges none (use "
+                "fed.async_runtime.AsyncFederatedRunner for it)"
+            )
+        if getattr(self._strategy, "participation", 1.0) < 1.0:
+            raise ValueError(
+                "MultiHostRunner is a full-participation path; client "
+                "sampling needs the async runtime's server-side draw"
+            )
+        self._proj_x, self._proj_y = proj_x, proj_y
+        self._m = jax.tree.leaves(agent_data)[0].shape[0]
+        devices = list(devices) if devices is not None else jax.local_devices()
+        n = largest_shard_count(self._m, len(devices))
+        self._n_shards, self._per = n, self._m // n
+        self._server = devices[0]
+        self._shard_devices = devices[:n]
+        self._data_s = [
+            jax.device_put(
+                jax.tree.map(
+                    lambda u: u[i * self._per : (i + 1) * self._per], agent_data
+                ),
+                d,
+            )
+            for i, d in enumerate(self._shard_devices)
+        ]
+        self._phases = make_phases(
+            loss, self._strategy, num_local_steps, eta_x, eta_y,
+            proj_x=proj_x, proj_y=proj_y,
+        )
+        self._gfn = grad_xy(loss)
+        self._vgrad = jax.vmap(self._gfn, in_axes=(0, 0, 0))
+        self._cdt = getattr(self._strategy, "correction_dtype", None)
+        self._fused = self._m > 1 and bool(self._strategy.exact_correction)
+        self._wire = bool(getattr(self._strategy, "wire_transport", False))
+        self._build_programs()
+        self._state_s: Optional[List[Dict]] = None
+        self._specs: Optional[Tuple[List[LeafSpec], List[LeafSpec]]] = None
+        #: per-round wire accounting: gathered payload/total bytes
+        self.wire_log: List[Dict[str, int]] = []
+
+    # ------------------------------------------------------------ programs
+    def _build_programs(self) -> None:
+        ph = self._phases
+        strategy = self._strategy
+        cdt = self._cdt
+        fused = self._fused
+
+        def shard_grads(x, y, data_s):
+            rs = ph.broadcast(x, y, data_s, {}, weights=None)
+            g = self._vgrad(rs.xs, rs.ys, data_s)
+            return g.gx, g.gy
+
+        def shard_encode(gx_s, gy_s, gbar_x, gbar_y, state_s):
+            """Form this shard's corrections and ENCODE them on-device:
+            the up-link payload is the packed buffers, nothing else."""
+            cx, cy = tracking_corrections(gx_s, gy_s, gbar_x, gbar_y, cdt)
+            cx, cy, state_s = strategy.transform_correction(cx, cy, state_s)
+            if hasattr(cx, "decode"):
+                # wire transport: ship the raw packed buffers (the
+                # PackedTree wrapper is host-side metadata)
+                return cx.payloads, cy.payloads, state_s
+            return cx, cy, state_s
+
+        def shard_steps(x, y, data_s, cx_s, cy_s, gbar_x, gbar_y):
+            rs = ph.broadcast(x, y, data_s, {}, weights=None)
+            rs = dataclasses.replace(
+                rs, cx=cx_s, cy=cy_s, gbar_x=gbar_x, gbar_y=gbar_y,
+                fused=fused,
+            )
+            rs = ph.local_steps(rs, data_s)
+            return (
+                agent_weighted_sum(rs.xs, None),
+                agent_weighted_sum(rs.ys, None),
+            )
+
+        def server_combine(x_sums, y_sums):
+            x1 = jax.tree.map(lambda *u: sum(u) / self._m, *x_sums)
+            y1 = jax.tree.map(lambda *u: sum(u) / self._m, *y_sums)
+            return self._proj_x(x1), self._proj_y(y1)
+
+        self._shard_grads = jax.jit(shard_grads)
+        self._shard_encode = jax.jit(shard_encode)
+        self._shard_steps = jax.jit(shard_steps)
+        self._server_combine = jax.jit(server_combine)
+
+    # ------------------------------------------------------------- plumbing
+    def _init_state(self, x: Pytree, y: Pytree) -> None:
+        strategy = self._strategy
+        self._state_s = []
+        for i, d in enumerate(self._shard_devices):
+            s = (
+                strategy.init_state(x, y, self._per)
+                if getattr(strategy, "stateful", False)
+                else {}
+            )
+            if "key" in s:
+                # independent draws per shard — each agent group owns its
+                # selection/rounding randomness, nothing is replicated
+                s = dict(s)
+                s["key"] = jax.random.fold_in(s["key"], i)
+            self._state_s.append(jax.device_put(s, d))
+        self._specs = (
+            leaf_specs(strategy, x, self._per),
+            leaf_specs(strategy, y, self._per),
+        )
+        self._treedefs = (
+            jax.tree.structure(x),
+            jax.tree.structure(y),
+        )
+        self._shapes = (
+            [(self._per,) + u.shape for u in jax.tree.leaves(x)],
+            [(self._per,) + u.shape for u in jax.tree.leaves(y)],
+        )
+
+    def _gather_decode(self, payloads_s: List, which: int) -> Tuple[Pytree, int, int]:
+        """Server side of the exchange: pull every shard's packed buffers
+        to the server device (THE wire transfer — its size is the
+        payload), rebuild the PackedTrees, decode, and stack the agent
+        axis back together.  Returns (decoded [m, ...] tree, payload
+        bytes, payload+header bytes)."""
+        specs = self._specs[which]
+        treedef = self._treedefs[which]
+        shapes = self._shapes[which]
+        parts, payload_bytes, total_bytes = [], 0, 0
+        for p in payloads_s:
+            gathered = jax.device_put(p, self._server)
+            tree = PackedTree(list(gathered), specs, treedef, shapes)
+            payload_bytes += tree.wire_bytes()
+            total_bytes += tree.total_bytes()
+            parts.append(tree.decode())
+        if len(parts) == 1:
+            return parts[0], payload_bytes, total_bytes
+        stacked = jax.tree.map(
+            lambda *u: jnp.concatenate(u, axis=0), *parts
+        )
+        return stacked, payload_bytes, total_bytes
+
+    # ------------------------------------------------------------- run loop
+    def run(self, x: Pytree, y: Pytree, num_rounds: int):
+        x = jax.device_put(x, self._server)
+        y = jax.device_put(y, self._server)
+        if self._state_s is None:
+            self._init_state(x, y)
+        per = self._per
+        for _ in range(num_rounds):
+            bcast = [
+                (jax.device_put(x, d), jax.device_put(y, d))
+                for d in self._shard_devices
+            ]
+            gs = [
+                self._shard_grads(bx, by, data)
+                for (bx, by), data in zip(bcast, self._data_s)
+            ]
+            gx = self._concat_server([g[0] for g in gs])
+            gy = self._concat_server([g[1] for g in gs])
+            gbar_x = self._agent_mean_jit(gx)
+            gbar_y = self._agent_mean_jit(gy)
+            gb_s = [
+                (jax.device_put(gbar_x, d), jax.device_put(gbar_y, d))
+                for d in self._shard_devices
+            ]
+            enc = [
+                self._shard_encode(g[0], g[1], gbx, gby, st)
+                for g, (gbx, gby), st in zip(gs, gb_s, self._state_s)
+            ]
+            self._state_s = [
+                jax.device_put(e[2], d)
+                for e, d in zip(enc, self._shard_devices)
+            ]
+            if self._wire:
+                cx, pbx, tbx = self._gather_decode([e[0] for e in enc], 0)
+                cy, pby, tby = self._gather_decode([e[1] for e in enc], 1)
+                self.wire_log.append(
+                    {
+                        "gathered_payload_bytes": pbx + pby,
+                        "gathered_total_bytes": tbx + tby,
+                    }
+                )
+            else:
+                # dense strategies: the gathered "payload" is the dense
+                # correction stack itself
+                cx = self._concat_server([e[0] for e in enc])
+                cy = self._concat_server([e[1] for e in enc])
+                dense = sum(
+                    int(np.prod(u.shape)) * u.dtype.itemsize
+                    for u in jax.tree.leaves((cx, cy))
+                )
+                self.wire_log.append(
+                    {
+                        "gathered_payload_bytes": dense,
+                        "gathered_total_bytes": dense,
+                    }
+                )
+            sums = [
+                self._shard_steps(
+                    bx, by, data,
+                    jax.device_put(
+                        jax.tree.map(lambda u: u[i * per:(i + 1) * per], cx), d
+                    ),
+                    jax.device_put(
+                        jax.tree.map(lambda u: u[i * per:(i + 1) * per], cy), d
+                    ),
+                    gbx, gby,
+                )
+                for i, ((bx, by), data, (gbx, gby), d) in enumerate(
+                    zip(bcast, self._data_s, gb_s, self._shard_devices)
+                )
+            ]
+            x, y = self._server_combine(
+                [jax.device_put(a, self._server) for a, _ in sums],
+                [jax.device_put(b, self._server) for _, b in sums],
+            )
+        jax.block_until_ready((x, y))
+        return x, y
+
+    def _concat_server(self, parts: List[Pytree]) -> Pytree:
+        return concat_on_device(parts, self._server)
+
+    @property
+    def _agent_mean_jit(self):
+        if not hasattr(self, "_amj"):
+            self._amj = jax.jit(lambda g: agent_mean(g, None))
+        return self._amj
+
+
+# --------------------------------------------------------------------------
+# the gather, lowered for the HLO census (dry-run --runtime async)
+# --------------------------------------------------------------------------
+def build_gather_decode_step(
+    strategy, x: Pytree, y: Pytree, mesh, fed_axes: Tuple[str, ...]
+):
+    """One SPMD program performing the multi-host payload gather on a
+    production mesh: per-agent packed buffers arrive SHARDED over the fed
+    axes, the decode is replicated — GSPMD therefore materializes the
+    gather as all-gather collectives whose bytes are exactly the packed
+    payload (the dry-run census checks this against
+    `measured_bytes_per_round`).
+
+    Returns (jitted, arg_structs, expected_bytes): call
+    `jitted.lower(*arg_structs).compile()` and census the collectives."""
+    m = 1
+    for a in fed_axes:
+        m *= mesh.shape[a]
+    m = max(m, 1)
+    specs = leaf_specs(strategy, (x, y), m)
+    structs = payload_structs(specs)
+
+    def shard_of(struct):
+        return jax.tree.map(
+            lambda u: NamedSharding(
+                mesh, P(fed_axes, *([None] * (len(u.shape) - 1)))
+            ),
+            struct,
+        )
+
+    in_shardings = ([shard_of(s) for s in structs],)
+
+    def gather_decode(payloads):
+        rep = jax.tree.map(
+            lambda u: jax.lax.with_sharding_constraint(
+                u, NamedSharding(mesh, P(*([None] * len(u.shape))))
+            ),
+            payloads,
+        )
+        return [
+            decode_leaf(p, spec) for p, spec in zip(rep, specs)
+        ]
+
+    jitted = jax.jit(gather_decode, in_shardings=in_shardings)
+    expected = sum(s.wire_bytes() for s in specs)
+    return jitted, (structs,), expected

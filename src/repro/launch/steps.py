@@ -1,12 +1,21 @@
 """SPMD step builders: federated minimax train_step + prefill/decode serve_step.
 
 train_step = ONE federated communication round lowered as a single jitted
-SPMD program on the production mesh, built by the unified round engine
-(`repro.core.engine.make_round`) for any `CommStrategy` — FedGDA-GT by
-default; baselines (local_sgda, sync_gda) and the scenario strategies
-(partial_gt, compressed_gt, quantized_gt) share the same signature so the
-dry-run can compare their collective schedules directly.  Stateful
-strategies thread their state as an extra replicated step input.
+SPMD program on the production mesh, built by the phase-split round
+engine (`repro.core.engine.make_round` — the fused composition of
+broadcast / exchange_corrections / local_steps / aggregate) for any
+`CommStrategy` — FedGDA-GT by default; baselines (local_sgda, sync_gda)
+and the scenario strategies (partial_gt, compressed_gt, quantized_gt)
+share the same signature so the dry-run can compare their collective
+schedules directly.  Stateful strategies thread their state as an extra
+replicated step input.
+
+The async runtime executes the same phases as separately dispatched
+per-shard programs plus a server-side packed-payload gather;
+`build_gather_decode_train_step` lowers that gather on the production
+mesh (payload buffers sharded over the fed axes, decode replicated) so
+the dry-run can census its all-gather bytes against
+`measured_bytes_per_round` (`--runtime async`, tag `__async`).
 """
 from __future__ import annotations
 
@@ -73,6 +82,19 @@ def train_input_specs(
     }
 
 
+def _resolve_cfg_strategy(cfg: ModelConfig, algorithm) -> CommStrategy:
+    """One owner for the cfg-knob -> strategy resolution, shared by the
+    fused train step and the async gather-census step."""
+    return resolve_strategy(
+        algorithm,
+        correction_dtype=_CORRECTION_DTYPES.get(cfg.correction_dtype),
+        participation=cfg.participation,
+        compression_ratio=cfg.compression_ratio,
+        quantization_bits=cfg.quantization_bits,
+        wire_transport=cfg.wire_transport,
+    )
+
+
 def build_train_step(
     cfg: ModelConfig,
     mesh,
@@ -104,14 +126,7 @@ def build_train_step(
     loss = make_adversarial_loss(cfg, remat=remat, h_sharding=h_sh)
     proj_y = delta_projection(delta_radius)
     constrain = make_agent_constraint(cfg, mesh, None, sharding_variant)
-    strategy = resolve_strategy(
-        algorithm,
-        correction_dtype=_CORRECTION_DTYPES.get(cfg.correction_dtype),
-        participation=cfg.participation,
-        compression_ratio=cfg.compression_ratio,
-        quantization_bits=cfg.quantization_bits,
-        wire_transport=cfg.wire_transport,
-    )
+    strategy = _resolve_cfg_strategy(cfg, algorithm)
     stateful = strategy.stateful
     rnd = make_round(
         loss,
@@ -157,6 +172,31 @@ def build_train_step(
         )
 
     return jitted, specs_fn
+
+
+def build_gather_decode_train_step(
+    cfg: ModelConfig,
+    mesh,
+    *,
+    algorithm="fedgda_gt",
+    dtype=jnp.bfloat16,
+):
+    """The async runtime's server-side exchange as one SPMD program on
+    the production mesh: all-gather the per-agent packed correction
+    payloads over the fed axes and decode them replicated.
+
+    Returns (jitted, arg_structs, expected_gather_bytes) — compile and
+    census the collectives; their all-gather bytes must track
+    `transport.measured_bytes_per_round`'s payload share (the dry-run
+    stores both, benchmarks/comm_collectives.py --check-async gates)."""
+    from .multihost import build_gather_decode_step
+
+    strategy = _resolve_cfg_strategy(cfg, algorithm)
+    x = abstract_params(cfg, dtype)
+    y = delta_struct(cfg, dtype)
+    return build_gather_decode_step(
+        strategy, x, y, mesh, fed_axes(mesh, cfg.fed_mode)
+    )
 
 
 # --------------------------------------------------------------------------

@@ -5,14 +5,21 @@ Runs FedGDA-GT (or a baseline / scenario strategy — any
 quantized_gt) over one of the assigned architectures on whatever devices
 exist (a host mesh locally; the production mesh on a real cluster), with
 synthetic heterogeneous federated data, metrics and checkpointing.  The
-round comes from the unified engine (`make_round`), bitwise-identical to
-the legacy constructors for the legacy names (tests/test_engine_parity);
+round comes from the phase-split engine (`make_round`), bitwise-identical
+to the legacy constructors for the legacy names (tests/test_engine_parity);
 stateful strategies (sampling RNG, error-feedback buffers) thread their
 state across rounds and into checkpoints.
 
+`--runtime async` hands the same loss/strategy to
+`fed.async_runtime.AsyncFederatedRunner`: per-agent-shard phase programs
+on separate devices, server-side exchange, double-buffered broadcasts —
+iterates match the sync loop to fp tolerance.  `init_distributed` runs
+first either way, so a multi-process launch (JAX_COORDINATOR_ADDRESS set)
+spans hosts transparently.
+
     PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --reduced \
         --rounds 50 --local-steps 8 --agents 4 \
-        [--algorithm quantized_gt --quantization-bits 8]
+        [--algorithm quantized_gt --quantization-bits 8] [--runtime async]
 """
 from __future__ import annotations
 
@@ -61,9 +68,17 @@ def main() -> None:
                     help="move compressed corrections as packed "
                          "(value, index, scale) payloads "
                          "(compressed_gt / quantized_gt)")
+    ap.add_argument("--runtime", default="sync", choices=["sync", "async"],
+                    help="sync: one fused round program per step; "
+                         "async: per-agent-shard phase dispatch "
+                         "(fed.async_runtime) across the local devices")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
+
+    from .multihost import init_distributed
+
+    init_distributed()  # no-op unless a multi-process launch is configured
 
     # resolve the strategy first: a bad --algorithm must fail before the
     # expensive model/data setup below.  Only pass knobs the user set —
@@ -93,18 +108,40 @@ def main() -> None:
         args.seq_len, cfg.vocab_size, heterogeneity=args.heterogeneity,
     )
     loss = make_adversarial_loss(cfg, remat=False)
-    stateful = strategy.stateful
-    rnd = jax.jit(make_round(
-        loss, strategy, args.local_steps, args.eta,
-        proj_y=delta_projection(1.0), explicit_state=stateful,
-    ))
-    state = strategy.init_state(params, delta, args.agents) if stateful else None
 
     def global_loss(x, y):
         per = jax.vmap(loss, in_axes=(None, None, 0))(x, y, data)
         return jnp.mean(per)
 
     gl = jax.jit(global_loss)
+
+    if args.runtime == "async":
+        from ..fed import AsyncFederatedRunner
+
+        runner = AsyncFederatedRunner(
+            loss, strategy, data, args.local_steps, args.eta,
+            proj_y=delta_projection(1.0),
+            metric_fn=lambda x, y: {
+                "loss": global_loss(x, y),
+                "delta_norm": jnp.linalg.norm(y["delta"]),
+            },
+        )
+        params, delta = runner.run(
+            params, delta, args.rounds, log_every=args.log_every
+        )
+        if args.ckpt_dir:
+            save_checkpoint(
+                args.ckpt_dir, args.rounds, {"x": params, "y": delta}
+            )
+        print("done.")
+        return
+
+    stateful = strategy.stateful
+    rnd = jax.jit(make_round(
+        loss, strategy, args.local_steps, args.eta,
+        proj_y=delta_projection(1.0), explicit_state=stateful,
+    ))
+    state = strategy.init_state(params, delta, args.agents) if stateful else None
     t0 = time.time()
     for t in range(args.rounds):
         if stateful:

@@ -1,3 +1,17 @@
+import os
+
+# CPU emulation for the async-runtime / multi-host suites: 8 host devices
+# so agent shards have somewhere to land without real TPUs.  Must be set
+# BEFORE jax initializes its backend (conftest imports first under
+# pytest); appended, so an explicit XLA_FLAGS from the environment wins.
+_DEVICE_FLAG = "--xla_force_host_platform_device_count=8"
+if "xla_force_host_platform_device_count" not in os.environ.get(
+    "XLA_FLAGS", ""
+):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " " + _DEVICE_FLAG
+    ).strip()
+
 import jax
 import pytest
 
@@ -21,8 +35,28 @@ def pytest_configure(config):
         "kernel: Pallas interpret-mode kernel suites; select with "
         '-m kernel, deselect with -m "not kernel"',
     )
+    config.addinivalue_line(
+        "markers",
+        "multihost: async-runtime / multi-host suites needing the "
+        "8-device CPU emulation; select with -m multihost",
+    )
 
 
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def fed_devices():
+    """The emulated 8-device pool the async / multi-host suites shard
+    agents over.  Skips (instead of failing) when jax was initialized
+    before conftest could force the host device count — e.g. under a
+    caller-provided XLA_FLAGS."""
+    devices = jax.devices()
+    if len(devices) < 8:
+        pytest.skip(
+            f"needs 8 emulated host devices, have {len(devices)} "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)"
+        )
+    return devices[:8]

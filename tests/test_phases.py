@@ -1,0 +1,191 @@
+"""Phase-split engine: the four phases ARE the round.
+
+`make_round` is now the fused composition of `make_phases`'s
+broadcast / exchange_corrections / local_steps / aggregate; these tests
+pin that the decomposition is behavior-preserving:
+
+  * composing the phases by hand reproduces `make_round` BITWISE for
+    every strategy family (the fused round is literally the same trace);
+  * `RoundState` is a registered pytree, so each phase can be jitted and
+    dispatched SEPARATELY (the async runtime's schedule) and still
+    reproduce the fused round's iterates;
+  * `run_strategy_rounds` (lax.scan) and `FederatedRunner.run` (python
+    loop over the jitted round) agree exactly — same iterates AND same
+    final strategy state for a stateful strategy — so the sync/async
+    refactor has one shared oracle;
+  * `FederatedRunner.metric_series` names the available metrics instead
+    of raising a bare KeyError.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    RoundState,
+    make_phases,
+    make_round,
+    run_strategy_rounds,
+)
+from repro.fed import (
+    CompressedGT,
+    FederatedRunner,
+    FullSync,
+    GradientTracking,
+    LocalOnly,
+    PartialParticipation,
+    QuantizedGT,
+)
+from repro.problems import make_quadratic_problem
+
+ETA, K, ROUNDS = 1e-4, 4, 5
+
+STRATEGIES = {
+    "full_sync": FullSync(),
+    "local_only": LocalOnly(),
+    "gradient_tracking": GradientTracking(),
+    "partial_gt": PartialParticipation(participation=0.5, seed=0),
+    "compressed_gt": CompressedGT(compression_ratio=0.25, seed=0),
+    "quantized_gt": QuantizedGT(bits=8, seed=0, wire_transport=True),
+}
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return make_quadratic_problem(
+        jax.random.PRNGKey(0), dim=10, num_samples=40, num_agents=6
+    )
+
+
+def _state0(strategy, x, m):
+    return strategy.init_state(x, x, m)
+
+
+class TestFusedComposition:
+    @pytest.mark.parametrize("name", sorted(STRATEGIES))
+    def test_hand_composed_phases_bitwise_equal_make_round(self, prob, name):
+        strategy = STRATEGIES[name]
+        ph = make_phases(prob.loss, strategy, K, ETA)
+
+        def composed(x, y, data, state):
+            rs = ph.broadcast(x, y, data, state)
+            rs = ph.exchange_corrections(rs, data)
+            rs = ph.local_steps(rs, data)
+            return ph.aggregate(rs)
+
+        rnd = jax.jit(make_round(prob.loss, strategy, K, ETA, explicit_state=True))
+        comp = jax.jit(composed)
+        x = jnp.ones(10)
+        y = -jnp.ones(10)
+        s_a = s_b = _state0(strategy, x, 6)
+        for t in range(ROUNDS):
+            xa, ya, s_a = rnd(x, y, prob.agent_data, s_a)
+            xb, yb, s_b = comp(x, y, prob.agent_data, s_b)
+            assert (np.asarray(xa) == np.asarray(xb)).all(), (name, t)
+            assert (np.asarray(ya) == np.asarray(yb)).all(), (name, t)
+            x, y = xa, ya
+            s_a, s_b = s_a, s_b
+
+    @pytest.mark.parametrize("name", sorted(STRATEGIES))
+    def test_separately_jitted_phases_match(self, prob, name):
+        """RoundState crosses jit boundaries: each phase compiled as its
+        own program (the async runtime's dispatch granularity) must
+        reproduce the fused round."""
+        strategy = STRATEGIES[name]
+        ph = make_phases(prob.loss, strategy, K, ETA)
+        b = jax.jit(ph.broadcast)
+        e = jax.jit(ph.exchange_corrections)
+        l = jax.jit(ph.local_steps)
+        a = jax.jit(ph.aggregate)
+        rnd = jax.jit(make_round(prob.loss, strategy, K, ETA, explicit_state=True))
+        x = jnp.ones(10)
+        y = -jnp.ones(10)
+        state = _state0(strategy, x, 6)
+        xf, yf, _ = rnd(x, y, prob.agent_data, state)
+        rs = b(x, y, prob.agent_data, state)
+        rs = e(rs, prob.agent_data)
+        rs = l(rs, prob.agent_data)
+        xp, yp, _ = a(rs)
+        np.testing.assert_allclose(np.asarray(xp), np.asarray(xf), rtol=1e-12)
+        np.testing.assert_allclose(np.asarray(yp), np.asarray(yf), rtol=1e-12)
+
+
+class TestRoundState:
+    def test_roundstate_is_pytree_with_static_fused(self):
+        rs = RoundState(
+            x=jnp.ones(3), y=jnp.zeros(3), state={}, fused=True
+        )
+        leaves, treedef = jax.tree.flatten(rs)
+        rs2 = jax.tree.unflatten(treedef, leaves)
+        assert rs2.fused is True
+        rs3 = dataclasses.replace(rs2, fused=False)
+        assert jax.tree.structure(rs3) != treedef  # fused is metadata
+
+    def test_phase_population_order(self, prob):
+        """broadcast fills xs/ys, exchange fills corrections, local_steps
+        advances, aggregate consumes — the documented contract."""
+        strategy = GradientTracking()
+        ph = make_phases(prob.loss, strategy, K, ETA)
+        x = jnp.ones(10)
+        rs = ph.broadcast(x, -x, prob.agent_data, {})
+        assert rs.xs is not None and rs.cx is None and not rs.fused
+        rs = ph.exchange_corrections(rs, prob.agent_data)
+        assert rs.cx is not None and rs.gbar_x is not None and rs.fused
+        stepped = ph.local_steps(rs, prob.agent_data)
+        assert not bool(
+            jnp.all(
+                jax.tree.leaves(stepped.xs)[0] == jax.tree.leaves(rs.xs)[0]
+            )
+        )
+
+
+class TestRunnerParity:
+    def test_run_strategy_rounds_matches_runner_run_stateful(self, prob):
+        """Same strategy, same seed: the scan driver and the host-loop
+        runner produce identical iterates and identical final strategy
+        state (shared oracle for the sync/async refactor)."""
+        strategy = QuantizedGT(bits=8, seed=3, wire_transport=True)
+        x0 = jnp.ones(10)
+        y0 = -jnp.ones(10)
+        m = 6
+        T = 6
+        rnd = jax.jit(
+            make_round(prob.loss, strategy, K, ETA, explicit_state=True)
+        )
+        (xs, ys, state_scan), _ = run_strategy_rounds(
+            rnd, x0, y0, prob.agent_data, T, _state0(strategy, x0, m)
+        )
+        runner = FederatedRunner.from_strategy(
+            prob.loss, strategy, prob.agent_data, K, ETA
+        )
+        xr, yr = runner.run(x0, y0, T)
+        assert (np.asarray(xs) == np.asarray(xr)).all()
+        assert (np.asarray(ys) == np.asarray(yr)).all()
+        assert sorted(state_scan) == sorted(runner._state)
+        for k in state_scan:
+            for a, b in zip(
+                jax.tree.leaves(state_scan[k]),
+                jax.tree.leaves(runner._state[k]),
+            ):
+                assert (np.asarray(a) == np.asarray(b)).all(), k
+
+    def test_metric_series_unknown_key_names_available(self, prob):
+        runner = FederatedRunner.from_strategy(
+            prob.loss,
+            GradientTracking(),
+            prob.agent_data,
+            K,
+            ETA,
+            metric_fn=lambda x, y: {
+                "gap": jnp.sum(x**2),
+                "y_norm": jnp.sum(y**2),
+            },
+        )
+        runner.run(jnp.ones(10), -jnp.ones(10), 2)
+        assert runner.metric_series("gap").shape == (2,)
+        with pytest.raises(ValueError, match="gap.*y_norm"):
+            runner.metric_series("loss")
+        with pytest.raises(ValueError, match="available metric keys"):
+            runner.metric_series("nope")
