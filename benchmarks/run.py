@@ -10,6 +10,7 @@ Tables:
   generalization — Theorem-2 bound vs measured gap (paper Sec 4)
   comm        — bytes-to-accuracy, star-topology model (paper headline)
   overlap     — wall-clock round latency, sync vs async runtime
+  elastic     — rounds/bytes to eps under population churn scenarios
   collectives — per-round collective traffic by algorithm (HLO census)
   kernels     — Pallas kernels vs ref oracles
   roofline    — three-term roofline per (arch x shape) (deliverable g)
@@ -25,6 +26,7 @@ def main() -> None:
     from . import (
         comm_collectives,
         comm_efficiency,
+        elastic,
         fig1_quadratic,
         fig2_robust_regression,
         fig3_fixed_point,
@@ -40,6 +42,7 @@ def main() -> None:
         "generalization": generalization.run,
         "comm": comm_efficiency.run,
         "overlap": comm_efficiency.overlap,
+        "elastic": elastic.run,
         "collectives": comm_collectives.run,
         "kernels": kernels.run,
         "roofline": roofline.run,

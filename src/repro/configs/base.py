@@ -66,6 +66,11 @@ class ModelConfig:
     # programs, server-side exchange, packed-payload all-gather (the
     # dry-run tags its artifacts "__async" and adds the gather census)
     runtime: str = "sync"
+    # client-population scenario (repro.sim.scenarios): "stable" is the
+    # paper's full synchronous participation; any other preset (flaky /
+    # diurnal / straggler_heavy) makes the launchers run the
+    # membership-aware elastic round over a seeded RoundSchedule
+    population: str = "stable"
     # shape support
     supports_decode: bool = True
     supports_long_context: bool = False

@@ -98,6 +98,39 @@ def anchor_step(zs: Pytree, gbar: Pytree, eta, sign: float) -> Pytree:
     )
 
 
+def agent_where(mask, a: Pytree, b: Pytree) -> Pytree:
+    """Per-agent select: leaves of `a` where the [m] mask holds, else
+    `b`'s — the membership/budget gate of the elastic schedules (the
+    mask broadcasts over every trailing leaf dimension)."""
+    return jax.tree.map(
+        lambda u, v: jnp.where(
+            mask.reshape(mask.shape + (1,) * (u.ndim - 1)), u, v
+        ),
+        a,
+        b,
+    )
+
+
+def fixed_size_mask(key: jax.Array, m: int, size: int) -> jax.Array:
+    """Boolean mask with exactly `size` uniformly chosen agents active —
+    the single owner of the fixed-size participation draw (uniform
+    without replacement via permutation).  Lives here, below both
+    `repro.fed` (PartialParticipation's sampler) and `repro.sim`
+    (FixedSizeSampling's availability process), so neither layer imports
+    the other for it."""
+    sel = jax.random.permutation(key, m)[:size]
+    return jnp.zeros((m,), bool).at[sel].set(True)
+
+
+def renormalized_weights(active, dtype=None) -> jax.Array:
+    """Uniform aggregation weights over the active set, re-normalized so
+    they sum to 1 for ANY nonempty active set — the membership-aware
+    server weighting (a naive server keeps 1/m and silently loses the
+    departed agents' mass).  Accepts a boolean mask or 0/1 floats."""
+    a = jnp.asarray(active).astype(dtype or jnp.result_type(float))
+    return a / jnp.sum(a)
+
+
 def tracking_corrections(
     gx: Pytree, gy: Pytree, gbar_x: Pytree, gbar_y: Pytree, cdt=None
 ):
@@ -130,10 +163,11 @@ class RoundState:
     whether `local_steps` takes the anchor shortcut and must be known at
     trace time).
 
-    Fields are populated progressively: `broadcast` fills xs/ys/weights,
-    `exchange_corrections` fills cx/cy/gbar_x/gbar_y/fused, `local_steps`
-    advances xs/ys, `aggregate` consumes the lot.  Unused fields stay
-    None (empty subtrees)."""
+    Fields are populated progressively: `broadcast` fills xs/ys/weights
+    (plus the elastic schedule's step_budgets/active when a runner passes
+    them), `exchange_corrections` fills cx/cy/gbar_x/gbar_y/fused,
+    `local_steps` advances xs/ys, `aggregate` consumes the lot.  Unused
+    fields stay None (empty subtrees)."""
 
     x: Pytree                      # global iterates at round start
     y: Pytree
@@ -145,6 +179,8 @@ class RoundState:
     cy: Pytree = None
     gbar_x: Pytree = None          # anchor-point global gradients
     gbar_y: Pytree = None
+    step_budgets: Optional[jax.Array] = None  # [m] local-step caps (None=K)
+    active: Optional[jax.Array] = None        # [m] availability mask
     fused: bool = False            # static: anchor shortcut applies
 
 
@@ -152,7 +188,7 @@ jax.tree_util.register_dataclass(
     RoundState,
     data_fields=(
         "x", "y", "state", "xs", "ys", "weights",
-        "cx", "cy", "gbar_x", "gbar_y",
+        "cx", "cy", "gbar_x", "gbar_y", "step_budgets", "active",
     ),
     meta_fields=("fused",),
 )
@@ -161,7 +197,8 @@ jax.tree_util.register_dataclass(
 class RoundPhases(NamedTuple):
     """The four phase functions for one strategy (see module docstring).
 
-    broadcast(x, y, agent_data, state, *, weights=...) -> RoundState
+    broadcast(x, y, agent_data, state, *,
+              weights=..., step_budgets=None, active=None) -> RoundState
     exchange_corrections(rs, agent_data) -> RoundState
     local_steps(rs, agent_data) -> RoundState
     aggregate(rs) -> (x1, y1, state)
@@ -171,7 +208,11 @@ class RoundPhases(NamedTuple):
     single-program round (`make_round`) and per-shard dispatch
     (`fed.async_runtime`).  `broadcast`'s keyword-only `weights` lets a
     sharded runtime sample participation ONCE server-side and feed each
-    shard its slice instead of re-sampling per shard."""
+    shard its slice instead of re-sampling per shard; `step_budgets` and
+    `active` carry an elastic schedule's per-agent local-step caps and
+    availability mask (`repro.sim`) — `local_steps` freezes an agent
+    once its budget is spent, and `None` (the default) is the pinned
+    legacy trace with no gating primitives at all."""
 
     broadcast: Callable
     exchange_corrections: Callable
@@ -207,29 +248,34 @@ def make_phases(
         # local_steps (each "local" step IS a global aggregate).
         vg = jax.vmap(gfn, in_axes=(None, None, 0))
 
-        def gda_step(x, y, agent_data):
+        def gda_step(x, y, agent_data, weights=None):
             g = vg(x, y, agent_data)
-            gx = jax.tree.map(lambda u: jnp.mean(u, axis=0), g.gx)
-            gy = jax.tree.map(lambda u: jnp.mean(u, axis=0), g.gy)
+            gx = agent_mean(g.gx, weights)
+            gy = agent_mean(g.gy, weights)
             x1 = proj_x(jax.tree.map(lambda u, v: u - eta_x * v, x, gx))
             y1 = proj_y(jax.tree.map(lambda u, v: u + eta_y * v, y, gy))
             return x1, y1
 
-        def broadcast(x, y, agent_data, state, *, weights=_UNSET):
-            del agent_data, weights
-            return RoundState(x=x, y=y, state=state)
+        def broadcast(x, y, agent_data, state, *, weights=_UNSET,
+                      step_budgets=None, active=None):
+            # every "local" step is a global aggregate, so there is no
+            # per-agent divergence to budget — step_budgets is ignored;
+            # an elastic schedule's membership enters through `weights`
+            del agent_data, step_budgets
+            w = None if weights is _UNSET else weights
+            return RoundState(x=x, y=y, state=state, weights=w, active=active)
 
         def exchange_corrections(rs, agent_data):
             del agent_data
             return rs
 
         def local_steps(rs, agent_data):
-            x, y = rs.x, rs.y
+            x, y, w = rs.x, rs.y, rs.weights
             if num_local_steps == 1:
-                x, y = gda_step(x, y, agent_data)
+                x, y = gda_step(x, y, agent_data, w)
             else:
                 (x, y), _ = jax.lax.scan(
-                    lambda c, _: (gda_step(*c, agent_data), None),
+                    lambda c, _: (gda_step(*c, agent_data, w), None),
                     (x, y),
                     None,
                     length=num_local_steps,
@@ -245,7 +291,8 @@ def make_phases(
     use_corr = bool(getattr(strategy, "use_correction", False))
     cdt = getattr(strategy, "correction_dtype", None)
 
-    def broadcast(x, y, agent_data, state, *, weights=_UNSET):
+    def broadcast(x, y, agent_data, state, *, weights=_UNSET,
+                  step_budgets=None, active=None):
         m = _num_agents(agent_data)
         if weights is _UNSET:
             weights, state = strategy.sample_weights(state, m)
@@ -254,7 +301,8 @@ def make_phases(
         if constrain_agents is not None:
             xs, ys = constrain_agents(xs, ys)
         return RoundState(
-            x=x, y=y, state=state, xs=xs, ys=ys, weights=weights
+            x=x, y=y, state=state, xs=xs, ys=ys, weights=weights,
+            step_budgets=step_budgets, active=active,
         )
 
     def exchange_corrections(rs, agent_data):
@@ -290,39 +338,66 @@ def make_phases(
 
     def local_steps(rs, agent_data):
         xs, ys = rs.xs, rs.ys
+        budgets = rs.step_budgets
         if use_corr:
             cx, cy = rs.cx, rs.cy
 
-            def inner(carry, _):
-                xs, ys = carry
+            def step_once(xs, ys):
                 g = vgrad(xs, ys, agent_data)
                 xs = update_fn(xs, g.gx, cx, eta_x, -1.0)
                 ys = update_fn(ys, g.gy, cy, eta_y, +1.0)
                 if constrain_agents is not None:
                     # re-anchor the scan carry's sharding every step
                     xs, ys = constrain_agents(xs, ys)
-                return (xs, ys), None
+                return xs, ys
 
         else:
 
-            def inner(carry, _):
-                xs, ys = carry
+            def step_once(xs, ys):
                 g = vgrad(xs, ys, agent_data)
                 xs = jax.tree.map(lambda u, v: u - eta_x * v, xs, g.gx)
                 ys = jax.tree.map(lambda u, v: u + eta_y * v, ys, g.gy)
-                return (xs, ys), None
+                return xs, ys
 
-        inner_steps = num_local_steps
+        start = 0
         if rs.fused:
-            xs = anchor_step(xs, rs.gbar_x, eta_x, -1.0)
-            ys = anchor_step(ys, rs.gbar_y, eta_y, +1.0)
+            xs1 = anchor_step(xs, rs.gbar_x, eta_x, -1.0)
+            ys1 = anchor_step(ys, rs.gbar_y, eta_y, +1.0)
             if constrain_agents is not None:
-                xs, ys = constrain_agents(xs, ys)
-            inner_steps -= 1
-        if inner_steps > 0:
-            (xs, ys), _ = jax.lax.scan(
-                inner, (xs, ys), None, length=inner_steps
-            )
+                xs1, ys1 = constrain_agents(xs1, ys1)
+            if budgets is None:
+                xs, ys = xs1, ys1
+            else:
+                live = budgets >= 1
+                xs = agent_where(live, xs1, xs)
+                ys = agent_where(live, ys1, ys)
+            start = 1
+        if num_local_steps - start > 0:
+            if budgets is None:
+                # the pinned legacy trace: no gating primitives at all
+                (xs, ys), _ = jax.lax.scan(
+                    lambda c, _: (step_once(*c), None),
+                    (xs, ys),
+                    None,
+                    length=num_local_steps - start,
+                )
+            else:
+                # elastic: step k only advances agents whose budget still
+                # covers it — a spent (or absent, budget 0) agent's
+                # iterate is frozen so its weighted aggregate share (and
+                # its zero weight, for inactive agents) stays exact
+                def gated(carry, k):
+                    xs, ys = carry
+                    xs1, ys1 = step_once(xs, ys)
+                    live = k < budgets
+                    return (
+                        agent_where(live, xs1, xs),
+                        agent_where(live, ys1, ys),
+                    ), None
+
+                (xs, ys), _ = jax.lax.scan(
+                    gated, (xs, ys), jnp.arange(start, num_local_steps)
+                )
         return dataclasses.replace(rs, xs=xs, ys=ys)
 
     def aggregate(rs):

@@ -35,6 +35,21 @@ server combine) exchanges per round — which is exactly why it is K times
 more expensive on the wire, now visible as wall-clock in
 `benchmarks/comm_efficiency.py --overlap`.
 
+The runner also consumes an elastic `repro.sim.RoundSchedule`
+(`run(..., schedule=...)`): agent SHARDS join and leave between rounds —
+a shard whose agents are all absent this round is never dispatched (its
+anchor-gradient and local-step programs simply don't run; stale tracker
+rows stand in server-side), and partially-present shards run
+budget-gated local steps with their weight slice re-normalized over the
+global active set.  Membership is identical to the sync runner's by
+construction (both read the same materialized schedule), and the
+tracker-table exchange runs server-side through the same
+`sim.make_elastic_round` math, so elastic iterates match the sync
+elastic path to fp tolerance.  The elastic rounds forgo the
+double-buffered donated broadcasts (membership changes the set of live
+shard programs round to round); a static-full schedule falls back to
+the unmodified overlapped loop.
+
 The fp-tolerance contract with the sync runner holds because per-agent
 gradients and local steps are elementwise identical computations on
 shard slices, and every random draw (participation sampling, rand-k
@@ -167,6 +182,9 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
         self._metric_fn = jax.jit(metric_fn) if metric_fn else None
         self._server_state: Dict = {}
         self._shard_state: Optional[List[Dict]] = None
+        #: set by an elastic run: {"tracker", "prev_active"} where it
+        #: left off (mirrors FederatedRunner.elastic_state)
+        self.elastic_state: Optional[Dict] = None
         self.history: List[RoundStats] = []
 
     # ------------------------------------------------------------ programs
@@ -188,10 +206,12 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
             g = jax.vmap(self._gfn, in_axes=(None, None, 0))(x, y, data_s)
             return g.gx, g.gy
 
-        def fullsync_step(x, y, gx, gy):
-            """One centralized GDA step from gathered per-agent grads."""
-            gxm = agent_mean(gx, None)
-            gym = agent_mean(gy, None)
+        def fullsync_step(x, y, gx, gy, weights):
+            """One centralized GDA step from gathered per-agent grads;
+            weights None is the bitwise-pinned uniform mean, an elastic
+            round passes its re-normalized active-set weights."""
+            gxm = agent_mean(gx, weights)
+            gym = agent_mean(gy, weights)
             x1 = self._proj_x(
                 jax.tree.map(lambda u, v: u - self._eta_x * v, x, gxm)
             )
@@ -213,13 +233,20 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
                 cy = cy.decode()
             return cx, cy, gbar_x, gbar_y, state
 
-        def shard_steps(x, y, data_s, cx_s, cy_s, gbar_x, gbar_y, w_s):
-            """Per-shard local_steps + partial aggregate.  The broadcast
-            buffers (x, y) are DONATED — by the time this runs they have
-            served the gradient program, and freeing them lets the next
-            round's double-buffered transfer land without growing the
-            working set."""
-            rs = ph.broadcast(x, y, data_s, {}, weights=None)
+        def shard_steps(x, y, data_s, cx_s, cy_s, gbar_x, gbar_y, w_s,
+                        b_s=None):
+            """Per-shard local_steps + partial aggregate — ONE body for
+            both schedules (b_s None is the legacy pinned trace; an
+            elastic round passes its budget slice).  It is jitted twice
+            below: the legacy instance DONATES the broadcast buffers
+            (x, y) — by the time it runs they have served the gradient
+            program, and freeing them lets the next round's
+            double-buffered transfer land without growing the working
+            set — while the elastic instance re-broadcasts per round
+            (the set of live shard programs changes with membership, so
+            there is no stable double-buffer to donate into)."""
+            rs = ph.broadcast(x, y, data_s, {}, weights=None,
+                              step_budgets=b_s)
             rs = dataclasses.replace(
                 rs, cx=cx_s, cy=cy_s, gbar_x=gbar_x, gbar_y=gbar_y,
                 fused=fused,
@@ -245,6 +272,22 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
             )
             return z(bx), z(by)
 
+        def server_exchange_elastic(gx, gy, state, active, tab_x, tab_y,
+                                    prev_active):
+            """Membership-aware server exchange: one thin jit wrapper
+            over `sim.elastic.tracker_exchange` — the SAME function the
+            sync elastic round fuses, so the GT-invariant math (and the
+            in-jit EF re-anchoring) has one owner whatever the
+            execution schedule (skipped shards deliver zero-filled
+            gradient rows that the active mask discards in favor of the
+            stale tracker rows)."""
+            from ..sim.elastic import tracker_exchange
+
+            return tracker_exchange(
+                strategy, gx, gy, state, active, tab_x, tab_y, cdt,
+                prev_active,
+            )
+
         self._shard_grads = jax.jit(shard_grads)
         self._shard_point_grads = jax.jit(shard_point_grads)
         self._fullsync_step = jax.jit(fullsync_step)
@@ -252,6 +295,8 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
         self._shard_steps = jax.jit(shard_steps, donate_argnums=(0, 1))
         self._server_combine = jax.jit(server_combine)
         self._zeros_like_agents = jax.jit(zeros_like_agents)
+        self._server_exchange_elastic = jax.jit(server_exchange_elastic)
+        self._shard_steps_elastic = jax.jit(shard_steps)
 
     # ---------------------------------------------------------- state plumbing
     def _init_state(self, x: Pytree, y: Pytree) -> None:
@@ -329,19 +374,35 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
         ]
         return weights, w_slices
 
-    def _run_fullsync_round(self, x, y):
+    def _run_fullsync_round(self, x, y, weights=None, shard_live=None):
         """FullSync: K communicated steps; each is a per-shard gradient
-        fan-out + server combine (no local divergence to overlap)."""
+        fan-out + server combine (no local divergence to overlap).
+        `weights` None is the legacy uniform mean; an elastic round
+        passes its re-normalized active-set weights (budgets are
+        meaningless here — there are no local phases to cap) and
+        `shard_live`, so fully-absent shards are never dispatched —
+        their zero-weight rows are zero-filled server-side."""
+        zx = zy = None
+        if shard_live is not None and not all(shard_live):
+            zx, zy = self._zero_shard_rows(x, y)
         for _ in range(self._K):
             gs = [
                 self._shard_point_grads(
                     jax.device_put(x, d), jax.device_put(y, d), data
                 )
-                for d, data in zip(self._shard_devices, self._data_s)
+                if shard_live is None or shard_live[i]
+                else None
+                for i, (d, data) in enumerate(
+                    zip(self._shard_devices, self._data_s)
+                )
             ]
-            gx = self._concat_server([g[0] for g in gs])
-            gy = self._concat_server([g[1] for g in gs])
-            x, y = self._fullsync_step(x, y, gx, gy)
+            gx = self._concat_server(
+                [g[0] if g is not None else zx for g in gs]
+            )
+            gy = self._concat_server(
+                [g[1] if g is not None else zy for g in gs]
+            )
+            x, y = self._fullsync_step(x, y, gx, gy, weights)
         return x, y
 
     def _bcast(self, x, y) -> List:
@@ -365,6 +426,16 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
     def _concat_server(self, parts: List[Pytree]) -> Pytree:
         return concat_on_device(parts, self._server)
 
+    def _zero_shard_rows(self, x, y):
+        """One shard's worth of zero-filled per-agent gradient rows —
+        the stand-in for a shard that was never dispatched this round
+        (the active mask / zero weights discard them downstream).  ONE
+        owner of the placeholder layout for both elastic paths."""
+        z = lambda t: jax.tree.map(
+            lambda u: jnp.zeros((self._per,) + u.shape, u.dtype), t
+        )
+        return z(x), z(y)
+
     def run(
         self,
         x: Pytree,
@@ -372,6 +443,9 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
         num_rounds: int,
         log_every: int = 0,
         state: Optional[Pytree] = None,
+        schedule=None,
+        rebase: bool = True,
+        elastic_state: Optional[Dict] = None,
     ):
         x = jax.device_put(x, self._server)
         y = jax.device_put(y, self._server)
@@ -380,6 +454,15 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
             if state is not None:
                 # resume: re-split a checkpointed full state
                 self._scatter_state(dict(state))
+        if schedule is not None and schedule.is_static_full:
+            # degenerate schedule: the overlapped legacy loop below IS
+            # the full-participation run
+            schedule = None
+        if schedule is not None:
+            return self._run_elastic(
+                x, y, num_rounds, schedule, rebase, log_every,
+                elastic_state,
+            )
         # double-buffered broadcast: the per-shard (x, y) copies for the
         # round ABOUT to run; refreshed (device_put enqueued) as soon as
         # the aggregate producing the next iterates is dispatched.
@@ -459,6 +542,141 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
         # (the transfers ride behind the still-executing local steps; the
         # donated buffers they replace free as those programs retire)
         return x1, y1, self._bcast(x1, y1)
+
+    # ---------------------------------------------------------- elastic rounds
+    def _run_elastic(self, x, y, num_rounds, schedule, rebase, log_every,
+                     elastic_state=None):
+        """Drive `num_rounds` through the membership-aware schedule:
+        shards join/leave between rounds (fully-absent shards are never
+        dispatched), budgets gate local steps, the tracker table lives
+        server-side.  Same schedule + same strategy draws as the sync
+        runner's elastic loop => iterates match to fp tolerance.
+
+        The loop itself is the shared `RunnerHistoryMixin._drive_elastic`
+        driver, so validation, continuation (`elastic_state` +
+        `schedule.tail`) and per-round bookkeeping cannot drift between
+        the runtimes; only the per-round step differs (per-shard
+        dispatch here, the fused elastic program in `FederatedRunner`).
+        The tracker table initializes lazily from the first round's
+        broadcast (the per-shard agent data never leaves its device)."""
+        x, y = self._drive_elastic(
+            x, y, num_rounds, schedule, rebase, log_every, elastic_state,
+            lambda xx, yy: None,  # lazy: built from the first broadcast
+            self._run_elastic_round, "elastic async round",
+            num_agents=self._m,
+        )
+        jax.block_until_ready((x, y))
+        return x, y
+
+    def _init_tracker(self, bcast):
+        """Tracker table at the first elastic round: every agent's
+        anchor gradient at the current broadcast iterate, gathered from
+        ALL shards once (matches `sim.init_tracker` on the sync path)."""
+        gs = [
+            self._shard_grads(bx, by, data)
+            for (bx, by), data in zip(bcast, self._data_s)
+        ]
+        return {
+            "gx": self._concat_server([g[0] for g in gs]),
+            "gy": self._concat_server([g[1] for g in gs]),
+        }
+
+    def _run_elastic_round(self, x, y, ev, agg, tracker, prev_active):
+        per = self._per
+        active = jax.device_put(jnp.asarray(ev.active), self._server)
+        weights = agg.weights(active)
+        n = self._n_shards
+        shard_live = [
+            bool(ev.active[i * per : (i + 1) * per].any()) for i in range(n)
+        ]
+
+        if self._sync_every:
+            x, y = self._run_fullsync_round(x, y, weights, shard_live)
+            return x, y, tracker
+
+        budgets = jnp.asarray(ev.budgets)
+        # fresh per-shard broadcast (no donation — see shard_steps_elastic);
+        # absent shards still receive it cheaply enough, keeping the
+        # transfer schedule uniform
+        bcast = [
+            (jax.device_put(x, d), jax.device_put(y, d))
+            for d in self._shard_devices
+        ]
+        w_slices = [
+            jax.device_put(weights[i * per : (i + 1) * per], d)
+            for i, d in enumerate(self._shard_devices)
+        ]
+        b_slices = [
+            jax.device_put(budgets[i * per : (i + 1) * per], d)
+            for i, d in enumerate(self._shard_devices)
+        ]
+
+        cx_s = cy_s = [None] * n
+        gbx_s = gby_s = [None] * n
+        if self._use_corr:
+            if tracker is None:
+                tracker = self._init_tracker(bcast)
+            else:
+                # no-op when already resident (every round after the
+                # first); a cross-runtime resume hands us host/default-
+                # device arrays that must land server-side
+                tracker = jax.device_put(tracker, self._server)
+            # fan-out: only LIVE shards' anchor-gradient programs are
+            # dispatched; a fully-absent shard's rows are zero-filled
+            # placeholders the active mask discards in favor of the
+            # stale tracker rows
+            gs = [
+                self._shard_grads(bx, by, data) if live else None
+                for live, (bx, by), data in zip(
+                    shard_live, bcast, self._data_s
+                )
+            ]
+            if not all(shard_live):
+                # placeholders only when a shard actually skipped
+                zx, zy = self._zero_shard_rows(x, y)
+            gx = self._concat_server(
+                [g[0] if g is not None else zx for g in gs]
+            )
+            gy = self._concat_server(
+                [g[1] if g is not None else zy for g in gs]
+            )
+            full_state = self._gather_state()
+            (
+                cx, cy, gbar_x, gbar_y, new_state, tab_x, tab_y
+            ) = self._server_exchange_elastic(
+                gx, gy, full_state, active, tracker["gx"], tracker["gy"],
+                agg.round_prev_active(active, prev_active),
+            )
+            tracker = {"gx": tab_x, "gy": tab_y}
+            self._scatter_state(dict(new_state))
+            cx_s = [
+                jax.device_put(_slice_agents(cx, i * per, (i + 1) * per), d)
+                for i, d in enumerate(self._shard_devices)
+            ]
+            cy_s = [
+                jax.device_put(_slice_agents(cy, i * per, (i + 1) * per), d)
+                for i, d in enumerate(self._shard_devices)
+            ]
+            gbx_s = [jax.device_put(gbar_x, d) for d in self._shard_devices]
+            gby_s = [jax.device_put(gbar_y, d) for d in self._shard_devices]
+
+        # local steps only on live shards: a shard that left this round
+        # runs NOTHING (that is the elastic contract — its weight slice
+        # is zero, so it has no aggregate share either)
+        sums = [
+            self._shard_steps_elastic(
+                bcast[i][0], bcast[i][1], self._data_s[i],
+                cx_s[i], cy_s[i], gbx_s[i], gby_s[i],
+                w_slices[i], b_slices[i],
+            )
+            for i in range(n)
+            if shard_live[i]
+        ]
+        x1, y1 = self._server_combine(
+            [jax.device_put(a, self._server) for a, _ in sums],
+            [jax.device_put(b, self._server) for _, b in sums],
+        )
+        return x1, y1, tracker
 
     # ------------------------------------------------------------- reporting
     def wire_report(self, x: Pytree, y: Pytree, num_local_steps: int) -> Dict:

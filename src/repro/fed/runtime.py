@@ -18,6 +18,16 @@ phase functions per agent shard on separate devices, overlaps the
 correction exchange with trailing local steps, and shards per-agent
 strategy state; the two agree on iterates to fp tolerance
 (tests/test_async_runtime.py).
+
+Both runners also consume a `repro.sim.RoundSchedule` (`run(...,
+schedule=...)`): per-round active sets and local-step budgets from a
+seedable client population.  Non-full rounds execute the membership-
+aware elastic round (`sim.make_elastic_round` — re-normalized weights,
+tracker-table corrections, budget-gated local steps, EF re-anchoring
+via the strategy's `rebase_state` hook; `rebase=False` is the
+naive-server ablation).  A static-full schedule degenerates to the
+unmodified legacy loop, so full participation stays bitwise identical
+to running without a schedule (tests/test_elastic.py).
 """
 from __future__ import annotations
 
@@ -41,7 +51,8 @@ class RoundStats:
 
 
 class RunnerHistoryMixin:
-    """Per-round history shared by the sync and async runners."""
+    """Per-round history + the elastic-schedule driver shared by the
+    sync and async runners."""
 
     history: List[RoundStats]
 
@@ -54,6 +65,75 @@ class RunnerHistoryMixin:
             )
         return np.array([s.metrics[name] for s in self.history])
 
+    def _drive_elastic(
+        self,
+        x,
+        y,
+        num_rounds: int,
+        schedule,
+        rebase: bool,
+        log_every: int,
+        elastic_state,
+        init_tracker_fn: Callable,
+        round_fn: Callable,
+        label: str,
+        checkpoint_fn: Optional[Callable] = None,
+        num_agents: Optional[int] = None,
+    ):
+        """ONE owner of the elastic run loop for both runtimes:
+        schedule validation, the `ElasticAggregator`, tracker +
+        prev_active continuation (`elastic_state` — resuming without it
+        re-anchors absent agents' trackers at the resume iterate and
+        forgets who participated last round), per-round `n_active`
+        metrics, history, logging and optional checkpointing.  The
+        runners differ only in `round_fn(x, y, ev, agg, tracker,
+        prev_active) -> (x, y, tracker)` — the fused elastic round vs
+        per-shard dispatch."""
+        import jax.numpy as jnp
+
+        from ..sim.elastic import ElasticAggregator
+
+        if len(schedule) < num_rounds:
+            raise ValueError(
+                f"schedule covers {len(schedule)} rounds, need {num_rounds}"
+            )
+        if num_agents is not None and schedule.m != num_agents:
+            # a larger-m schedule would renormalize weights over agents
+            # that don't exist and then silently lose their mass when
+            # the runner slices — exactly the naive-server failure mode
+            raise ValueError(
+                f"schedule is for m={schedule.m} agents, runner has "
+                f"{num_agents}"
+            )
+        agg = ElasticAggregator(self._strategy, rebase=rebase)
+        if elastic_state is not None:
+            tracker = elastic_state["tracker"]
+            prev_active = elastic_state.get("prev_active")
+        else:
+            tracker = init_tracker_fn(x, y)
+            prev_active = None
+        for t in range(num_rounds):
+            t0 = time.perf_counter()
+            ev = schedule[t]
+            x, y, tracker = round_fn(x, y, ev, agg, tracker, prev_active)
+            prev_active = jnp.asarray(ev.active)
+            metrics = {"n_active": float(ev.num_active)}
+            if self._metric_fn is not None:
+                metrics.update(
+                    {k: float(v) for k, v in self._metric_fn(x, y).items()}
+                )
+            dt = time.perf_counter() - t0
+            self.history.append(RoundStats(t, metrics, dt))
+            if log_every and (t % log_every == 0 or t == num_rounds - 1):
+                msg = " ".join(f"{k}={v:.3e}" for k, v in metrics.items())
+                print(f"[{label} {t:5d}] {msg} ({dt*1e3:.1f} ms)")
+            if checkpoint_fn is not None:
+                checkpoint_fn(t, x, y, tracker, prev_active)
+        #: where the run left off, for continuation:
+        #: run(..., elastic_state=runner.elastic_state, schedule=tail)
+        self.elastic_state = {"tracker": tracker, "prev_active": prev_active}
+        return x, y
+
 
 class FederatedRunner(RunnerHistoryMixin):
     def __init__(
@@ -64,6 +144,8 @@ class FederatedRunner(RunnerHistoryMixin):
         checkpoint_dir: Optional[str] = None,
         checkpoint_every: int = 0,
         strategy=None,
+        elastic_round_fn: Optional[Callable] = None,
+        tracker_init_fn: Optional[Callable] = None,
     ):
         self._round = jax.jit(round_fn)
         self._agent_data = agent_data
@@ -74,6 +156,17 @@ class FederatedRunner(RunnerHistoryMixin):
         # explicit_state=True and is called as round(x, y, data, state)
         self._strategy = strategy
         self._state: Optional[Pytree] = None
+        # elastic (sim.RoundSchedule) support: the membership-aware round
+        # round(x, y, data, state, tracker, weights, budgets, active)
+        # and the tracker-table initializer (x, y, data) -> tracker.
+        # Built by from_strategy; a raw-round runner cannot run elastic.
+        self._elastic = (
+            jax.jit(elastic_round_fn) if elastic_round_fn is not None else None
+        )
+        self._tracker_init = tracker_init_fn
+        #: set by an elastic run: {"tracker", "prev_active"} where it
+        #: left off (also checkpointed as "elastic_state")
+        self.elastic_state: Optional[Dict] = None
         self.history: List[RoundStats] = []
 
     @classmethod
@@ -93,7 +186,10 @@ class FederatedRunner(RunnerHistoryMixin):
     ) -> "FederatedRunner":
         """Build the round for `strategy` (name or CommStrategy) via the
         unified engine and wrap it in a runner."""
+        import functools
+
         from ..core.engine import make_round
+        from ..sim.elastic import init_tracker, make_elastic_round
         from .strategies import resolve_strategy
 
         strategy = resolve_strategy(strategy)
@@ -106,6 +202,14 @@ class FederatedRunner(RunnerHistoryMixin):
             explicit_state=strategy.stateful,
             **round_kwargs,
         )
+        elastic_kwargs = {
+            k: v
+            for k, v in round_kwargs.items()
+            if k in ("proj_x", "proj_y", "update_fn", "constrain_agents")
+        }
+        elastic = make_elastic_round(
+            loss, strategy, num_local_steps, eta_x, eta_y, **elastic_kwargs
+        )
         return cls(
             rnd,
             agent_data,
@@ -113,6 +217,8 @@ class FederatedRunner(RunnerHistoryMixin):
             checkpoint_dir=checkpoint_dir,
             checkpoint_every=checkpoint_every,
             strategy=strategy,
+            elastic_round_fn=elastic,
+            tracker_init_fn=functools.partial(init_tracker, loss, strategy),
         )
 
     @property
@@ -128,12 +234,24 @@ class FederatedRunner(RunnerHistoryMixin):
         num_rounds: int,
         log_every: int = 0,
         state: Optional[Pytree] = None,
+        schedule=None,
+        rebase: bool = True,
+        elastic_state: Optional[Dict] = None,
     ):
         if state is not None:  # resume from a checkpointed strategy_state
             self._state = state
         if self._stateful and self._state is None:
             m = jax.tree.leaves(self._agent_data)[0].shape[0]
             self._state = self._strategy.init_state(x, y, m)
+        if schedule is not None and schedule.is_static_full:
+            # degenerate schedule (all agents, full budgets, every
+            # round): the legacy loop below IS that run, bitwise
+            schedule = None
+        if schedule is not None:
+            return self._run_elastic(
+                x, y, num_rounds, schedule, rebase, log_every,
+                elastic_state,
+            )
         for t in range(num_rounds):
             t0 = time.perf_counter()
             if self._stateful:
@@ -164,6 +282,80 @@ class FederatedRunner(RunnerHistoryMixin):
                     # error-feedback buffers
                     payload["strategy_state"] = self._state
                 save_checkpoint(self._ckpt_dir, t + 1, payload)
+        return x, y
+
+    def _run_elastic(
+        self, x, y, num_rounds, schedule, rebase, log_every,
+        elastic_state=None,
+    ):
+        """Drive `num_rounds` through the membership-aware elastic round
+        (see `repro.sim.elastic`): per-round weights re-normalized over
+        the schedule's active set, local steps capped by its budgets,
+        the tracker table threaded across rounds, and the strategy's
+        membership-dependent state re-anchored via `rebase_state`.
+        `rebase=False` is the naive-server ablation (1/m weights, stale
+        EF residuals).
+
+        Checkpoints made on this path carry an `elastic_state` entry
+        ({"tracker": ..., "prev_active": ...}) alongside the strategy
+        state: resuming WITHOUT it would re-anchor every absent agent's
+        tracker at the resume iterate and forget who participated last
+        round, silently diverging from the uninterrupted run.  Resume
+        with `run(..., state=ckpt["strategy_state"],
+        elastic_state=ckpt["elastic_state"],
+        schedule=schedule.tail(t_ckpt))`."""
+        import jax.numpy as jnp
+
+        if self._elastic is None or self._strategy is None:
+            raise ValueError(
+                "elastic schedules need a runner built via from_strategy"
+            )
+        state = self._state if self._state is not None else {}
+
+        def round_fn(x, y, ev, agg, tracker, prev_active):
+            nonlocal state
+            active = jnp.asarray(ev.active)
+            weights = agg.weights(active)
+            budgets = jnp.asarray(ev.budgets)
+            # EF re-anchoring happens INSIDE the jitted round (fused
+            # with the state's first use); None = the naive ablation
+            x, y, state, tracker = self._elastic(
+                x, y, self._agent_data, state, tracker,
+                weights, budgets, active,
+                agg.round_prev_active(active, prev_active),
+            )
+            return x, y, tracker
+
+        def checkpoint_fn(t, x, y, tracker, prev_active):
+            if not (
+                self._ckpt_dir
+                and self._ckpt_every
+                and (t + 1) % self._ckpt_every == 0
+            ):
+                return
+            payload = {
+                "x": x,
+                "y": y,
+                # resuming without this re-anchors absent agents'
+                # trackers at the resume iterate and forgets the
+                # previous active set (see docstring)
+                "elastic_state": {
+                    "tracker": tracker,
+                    "prev_active": prev_active,
+                },
+            }
+            if self._stateful:
+                payload["strategy_state"] = state
+            save_checkpoint(self._ckpt_dir, t + 1, payload)
+
+        x, y = self._drive_elastic(
+            x, y, num_rounds, schedule, rebase, log_every, elastic_state,
+            lambda xx, yy: self._tracker_init(xx, yy, self._agent_data),
+            round_fn, "elastic round", checkpoint_fn,
+            num_agents=jax.tree.leaves(self._agent_data)[0].shape[0],
+        )
+        if self._stateful:
+            self._state = state
         return x, y
 
     def wire_report(self, x: Pytree, y: Pytree, num_local_steps: int) -> Dict:

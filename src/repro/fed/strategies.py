@@ -22,6 +22,13 @@ Protocol consumed by the engine (all trace-time unless noted):
                      cx/cy may come back as `transport.PackedTree` wire
                      payloads (objects with a `.decode()` hook) instead
                      of dense trees; the engine decodes before use
+  rebase_state(state, active, prev_active) -> state  [traced]
+                     re-anchor membership-dependent state for an elastic
+                     round's active set (`repro.sim`): compressors zero
+                     the error-feedback rows of agents that did not
+                     participate last round, so a rejoining agent never
+                     re-injects residuals of corrections it never
+                     applied
   bytes_per_round(x, y, K)  analytic star-topology payload per agent
                      (`transport.measured_bytes_per_round` is the
                      empirical counterpart probing packed buffers)
@@ -34,6 +41,7 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..core.engine import agent_where, fixed_size_mask, renormalized_weights
 from ..core.types import Pytree
 from ..kernels.compress_correction import compress_leaf
 from .transport import (
@@ -113,6 +121,17 @@ class CommStrategy:
     ) -> Tuple[Pytree, Pytree, State]:
         return cx, cy, state
 
+    def rebase_state(
+        self, state: State, active, prev_active=None
+    ) -> State:
+        """Re-anchor membership-dependent state when an elastic schedule
+        changes the active set (`repro.sim.ElasticAggregator` calls this
+        each non-full round).  The base strategies carry no per-agent
+        state that can go stale — corrections are re-formed from the
+        current server iterate every round — so the default is a no-op."""
+        del active, prev_active
+        return state
+
     def bytes_per_round(self, x: Pytree, y: Pytree, num_local_steps: int) -> int:
         raise NotImplementedError
 
@@ -165,7 +184,14 @@ class PartialParticipation(GradientTracking):
     global mean under uniform sampling without replacement).
 
     participation >= 1 is the identity configuration: sampling is elided
-    entirely and the round is EXACTLY GradientTracking."""
+    entirely and the round is EXACTLY GradientTracking.
+
+    The subset draw itself is owned by `repro.sim.population` — this
+    strategy is the degenerate Population (i.i.d. fixed-size sampling,
+    no churn memory) expressed as a per-round weight sampler, and
+    `sim.FixedSizeSampling` is the same draw expressed as an
+    availability process (tests/test_population.py pins the two to the
+    historical inline implementation bitwise)."""
 
     participation: float = 0.5
     seed: int = 0
@@ -189,9 +215,7 @@ class PartialParticipation(GradientTracking):
         state = dict(state)
         key, sub = jax.random.split(state["key"])
         state["key"] = key
-        sel = jax.random.permutation(sub, m)[:S]
-        w = jnp.zeros((m,)).at[sel].set(1.0 / S)
-        return w, state
+        return renormalized_weights(fixed_size_mask(sub, m, S)), state
 
     def bytes_per_round(self, x, y, num_local_steps):
         # expected per-agent payload: only sampled agents communicate
@@ -384,6 +408,33 @@ class _CorrectionCompressor(CommStrategy):
         if self.error_feedback:
             state["ex"], state["ey"] = ex, ey
         return cx, cy, state
+
+    def rebase_state(self, state, active, prev_active=None):
+        """Elastic re-anchoring of the error-feedback buffers: keep an
+        agent's residual rows only if it participated BOTH last round
+        (so the residual describes a correction it actually applied)
+        and this round (so it is about to re-inject it).  Departed and
+        rejoining agents restart from a zero residual — the compressed
+        round they next see is anchored purely at the current server
+        iterate.
+
+        NOTE on prev_active=None: HERE it means "fresh start" (keep =
+        active alone, matching a first round where every buffer is
+        zero).  In `sim.elastic.tracker_exchange` the same None means
+        "skip rebasing entirely" — the naive-server ablation — because
+        there the hook is simply never called; use
+        `ElasticAggregator.round_prev_active` to produce the right
+        value rather than forwarding None through."""
+        if "ex" not in state:
+            return state
+        keep = active if prev_active is None else (active & prev_active)
+        zero_stale = lambda t: agent_where(
+            keep, t, jax.tree.map(jnp.zeros_like, t)
+        )
+        state = dict(state)
+        state["ex"] = zero_stale(state["ex"])
+        state["ey"] = zero_stale(state["ey"])
+        return state
 
 
 @dataclasses.dataclass(frozen=True)

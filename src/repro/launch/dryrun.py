@@ -98,6 +98,7 @@ def run_one(
     quantization_bits=None,
     wire_transport=False,
     runtime="sync",
+    population=None,
 ) -> Dict:
     cfg = get_config(arch)
     if (
@@ -125,6 +126,20 @@ def run_one(
         import dataclasses as _dc
 
         cfg = _dc.replace(cfg, runtime=runtime)
+    if population:
+        import dataclasses as _dc
+
+        from ..sim.scenarios import SCENARIOS
+
+        if population not in SCENARIOS:
+            raise ValueError(
+                f"unknown population scenario {population!r}; "
+                f"known: {sorted(SCENARIOS)}"
+            )
+        cfg = _dc.replace(cfg, population=population)
+    #: non-stable population => lower the membership-aware elastic round
+    #: (extra schedule inputs: tracker table, weights, budgets, active)
+    elastic = cfg.population != "stable"
     shape = INPUT_SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
     rec: Dict = {
@@ -145,6 +160,7 @@ def run_one(
             cfg.wire_transport if shape.kind == "train" else None
         ),
         "runtime": cfg.runtime if shape.kind == "train" else None,
+        "population": cfg.population if shape.kind == "train" else None,
         "sharding_variant": sharding_variant,
         "sequence_parallel": sequence_parallel,
         "h_shard": h_shard,
@@ -152,7 +168,23 @@ def run_one(
     }
     t0 = time.perf_counter()
     with jax.set_mesh(mesh):
-        if shape.kind == "train":
+        if shape.kind == "train" and elastic:
+            from .steps import build_elastic_train_step
+
+            jitted_fn, specs_fn = build_elastic_train_step(
+                cfg, mesh, algorithm=algorithm, num_local_steps=num_local_steps,
+                sharding_variant=sharding_variant,
+                sequence_parallel=sequence_parallel,
+                h_shard=h_shard,
+                q_block=q_block,
+            )
+            sp = specs_fn(shape)
+            lowered = jitted_fn(shape).lower(
+                sp["x"], sp["y"], sp["batch"], sp["state"], sp["tracker"],
+                sp["weights"], sp["budgets"], sp["active"],
+                sp["prev_active"],
+            )
+        elif shape.kind == "train":
             jitted_fn, specs_fn = build_train_step(
                 cfg, mesh, algorithm=algorithm, num_local_steps=num_local_steps,
                 sharding_variant=sharding_variant,
@@ -294,6 +326,14 @@ def main() -> None:
                          "async additionally lowers + censuses the "
                          "packed-payload all-gather of the phase-"
                          "dispatched runtime (tag __async)")
+    from ..sim.scenarios import SCENARIOS
+
+    ap.add_argument("--population", default=None,
+                    choices=sorted(SCENARIOS),
+                    help="client-population scenario (repro.sim); any "
+                         "non-stable preset lowers the membership-aware "
+                         "elastic round — tracker table, per-agent step "
+                         "budgets, re-normalized weights (tag __pop<name>)")
     ap.add_argument("--variant", default="baseline",
                     choices=["baseline", "megatron"])
     ap.add_argument("--no-seq-parallel", action="store_true")
@@ -342,6 +382,8 @@ def main() -> None:
                 tag += "__wire"
             if args.runtime != "sync":
                 tag += f"__{args.runtime}"
+            if args.population and args.population != "stable":
+                tag += f"__pop{args.population}"
             if args.variant != "baseline":
                 tag += f"__{args.variant}"
             if args.no_seq_parallel:
@@ -372,6 +414,7 @@ def main() -> None:
                     quantization_bits=args.quantization_bits,
                     wire_transport=args.wire_transport,
                     runtime=args.runtime,
+                    population=args.population,
                 )
                 with open(path, "w") as f:
                     json.dump(rec, f, indent=1)

@@ -174,6 +174,111 @@ def build_train_step(
     return jitted, specs_fn
 
 
+def build_elastic_train_step(
+    cfg: ModelConfig,
+    mesh,
+    *,
+    algorithm="fedgda_gt",
+    num_local_steps: int = 4,
+    eta: float = 1e-3,
+    delta_radius: float = 1.0,
+    dtype=jnp.bfloat16,
+    remat: bool = True,
+    sequence_parallel: bool = True,
+    sharding_variant: str = "baseline",
+    h_shard: Optional[str] = None,
+    q_block: Optional[int] = None,
+) -> Tuple[Callable, Callable]:
+    """The membership-aware elastic round (`repro.sim.make_elastic_round`)
+    as one SPMD program: `build_train_step`'s signature plus the
+    schedule inputs — tracker table (per-agent anchor gradients, agent
+    axis over the fed axes like the batch), weights / budgets / active
+    (tiny [m] vectors, replicated).  This is what a `--population`
+    dry-run lowers: the collective schedule of a round that must gate
+    local steps and re-normalize the aggregate per membership."""
+    import dataclasses as _dc
+
+    from ..sim.elastic import make_elastic_round
+
+    if q_block:
+        cfg = _dc.replace(cfg, q_block=q_block)
+    if h_shard is None:
+        h_shard = "seq" if sequence_parallel else "none"
+    inner = "data" if cfg.fed_mode == "B" else None
+    h_sh = None
+    if h_shard == "seq":
+        h_sh = NamedSharding(mesh, P(inner, "model", None))
+    elif h_shard == "batch":
+        h_sh = NamedSharding(mesh, P("model", None, None))
+    loss = make_adversarial_loss(cfg, remat=remat, h_sharding=h_sh)
+    proj_y = delta_projection(delta_radius)
+    constrain = make_agent_constraint(cfg, mesh, None, sharding_variant)
+    strategy = _resolve_cfg_strategy(cfg, algorithm)
+    rnd = make_elastic_round(
+        loss,
+        strategy,
+        num_local_steps,
+        eta,
+        proj_y=proj_y,
+        constrain_agents=constrain,
+    )
+
+    m = num_agents(mesh, cfg.fed_mode)
+    fa = fed_axes(mesh, cfg.fed_mode)
+    x_sh = param_shardings(abstract_params(cfg, dtype), cfg, mesh, sharding_variant)
+    y_sh = jax.tree.map(lambda _: replicated(mesh), delta_struct(cfg, dtype))
+    bsh = train_batch_shardings(cfg, mesh)
+    batch_sh_fn = lambda tree: jax.tree.map(lambda s: bsh(len(s.shape)), tree)
+    agent_sh = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(
+            mesh, P(fa if fa else None, *([None] * (len(s.shape) - 1)))
+        ),
+        tree,
+    )
+
+    def specs_fn(shape: ShapeConfig, dt=dtype):
+        sp = train_input_specs(cfg, shape, mesh, dt)
+        sp["state"] = jax.eval_shape(
+            lambda xx, yy: strategy.init_state(xx, yy, m), sp["x"], sp["y"]
+        )
+        agent_stack = lambda t: jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((m,) + s.shape, s.dtype), t
+        )
+        sp["tracker"] = (
+            {"gx": agent_stack(sp["x"]), "gy": agent_stack(sp["y"])}
+            if getattr(strategy, "use_correction", False)
+            else {}
+        )
+        sp["weights"] = jax.ShapeDtypeStruct((m,), jnp.float32)
+        sp["budgets"] = jax.ShapeDtypeStruct((m,), jnp.int32)
+        sp["active"] = jax.ShapeDtypeStruct((m,), jnp.bool_)
+        sp["prev_active"] = jax.ShapeDtypeStruct((m,), jnp.bool_)
+        return sp
+
+    def jitted(shape: ShapeConfig):
+        sp = specs_fn(shape)
+        st_sh = jax.tree.map(lambda _: replicated(mesh), sp["state"])
+        rep = replicated(mesh)
+        return jax.jit(
+            rnd,
+            in_shardings=(
+                x_sh,
+                y_sh,
+                batch_sh_fn(sp["batch"]),
+                st_sh,
+                agent_sh(sp["tracker"]),
+                rep,
+                rep,
+                rep,
+                rep,
+            ),
+            out_shardings=(x_sh, y_sh, st_sh, agent_sh(sp["tracker"])),
+            donate_argnums=(0,),
+        )
+
+    return jitted, specs_fn
+
+
 def build_gather_decode_train_step(
     cfg: ModelConfig,
     mesh,

@@ -72,6 +72,22 @@ def main() -> None:
                     help="sync: one fused round program per step; "
                          "async: per-agent-shard phase dispatch "
                          "(fed.async_runtime) across the local devices")
+    from ..sim.scenarios import SCENARIOS
+
+    ap.add_argument("--population", default=None,
+                    choices=sorted(SCENARIOS),
+                    help="client-population scenario (repro.sim): agents "
+                         "join/leave/lag per a seeded RoundSchedule; the "
+                         "runners execute the membership-aware elastic "
+                         "round (stable = the legacy full-participation "
+                         "path, bitwise)")
+    ap.add_argument("--population-seed", type=int, default=0,
+                    help="seed of the availability stream (a dedicated "
+                         "fold — independent of model/data RNG)")
+    ap.add_argument("--no-rebase", action="store_true",
+                    help="ablation: naive membership handling (1/m "
+                         "weights over the full registry, stale EF "
+                         "residuals) — expected to stall under churn")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
@@ -115,6 +131,21 @@ def main() -> None:
 
     gl = jax.jit(global_loss)
 
+    schedule = None
+    rebase = not args.no_rebase
+    if args.population:
+        from ..sim import make_population
+
+        pop = make_population(args.population, args.agents)
+        schedule = pop.schedule(
+            args.population_seed, args.rounds, args.local_steps
+        )
+        print(
+            f"population={args.population} seed={args.population_seed} "
+            f"participation={schedule.participation_rate():.2f} "
+            f"churn_events={schedule.churn_events()} rebase={rebase}"
+        )
+
     if args.runtime == "async":
         from ..fed import AsyncFederatedRunner
 
@@ -127,12 +158,35 @@ def main() -> None:
             },
         )
         params, delta = runner.run(
-            params, delta, args.rounds, log_every=args.log_every
+            params, delta, args.rounds, log_every=args.log_every,
+            schedule=schedule, rebase=rebase,
         )
         if args.ckpt_dir:
             save_checkpoint(
                 args.ckpt_dir, args.rounds, {"x": params, "y": delta}
             )
+        print("done.")
+        return
+
+    if schedule is not None:
+        # elastic sync run: the runner owns the schedule threading
+        # (membership-aware round, tracker table, rebase hook)
+        from ..fed import FederatedRunner
+
+        runner = FederatedRunner.from_strategy(
+            loss, strategy, data, args.local_steps, args.eta,
+            proj_y=delta_projection(1.0),
+            metric_fn=lambda x, y: {
+                "loss": global_loss(x, y),
+                "delta_norm": jnp.linalg.norm(y["delta"]),
+            },
+            checkpoint_dir=args.ckpt_dir,
+            checkpoint_every=50 if args.ckpt_dir else 0,
+        )
+        params, delta = runner.run(
+            params, delta, args.rounds, log_every=args.log_every,
+            schedule=schedule, rebase=rebase,
+        )
         print("done.")
         return
 

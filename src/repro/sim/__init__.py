@@ -1,0 +1,74 @@
+"""Client-population simulation: churn, stragglers, elastic rounds.
+
+The paper's FedGDA-GT assumes all m agents participate synchronously in
+every round; this package owns what production does not guarantee —
+agents that join, leave and lag — as a deterministic, seedable
+subsystem:
+
+  population  availability processes (Bernoulli dropout, Markov churn,
+              diurnal waves, fixed-size sampling) + straggler models +
+              the `Population` registry
+  schedule    `RoundSchedule`: materialized per-round active sets and
+              local-step budgets, from a DEDICATED fold of the run seed
+              (sync and async runtimes consume identical membership)
+  elastic     `ElasticAggregator` (re-normalized weights, tracker/EF
+              rebase) and `make_elastic_round` (the membership-aware
+              round over the engine's phases)
+  scenarios   named presets: stable / flaky / diurnal / straggler_heavy
+"""
+from .elastic import (
+    ElasticAggregator,
+    init_tracker,
+    make_elastic_round,
+    schedule_bytes,
+    tracker_exchange,
+)
+from .population import (
+    AlwaysOn,
+    AvailabilityProcess,
+    BernoulliAvailability,
+    DeterministicLag,
+    DiurnalAvailability,
+    FixedSizeSampling,
+    MarkovChurn,
+    NoStragglers,
+    Population,
+    StragglerModel,
+    UniformStragglers,
+    fixed_size_mask,
+    renormalized_weights,
+)
+from .scenarios import SCENARIOS, make_population
+from .schedule import (
+    AVAILABILITY_STREAM,
+    RoundEvent,
+    RoundSchedule,
+    availability_key,
+)
+
+__all__ = [
+    "AVAILABILITY_STREAM",
+    "AlwaysOn",
+    "AvailabilityProcess",
+    "BernoulliAvailability",
+    "DeterministicLag",
+    "DiurnalAvailability",
+    "ElasticAggregator",
+    "FixedSizeSampling",
+    "MarkovChurn",
+    "NoStragglers",
+    "Population",
+    "RoundEvent",
+    "RoundSchedule",
+    "SCENARIOS",
+    "StragglerModel",
+    "UniformStragglers",
+    "availability_key",
+    "fixed_size_mask",
+    "init_tracker",
+    "make_elastic_round",
+    "make_population",
+    "renormalized_weights",
+    "schedule_bytes",
+    "tracker_exchange",
+]

@@ -1,0 +1,266 @@
+"""Membership-aware aggregation + gradient-tracking rebase.
+
+The round engine proves its guarantees for a fixed population; this
+module owns what changes when the population is elastic:
+
+**Weights.**  A naive server keeps averaging with 1/m over the full
+registry; on a round where only a subset A participates, the aggregate
+sum_{i in A} x_i / m silently loses (m - |A|)/m of the iterate's mass
+and the run collapses toward the origin instead of the minimax point.
+`ElasticAggregator.weights` re-normalizes over the active set (sum = 1
+for ANY nonempty A); the `rebase=False` ablation keeps the naive 1/m
+weighting so the failure is reproducible on demand
+(tests/test_elastic.py, benchmarks/elastic.py).
+
+**Trackers.**  Gradient-tracking corrections c_i = gbar - g_i only
+cancel drift if gbar tracks the FULL population's gradient.  Under
+churn the server cannot evaluate absent agents, so the elastic round
+keeps a per-agent tracker table of each agent's last exchanged anchor
+gradient: active agents re-anchor their entry at the CURRENT server
+iterate every round (a rejoining agent therefore re-anchors within one
+round of returning — never steps on stale state), absent agents stand
+in with their last entry, and gbar is the full-table mean.  The GT
+invariant — the (uniform) corrections summing to the tracked global
+gradient gap, sum_i c_i / m = gbar - mean_i(table_i) = 0 — holds by
+construction every round, and because the table's staleness is
+proportional to past iterate movement, FedGDA-GT keeps its EXACT limit
+under persistent churn (the noise is multiplicative in the gradient,
+not additive).  With `rebase=False` the stale-state failure mode is the
+naive weighting above plus never re-anchored error-feedback residuals.
+
+**Error feedback.**  Compressing strategies carry per-agent EF
+residual buffers; a departed agent's residual describes corrections it
+never applied.  `ElasticAggregator.rebase_state` defers to the
+strategy's `rebase_state` hook (`fed.strategies`), which zeroes the
+rows of agents that did not participate in the previous round — their
+wire bytes disappear from the round's accounting too
+(`schedule_bytes`).
+
+`make_elastic_round` composes the engine's phases
+(`repro.core.engine.make_phases`) with the tracker-table exchange into
+one jittable round:
+
+    round(x, y, agent_data, state, tracker, weights, budgets, active)
+        -> (x1, y1, state, tracker)
+
+Both runtimes (`fed.runtime.FederatedRunner`,
+`fed.async_runtime.AsyncFederatedRunner`) consume it through the same
+`RoundSchedule`, so sync and async see identical membership.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.engine import (
+    RoundPhases,
+    agent_mean,
+    agent_where,
+    make_phases,
+    tracking_corrections,
+)
+from ..core.types import LossFn, Pytree, grad_xy, identity_proj
+from .population import renormalized_weights
+
+
+def init_tracker(
+    loss: LossFn, strategy, x: Pytree, y: Pytree, agent_data: Pytree
+) -> dict:
+    """The tracker table at round 0: every agent's anchor gradient at
+    the initial server iterate (x0, y0) — i.e. every agent starts
+    freshly re-anchored, exactly like a joiner does later.  Strategies
+    without corrections carry no table ({})."""
+    if not getattr(strategy, "use_correction", False):
+        return {}
+    g = jax.vmap(grad_xy(loss), in_axes=(None, None, 0))(x, y, agent_data)
+    return {"gx": g.gx, "gy": g.gy}
+
+
+def tracker_exchange(strategy, gx, gy, state, active, tab_x, tab_y, cdt=None,
+                     prev_active=None):
+    """The membership-aware exchange — ONE owner of the GT-invariant
+    math, shared by the fused elastic round below and the async
+    runner's server-side exchange program: active agents re-anchor
+    their tracker row with their fresh anchor gradient, absent agents
+    stand in with their last row, gbar is the full-table mean (so the
+    uniform corrections sum to the tracked global gradient gap by
+    construction), then the strategy's transform + wire decode run
+    exactly as on the all-present path.
+
+    `prev_active` non-None additionally re-anchors the strategy's
+    membership-dependent state (EF residual rows) via its
+    `rebase_state` hook BEFORE the transform — inside the jitted round,
+    so the masked selects fuse with the state's first use instead of
+    materializing fresh full-size buffers eagerly each round.  None is
+    the naive no-rebase ablation (stale residuals).
+
+    Returns (cx, cy, gbar_x, gbar_y, state, tab_x, tab_y)."""
+    if prev_active is not None:
+        hook = getattr(strategy, "rebase_state", None)
+        if hook is not None and state:
+            state = hook(state, active, prev_active)
+    tab_x = agent_where(active, gx, tab_x)
+    tab_y = agent_where(active, gy, tab_y)
+    gbar_x = agent_mean(tab_x, None)
+    gbar_y = agent_mean(tab_y, None)
+    cx, cy = tracking_corrections(tab_x, tab_y, gbar_x, gbar_y, cdt)
+    cx, cy, state = strategy.transform_correction(cx, cy, state)
+    if hasattr(cx, "decode"):
+        cx = cx.decode()
+    if hasattr(cy, "decode"):
+        cy = cy.decode()
+    return cx, cy, gbar_x, gbar_y, state, tab_x, tab_y
+
+
+@dataclasses.dataclass
+class ElasticAggregator:
+    """Membership-aware server policy for one run (see module docstring).
+
+    rebase=True   re-normalized weights + tracker/EF re-anchoring —
+                  the membership-aware path.
+    rebase=False  the naive-server ablation: 1/m weights over the full
+                  registry and stale EF residuals.  Exists so the
+                  failure mode stays a tracked benchmark row, not lore.
+    """
+
+    strategy: Any
+    rebase: bool = True
+
+    def weights(self, active) -> jax.Array:
+        active = jnp.asarray(active)
+        if self.rebase:
+            return renormalized_weights(active)
+        m = active.shape[0]
+        return active.astype(jnp.result_type(float)) / m
+
+    def rebase_state(self, state, active, prev_active=None):
+        """Re-anchor the strategy's membership-dependent state (EF
+        residual rows) for this round's active set.  The runners fold
+        this into the jitted round via `tracker_exchange(...,
+        prev_active=...)`; this eager form remains for callers (and
+        tests) working with a bare state dict."""
+        if not self.rebase or not state:
+            return state
+        hook = getattr(self.strategy, "rebase_state", None)
+        if hook is None:
+            return state
+        return hook(state, jnp.asarray(active), prev_active)
+
+    def round_prev_active(self, active, prev_active):
+        """What to feed `tracker_exchange`'s rebase: None when rebasing
+        is off (the naive ablation), the previous round's active set
+        when continuing, and all-present for the very first round
+        (fresh EF buffers are zero, so `keep = active & ones` matches
+        the from-scratch semantics)."""
+        if not self.rebase:
+            return None
+        if prev_active is not None:
+            return prev_active
+        return jnp.ones(jnp.asarray(active).shape, bool)
+
+
+def make_elastic_round(
+    loss: LossFn,
+    strategy,
+    num_local_steps: int,
+    eta_x: float,
+    eta_y: Optional[float] = None,
+    *,
+    proj_x: Callable = identity_proj,
+    proj_y: Callable = identity_proj,
+    update_fn: Optional[Callable] = None,
+    constrain_agents: Optional[Callable] = None,
+) -> Callable:
+    """Build the membership-aware round for `strategy`:
+
+        round(x, y, agent_data, state, tracker, weights, budgets,
+              active, prev_active) -> (x1, y1, state, tracker)
+
+    `weights` come from `ElasticAggregator.weights(active)`, `budgets`
+    and `active` from the `RoundSchedule`, `prev_active` from
+    `ElasticAggregator.round_prev_active` (None = the naive no-rebase
+    ablation; otherwise EF residual rows of non-continuing agents are
+    re-anchored inside this jitted round); `tracker` is the per-agent
+    anchor-gradient table (`init_tracker`; {} for strategies without
+    corrections).  The phases are the engine's own — only the exchange
+    differs, swapping the all-present anchor exchange for the tracker
+    table refresh (strategies without corrections, FullSync included,
+    skip it: membership enters purely through weights and budgets)."""
+    phase_kwargs = {} if update_fn is None else {"update_fn": update_fn}
+    phases: RoundPhases = make_phases(
+        loss,
+        strategy,
+        num_local_steps,
+        eta_x,
+        eta_y,
+        proj_x=proj_x,
+        proj_y=proj_y,
+        constrain_agents=constrain_agents,
+        **phase_kwargs,
+    )
+    use_corr = bool(getattr(strategy, "use_correction", False))
+    cdt = getattr(strategy, "correction_dtype", None)
+    vgrad = jax.vmap(grad_xy(loss), in_axes=(0, 0, 0))
+
+    def elastic_round(x, y, agent_data, state, tracker, weights, budgets,
+                      active, prev_active):
+        rs = phases.broadcast(
+            x, y, agent_data, state,
+            weights=weights, step_budgets=budgets, active=active,
+        )
+        if use_corr:
+            # the anchor gradients at the CURRENT broadcast iterate feed
+            # the shared membership-aware exchange (`tracker_exchange`)
+            g = vgrad(rs.xs, rs.ys, agent_data)
+            (
+                cx, cy, gbar_x, gbar_y, state, tab_x, tab_y
+            ) = tracker_exchange(
+                strategy, g.gx, g.gy, rs.state, active,
+                tracker["gx"], tracker["gy"], cdt, prev_active,
+            )
+            rs = dataclasses.replace(
+                rs, cx=cx, cy=cy, gbar_x=gbar_x, gbar_y=gbar_y,
+                fused=bool(strategy.exact_correction), state=state,
+                active=active,
+            )
+            tracker = {"gx": tab_x, "gy": tab_y}
+        rs = phases.local_steps(rs, agent_data)
+        x1, y1, state = phases.aggregate(rs)
+        return x1, y1, state, tracker
+
+    return elastic_round
+
+
+def schedule_bytes(
+    strategy,
+    x: Pytree,
+    y: Pytree,
+    num_local_steps: int,
+    schedule,
+    *,
+    measured: bool = True,
+) -> list:
+    """Per-round TOTAL wire bytes of a run under `schedule`: the
+    per-agent payload (measured packed buffers by default, the analytic
+    price with measured=False) times the number of ACTIVE agents that
+    round — departed agents move no bytes, so their payload leaves the
+    account the round they leave.
+
+    Under a schedule the strategy's OWN client sampling is bypassed
+    (membership comes from the schedule), so a participation-discounted
+    price (`PartialParticipation.bytes_per_round` scales by the expected
+    sampled fraction) would double-discount: every active agent moves
+    the full payload.  The price is therefore taken at participation=1."""
+    from ..fed.transport import measured_bytes_per_round
+
+    if getattr(strategy, "participation", 1.0) < 1.0:
+        strategy = dataclasses.replace(strategy, participation=1.0)
+    per_agent = (
+        measured_bytes_per_round(strategy, x, y, num_local_steps)
+        if measured
+        else int(strategy.bytes_per_round(x, y, num_local_steps))
+    )
+    return [per_agent * int(a.sum()) for a in schedule.active]

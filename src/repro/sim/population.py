@@ -1,0 +1,235 @@
+"""Client-population model: who is available each round, and how slow.
+
+The paper's Algorithm 2 assumes all m agents participate synchronously in
+every round.  The production north star does not: agents join, leave and
+lag between rounds (elastic per-pod placement — ROADMAP).  This module
+owns the POPULATION side of that story as data:
+
+  * `AvailabilityProcess` — a deterministic, seedable process emitting a
+    [num_rounds, m] boolean availability matrix: `AlwaysOn` (the paper's
+    setting), `BernoulliAvailability` (i.i.d. dropout), `MarkovChurn`
+    (per-agent join/leave chain — correlated absences, the hard case for
+    tracking state), `DiurnalAvailability` (time-of-day participation
+    waves) and `FixedSizeSampling` (exactly-S uniform subsets — the draw
+    `fed.strategies.PartialParticipation` delegates to, so there is ONE
+    owner of active-set sampling logic);
+  * `StragglerModel` — per-agent-round local-step budgets capping how
+    many of the K local steps a slow agent completes before the server
+    aggregates: `NoStragglers`, `UniformStragglers` (random slowdowns),
+    `DeterministicLag` (a fixed slow cohort);
+  * `Population` — the registry combining m, an availability process and
+    a straggler model, with a `min_active` floor guaranteeing the server
+    never faces an empty round.  `Population.schedule(...)` materializes
+    a `repro.sim.schedule.RoundSchedule`.
+
+Everything here is pure data + jax PRNG: the same (population, seed)
+pair yields the identical schedule on every runtime (the sync
+`FederatedRunner`, the per-shard `AsyncFederatedRunner`, a benchmark
+process), which is what makes churn a reproducible benchmark axis
+instead of an accident of the run.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------- shared samplers
+# one owner for both, in the core layer (below repro.fed AND repro.sim):
+# `fixed_size_mask` is the draw PartialParticipation and FixedSizeSampling
+# share; `renormalized_weights` is the membership-aware server weighting
+from ..core.engine import fixed_size_mask, renormalized_weights  # noqa: F401,E402
+
+
+def _round_keys(key: jax.Array, num_rounds: int) -> jax.Array:
+    """One independent key per round, by fold — stable under changes to
+    how many draws any single round consumes."""
+    return jax.vmap(lambda t: jax.random.fold_in(key, t))(
+        jnp.arange(num_rounds)
+    )
+
+
+# ------------------------------------------------------ availability processes
+class AvailabilityProcess:
+    """Base: emit the [num_rounds, m] availability matrix for one run."""
+
+    def sample(self, key: jax.Array, m: int, num_rounds: int) -> jax.Array:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class AlwaysOn(AvailabilityProcess):
+    """Full synchronous participation — the paper's Assumption setting.
+    The degenerate process: a schedule built from it is detected as
+    static-full and the runners take their bitwise-pinned legacy path."""
+
+    def sample(self, key, m, num_rounds):
+        del key
+        return jnp.ones((num_rounds, m), bool)
+
+
+@dataclasses.dataclass(frozen=True)
+class BernoulliAvailability(AvailabilityProcess):
+    """i.i.d. per-agent-round dropout: active with probability `p`.
+    Memoryless — the textbook partial-participation model (SAGDA, Sharma
+    et al. 2022 analyze exactly this regime)."""
+
+    p: float = 0.9
+
+    def sample(self, key, m, num_rounds):
+        return jax.random.bernoulli(key, self.p, (num_rounds, m))
+
+
+@dataclasses.dataclass(frozen=True)
+class MarkovChurn(AvailabilityProcess):
+    """Per-agent two-state join/leave chain: an active agent leaves with
+    `p_leave`, an inactive one (re)joins with `p_join`.  Absences are
+    CORRELATED across rounds (an agent that left stays gone for
+    ~1/p_join rounds), which is what makes naive tracking state stale —
+    the case the elastic aggregator's rebase exists for.  Stationary
+    active fraction: p_join / (p_join + p_leave)."""
+
+    p_leave: float = 0.2
+    p_join: float = 0.6
+    start_active: float = 1.0
+
+    def sample(self, key, m, num_rounds):
+        k0, kt = jax.random.split(key)
+        s0 = jax.random.bernoulli(k0, self.start_active, (m,))
+
+        def step(s, rk):
+            u = jax.random.uniform(rk, (m,))
+            s1 = jnp.where(s, u >= self.p_leave, u < self.p_join)
+            return s1, s1
+
+        _, trace = jax.lax.scan(step, s0, _round_keys(kt, num_rounds))
+        return trace
+
+
+@dataclasses.dataclass(frozen=True)
+class DiurnalAvailability(AvailabilityProcess):
+    """Participation probability oscillating between `low` and `high`
+    with `period` rounds per cycle (time-of-day waves over a fleet):
+    p_t = low + (high-low) * (1 + cos(2 pi t / period + phase)) / 2."""
+
+    period: int = 100
+    low: float = 0.3
+    high: float = 1.0
+    phase: float = 0.0
+
+    def sample(self, key, m, num_rounds):
+        t = jnp.arange(num_rounds)
+        p = self.low + (self.high - self.low) * 0.5 * (
+            1.0 + jnp.cos(2.0 * jnp.pi * t / self.period + self.phase)
+        )
+        u = jax.random.uniform(key, (num_rounds, m))
+        return u < p[:, None]
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedSizeSampling(AvailabilityProcess):
+    """Exactly S = max(1, round(participation * m)) uniformly sampled
+    agents per round — `PartialParticipation`'s draw expressed as a
+    degenerate population process (i.i.d. across rounds, no churn
+    memory).  Both call `fixed_size_mask`, so the active-set logic has
+    one owner."""
+
+    participation: float = 0.5
+
+    def subset_size(self, m: int) -> int:
+        return max(1, int(round(self.participation * m)))
+
+    def sample(self, key, m, num_rounds):
+        size = self.subset_size(m)
+        if size >= m:
+            return jnp.ones((num_rounds, m), bool)
+        return jax.vmap(lambda rk: fixed_size_mask(rk, m, size))(
+            _round_keys(key, num_rounds)
+        )
+
+
+# ----------------------------------------------------------- straggler models
+class StragglerModel:
+    """Base: per-agent-round local-step budgets in [0, K].  The schedule
+    builder zeroes budgets of inactive agents and floors active agents
+    at 1 step, so models only decide how SLOW an active agent is."""
+
+    def budgets(self, key: jax.Array, active: jax.Array, num_local_steps: int):
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class NoStragglers(StragglerModel):
+    """Every active agent completes all K local steps."""
+
+    def budgets(self, key, active, num_local_steps):
+        del key
+        return jnp.full(active.shape, num_local_steps, jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformStragglers(StragglerModel):
+    """With probability `p_straggle` an agent-round is slow and completes
+    a uniform number of steps in [ceil(min_frac * K), K]; otherwise all
+    K."""
+
+    p_straggle: float = 0.5
+    min_frac: float = 0.25
+
+    def budgets(self, key, active, num_local_steps):
+        k_sel, k_cnt = jax.random.split(key)
+        lo = max(1, int(-(-self.min_frac * num_local_steps // 1)))
+        slow = jax.random.bernoulli(k_sel, self.p_straggle, active.shape)
+        b = jax.random.randint(
+            k_cnt, active.shape, lo, num_local_steps + 1, jnp.int32
+        )
+        return jnp.where(slow, b, num_local_steps).astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeterministicLag(StragglerModel):
+    """A fixed slow cohort: every `slow_every`-th agent completes only
+    ceil(budget_frac * K) steps, every round.  Deterministic — for tests
+    that need to know exactly who lagged."""
+
+    slow_every: int = 4
+    budget_frac: float = 0.25
+
+    def budgets(self, key, active, num_local_steps):
+        del key
+        m = active.shape[-1]
+        slow = (jnp.arange(m) % self.slow_every) == 0
+        b = max(1, int(-(-self.budget_frac * num_local_steps // 1)))
+        return jnp.where(slow[None, :], b, num_local_steps).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------- population
+@dataclasses.dataclass(frozen=True)
+class Population:
+    """The client registry: m agents, an availability process and a
+    straggler model.  `min_active` is the server's liveness floor — a
+    round the process left empty gets that many agents force-activated
+    (deterministically from the schedule's own key stream), so the
+    aggregate is always over a nonempty set."""
+
+    m: int
+    availability: AvailabilityProcess = AlwaysOn()
+    stragglers: StragglerModel = NoStragglers()
+    min_active: int = 1
+
+    def __post_init__(self):
+        if self.m < 1:
+            raise ValueError(f"population needs m >= 1, got {self.m}")
+        if not 1 <= self.min_active <= self.m:
+            raise ValueError(
+                f"min_active must be in [1, m={self.m}], got {self.min_active}"
+            )
+
+    def schedule(self, seed: int, num_rounds: int, num_local_steps: int):
+        """Materialize the per-round active sets + step budgets for one
+        run (see `repro.sim.schedule.RoundSchedule`)."""
+        from .schedule import RoundSchedule
+
+        return RoundSchedule.build(self, seed, num_rounds, num_local_steps)

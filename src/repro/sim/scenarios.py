@@ -1,0 +1,64 @@
+"""Named population scenarios — the benchmark/launch axis for churn.
+
+Each scenario is a `Population` factory keyed by name, so launch
+drivers (`repro.launch.train --population`, `repro.launch.dryrun
+--population`), `benchmarks/elastic.py` and tests all mean the same
+thing by "flaky":
+
+  stable           all m agents, every round, full K budgets — the
+                   paper's synchronous setting.  Degenerate by
+                   construction: its schedule is static-full, so the
+                   runners take their bitwise-pinned legacy path.
+  flaky            Markov join/leave churn (correlated multi-round
+                   absences, ~3/4 of agents present in stationarity).
+                   The headline elastic case: FedGDA-GT with tracker
+                   rebasing keeps its exact limit here; the naive
+                   no-rebase server stalls (benchmarks/elastic.py).
+  diurnal          participation waves between ~40% and 100% with a
+                   50-round period — fleet-wide time-of-day rhythms.
+  straggler_heavy  nearly everyone shows up (5% dropout) but 60% of
+                   agent-rounds are stragglers completing a uniform
+                   1/4..all of their K local steps.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from .population import (
+    AlwaysOn,
+    BernoulliAvailability,
+    DiurnalAvailability,
+    MarkovChurn,
+    NoStragglers,
+    Population,
+    UniformStragglers,
+)
+
+SCENARIOS: Dict[str, Callable[[int], Population]] = {
+    "stable": lambda m: Population(m, AlwaysOn(), NoStragglers()),
+    "flaky": lambda m: Population(
+        m, MarkovChurn(p_leave=0.2, p_join=0.6), NoStragglers()
+    ),
+    "diurnal": lambda m: Population(
+        m,
+        DiurnalAvailability(period=50, low=0.4, high=1.0),
+        NoStragglers(),
+    ),
+    "straggler_heavy": lambda m: Population(
+        m,
+        BernoulliAvailability(p=0.95),
+        UniformStragglers(p_straggle=0.6, min_frac=0.25),
+    ),
+}
+
+
+def make_population(name: str, m: int) -> Population:
+    """Resolve a scenario name to a Population of m agents."""
+    try:
+        factory = SCENARIOS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown population scenario {name!r}; "
+            f"known: {sorted(SCENARIOS)}"
+        ) from None
+    return factory(m)

@@ -1,0 +1,229 @@
+"""RoundSchedule: the materialized per-round (active set, step budgets).
+
+A schedule is built ONCE from (population, seed, num_rounds, K) and then
+consumed by whichever runtime executes the run — the sync
+`fed.runtime.FederatedRunner`, the per-shard
+`fed.async_runtime.AsyncFederatedRunner`, or a benchmark loop.  Because
+the availability RNG stream is a DEDICATED fold of the run seed
+(`availability_key`), the schedule depends only on the population config
+and the seed: it cannot drift when some other consumer of the run seed
+(model init, data synthesis, a strategy's rounding RNG) changes how many
+draws it takes, and sync and async runtimes consume bit-identical active
+sets for the same config (tests/test_population.py pins this).
+
+The arrays are materialized host-side (numpy) — populations are small
+(m agents, not parameters), and host arrays let the runners make cheap
+per-round control-flow decisions (skip fully-inactive shards, take the
+bitwise-pinned full-participation path) without device round-trips.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: the dedicated fold of the run seed that the availability stream hangs
+#: off.  Any fixed odd constant works; sharing the raw seed with other
+#: consumers is the bug this prevents.
+AVAILABILITY_STREAM = 0x5E_D0_AC  # "seed-0-active"
+
+
+def availability_key(seed: int) -> jax.Array:
+    """The availability PRNG stream for a run: a dedicated fold of the
+    run seed, so schedules are a pure function of (population, seed)."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), AVAILABILITY_STREAM)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundEvent:
+    """One round's membership facts, as the runners consume them."""
+
+    index: int
+    active: np.ndarray    # [m] bool — who participates this round
+    budgets: np.ndarray   # [m] int32 — local-step cap (0 where inactive)
+    joined: np.ndarray    # [m] bool — newly active vs the previous round
+    departed: np.ndarray  # [m] bool — newly absent vs the previous round
+    full: bool            # all active with their full K budget
+
+    @property
+    def num_active(self) -> int:
+        return int(self.active.sum())
+
+    @property
+    def churned(self) -> bool:
+        return bool(self.joined.any() or self.departed.any())
+
+
+class RoundSchedule:
+    """Iterator over `RoundEvent`s for one run (see module docstring).
+
+    `is_static_full` flags the degenerate all-on/no-straggler schedule:
+    runners given one take their unmodified legacy path, which is how
+    the full-participation population reproduces the existing runners
+    BITWISE (tests/test_elastic.py)."""
+
+    def __init__(
+        self,
+        active,
+        budgets,
+        num_local_steps: int,
+        seed: int = 0,
+        population=None,
+        prev_active=None,
+    ):
+        self.active = np.asarray(active, bool)
+        self.budgets = np.asarray(budgets, np.int32)
+        #: the active set of the round BEFORE this schedule's first —
+        #: None means a fresh start (all-present, the legacy baseline);
+        #: `tail()` propagates the true row so round 0 of a resumed
+        #: schedule reports joins/departures against what actually ran
+        self.prev_active = (
+            None if prev_active is None else np.asarray(prev_active, bool)
+        )
+        if self.active.shape != self.budgets.shape or self.active.ndim != 2:
+            raise ValueError(
+                f"active {self.active.shape} and budgets "
+                f"{self.budgets.shape} must both be [num_rounds, m]"
+            )
+        if (self.budgets[~self.active] != 0).any():
+            raise ValueError("inactive agents must have a zero step budget")
+        if (self.budgets[self.active] < 1).any():
+            raise ValueError("active agents need a budget of >= 1 steps")
+        empty = ~self.active.any(axis=1)
+        if empty.any():
+            # the weights' "sum to 1 for ANY nonempty active set" contract
+            # (and the async runner's shard dispatch) both assume this —
+            # an empty round would renormalize 0/0 into NaN iterates
+            raise ValueError(
+                f"rounds {np.nonzero(empty)[0].tolist()} have no active "
+                "agents; every round needs at least one (Population "
+                "enforces min_active when building schedules)"
+            )
+        self.num_local_steps = int(num_local_steps)
+        self.seed = int(seed)
+        self.population = population
+
+    @classmethod
+    def build(
+        cls, population, seed: int, num_rounds: int, num_local_steps: int
+    ) -> "RoundSchedule":
+        m = population.m
+        key = availability_key(seed)
+        k_avail, k_strag, k_force = jax.random.split(key, 3)
+        active = population.availability.sample(k_avail, m, num_rounds)
+        active = _force_min_active(active, population.min_active, k_force)
+        budgets = population.stragglers.budgets(
+            k_strag, active, num_local_steps
+        )
+        budgets = _clamp_budgets(active, budgets, num_local_steps)
+        return cls(
+            np.asarray(active),
+            np.asarray(budgets),
+            num_local_steps,
+            seed=seed,
+            population=population,
+        )
+
+    # ------------------------------------------------------------ access
+    @property
+    def num_rounds(self) -> int:
+        return self.active.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.active.shape[1]
+
+    @property
+    def is_static_full(self) -> bool:
+        return bool(
+            self.active.all() and (self.budgets == self.num_local_steps).all()
+        )
+
+    def __len__(self) -> int:
+        return self.num_rounds
+
+    def __getitem__(self, t: int) -> RoundEvent:
+        if not 0 <= t < self.num_rounds:
+            raise IndexError(t)
+        if t > 0:
+            prev = self.active[t - 1]
+        elif self.prev_active is not None:
+            prev = self.prev_active
+        else:
+            prev = np.ones((self.m,), bool)
+        a = self.active[t]
+        return RoundEvent(
+            index=t,
+            active=a,
+            budgets=self.budgets[t],
+            joined=a & ~prev,
+            departed=prev & ~a,
+            full=bool(a.all() and (self.budgets[t] == self.num_local_steps).all()),
+        )
+
+    def __iter__(self) -> Iterator[RoundEvent]:
+        return (self[t] for t in range(self.num_rounds))
+
+    def tail(self, start: int) -> "RoundSchedule":
+        """The remaining schedule from round `start` — for resuming a
+        checkpointed elastic run: pass `schedule.tail(t_ckpt)` together
+        with the checkpoint's `elastic_state`.  The slice carries the
+        true previous active row (`prev_active`), so round 0 of the
+        tail reports joins/departures against what actually ran, not
+        against an implicit all-present start."""
+        if not 0 <= start <= self.num_rounds:
+            raise IndexError(start)
+        return RoundSchedule(
+            self.active[start:],
+            self.budgets[start:],
+            self.num_local_steps,
+            seed=self.seed,
+            population=self.population,
+            prev_active=(
+                self.active[start - 1] if start > 0 else self.prev_active
+            ),
+        )
+
+    # --------------------------------------------------------- diagnostics
+    def trace(self) -> dict:
+        """The full membership record, for regression tests and
+        benchmark provenance: identical configs must yield identical
+        traces whatever runtime consumes them."""
+        return {
+            "active": self.active.copy(),
+            "budgets": self.budgets.copy(),
+            "seed": self.seed,
+            "num_local_steps": self.num_local_steps,
+        }
+
+    def participation_rate(self) -> float:
+        return float(self.active.mean())
+
+    def churn_events(self) -> int:
+        """Rounds whose active set differs from the previous round's."""
+        return int(
+            (self.active[1:] != self.active[:-1]).any(axis=1).sum()
+        )
+
+
+def _force_min_active(active, min_active: int, key):
+    """Guarantee >= min_active agents per round: deficient rounds get the
+    top-priority agents (a per-round uniform draw from the schedule's
+    own key stream) force-activated.  Rounds already at the floor are
+    untouched, so the common case stays exactly what the process drew."""
+    T, m = active.shape
+    deficit = active.sum(axis=1) < min_active
+    pri = jax.random.uniform(key, (T, m))
+    rank = jnp.argsort(jnp.argsort(-pri, axis=1), axis=1)
+    forced = rank < min_active
+    return jnp.where(deficit[:, None], active | forced, active)
+
+
+def _clamp_budgets(active, budgets, num_local_steps: int):
+    """Clamp budgets to the membership contract: 0 where inactive, in
+    [1, K] where active."""
+    b = jnp.clip(budgets, 1, num_local_steps)
+    return jnp.where(active, b, 0).astype(jnp.int32)

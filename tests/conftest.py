@@ -40,6 +40,11 @@ def pytest_configure(config):
         "multihost: async-runtime / multi-host suites needing the "
         "8-device CPU emulation; select with -m multihost",
     )
+    config.addinivalue_line(
+        "markers",
+        "sim: client-population / elastic-schedule suites (repro.sim); "
+        "select with -m sim",
+    )
 
 
 @pytest.fixture(scope="session")

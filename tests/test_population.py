@@ -1,0 +1,278 @@
+"""Population processes + RoundSchedule: determinism, seed-fold
+isolation, membership contracts, and the PartialParticipation dedup.
+
+The load-bearing facts pinned here:
+  * schedules are a pure function of (population config, seed) — two
+    builds, or builds on different "runtimes", yield identical traces
+    (so sync and async consume bit-identical membership);
+  * the availability stream is a DEDICATED fold of the run seed: other
+    consumers of PRNGKey(seed) cannot perturb it;
+  * the membership contract: budgets are 0 iff inactive, in [1, K] when
+    active, and at least `min_active` agents survive every round;
+  * `PartialParticipation.sample_weights` delegating its draw to
+    `sim.population.fixed_size_mask` stays BITWISE identical to the
+    historical inline implementation;
+  * re-normalized weights over ANY nonempty active set sum to 1.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fed import PartialParticipation
+from repro.sim import (
+    AlwaysOn,
+    BernoulliAvailability,
+    DeterministicLag,
+    DiurnalAvailability,
+    ElasticAggregator,
+    FixedSizeSampling,
+    MarkovChurn,
+    NoStragglers,
+    Population,
+    RoundSchedule,
+    UniformStragglers,
+    availability_key,
+    fixed_size_mask,
+    make_population,
+    renormalized_weights,
+)
+
+pytestmark = pytest.mark.sim
+
+M, T, K = 12, 40, 7
+
+PROCESSES = [
+    AlwaysOn(),
+    BernoulliAvailability(p=0.6),
+    MarkovChurn(p_leave=0.3, p_join=0.5),
+    DiurnalAvailability(period=10, low=0.2, high=0.9),
+    FixedSizeSampling(participation=0.4),
+]
+STRAGGLERS = [
+    NoStragglers(),
+    UniformStragglers(p_straggle=0.7, min_frac=0.3),
+    DeterministicLag(slow_every=3, budget_frac=0.3),
+]
+
+
+def _schedules(availability, stragglers, seed=0):
+    pop = Population(M, availability, stragglers)
+    return pop.schedule(seed, T, K)
+
+
+# ------------------------------------------------------------- determinism
+class TestDeterminism:
+    @pytest.mark.parametrize("avail", PROCESSES, ids=lambda p: type(p).__name__)
+    @pytest.mark.parametrize(
+        "strag", STRAGGLERS, ids=lambda s: type(s).__name__
+    )
+    def test_rebuild_trace_identical(self, avail, strag):
+        """Two independent builds of the same config => identical
+        traces; this is the cross-runtime reproducibility contract the
+        sync and async runners rely on (each may build its own
+        schedule object)."""
+        a = _schedules(avail, strag).trace()
+        b = _schedules(avail, strag).trace()
+        np.testing.assert_array_equal(a["active"], b["active"])
+        np.testing.assert_array_equal(a["budgets"], b["budgets"])
+
+    def test_seed_changes_trace(self):
+        a = _schedules(BernoulliAvailability(0.5), NoStragglers(), seed=0)
+        b = _schedules(BernoulliAvailability(0.5), NoStragglers(), seed=1)
+        assert (a.active != b.active).any()
+
+    def test_availability_stream_is_a_dedicated_fold(self):
+        """The availability key is NOT the raw run key: a consumer
+        drawing from PRNGKey(seed) directly can never collide with (or
+        shift) the availability stream."""
+        seed = 7
+        raw = jax.random.PRNGKey(seed)
+        k = availability_key(seed)
+        assert not np.array_equal(np.asarray(raw), np.asarray(k))
+        # and it is stable: the same seed always folds to the same key
+        assert np.array_equal(np.asarray(k), np.asarray(availability_key(seed)))
+
+    def test_scenario_presets_resolve_and_build(self):
+        for name in ("stable", "flaky", "diurnal", "straggler_heavy"):
+            sched = make_population(name, M).schedule(0, T, K)
+            assert len(sched) == T and sched.m == M
+        with pytest.raises(ValueError, match="unknown population scenario"):
+            make_population("nope", M)
+
+
+# ------------------------------------------------------- membership contract
+class TestMembershipContract:
+    @pytest.mark.parametrize("avail", PROCESSES, ids=lambda p: type(p).__name__)
+    @pytest.mark.parametrize(
+        "strag", STRAGGLERS, ids=lambda s: type(s).__name__
+    )
+    def test_budget_bounds(self, avail, strag):
+        s = _schedules(avail, strag)
+        assert (s.budgets[~s.active] == 0).all()
+        assert (s.budgets[s.active] >= 1).all()
+        assert (s.budgets[s.active] <= K).all()
+
+    def test_min_active_floor(self):
+        pop = Population(
+            M, BernoulliAvailability(p=0.01), NoStragglers(), min_active=2
+        )
+        s = pop.schedule(0, 200, K)
+        assert (s.active.sum(axis=1) >= 2).all()
+
+    def test_always_on_is_static_full(self):
+        s = _schedules(AlwaysOn(), NoStragglers())
+        assert s.is_static_full
+        assert s.churn_events() == 0
+        ev = s[0]
+        assert ev.full and not ev.churned
+
+    def test_stragglers_break_static_full(self):
+        s = _schedules(AlwaysOn(), DeterministicLag(slow_every=2))
+        assert not s.is_static_full
+        assert s[0].full is False
+
+    def test_events_report_joins_and_departures(self):
+        active = np.array([[1, 1, 0], [1, 0, 1]], bool)
+        budgets = np.where(active, K, 0).astype(np.int32)
+        s = RoundSchedule(active, budgets, K)
+        ev = s[1]
+        np.testing.assert_array_equal(ev.joined, [False, False, True])
+        np.testing.assert_array_equal(ev.departed, [False, True, False])
+        assert ev.churned and ev.num_active == 2
+        # round 0 churns vs the implicit all-present start
+        assert s[0].departed[2] and not s[0].joined.any()
+
+    def test_schedule_validates_contract(self):
+        active = np.ones((2, 3), bool)
+        bad = np.full((2, 3), K, np.int32)
+        bad[0, 1] = 0  # active agent with zero budget
+        with pytest.raises(ValueError, match="budget of >= 1"):
+            RoundSchedule(active, bad, K)
+        active2 = ~active
+        with pytest.raises(ValueError, match="zero step budget"):
+            RoundSchedule(active2, np.full((2, 3), 1, np.int32), K)
+
+    def test_tail_preserves_churn_provenance_at_the_seam(self):
+        """Round 0 of `tail(t)` reports joins/departures against the
+        TRUE round t-1 active set, not an implicit all-present start."""
+        active = np.array(
+            [[1, 1, 1], [1, 0, 1], [0, 1, 1], [1, 1, 1]], bool
+        )
+        budgets = np.where(active, K, 0).astype(np.int32)
+        s = RoundSchedule(active, budgets, K)
+        t = s.tail(2)
+        np.testing.assert_array_equal(t[0].active, s[2].active)
+        np.testing.assert_array_equal(t[0].joined, s[2].joined)
+        np.testing.assert_array_equal(t[0].departed, s[2].departed)
+        # a fresh schedule still baselines round 0 against all-present
+        assert s[0].joined.sum() == 0
+
+    def test_fixed_size_sampling_exact_count(self):
+        s = _schedules(FixedSizeSampling(participation=0.4), NoStragglers())
+        S = FixedSizeSampling(participation=0.4).subset_size(M)
+        assert (s.active.sum(axis=1) == S).all()
+
+
+# -------------------------------------------------------------- weights
+class TestWeights:
+    def test_renormalized_weights_sum_to_one(self):
+        for n_active in range(1, M + 1):
+            mask = jnp.zeros((M,), bool).at[:n_active].set(True)
+            w = renormalized_weights(mask)
+            assert float(jnp.sum(w)) == pytest.approx(1.0, abs=1e-12)
+            assert (np.asarray(w)[~np.asarray(mask)] == 0).all()
+
+    def test_aggregator_rebase_off_is_naive(self):
+        from repro.fed import GradientTracking
+
+        agg = ElasticAggregator(GradientTracking(), rebase=False)
+        mask = jnp.zeros((M,), bool).at[:3].set(True)
+        w = agg.weights(mask)
+        # naive server: 1/m per active agent — mass leaks
+        assert float(jnp.sum(w)) == pytest.approx(3 / M, abs=1e-12)
+
+
+# ------------------------------------------- PartialParticipation dedup
+class TestPartialParticipationDedup:
+    def _legacy_sample(self, key, m, S):
+        """The historical inline draw, kept verbatim as the oracle."""
+        sel = jax.random.permutation(key, m)[:S]
+        return jnp.zeros((m,)).at[sel].set(1.0 / S)
+
+    @pytest.mark.parametrize("participation", [0.25, 0.5, 0.75])
+    def test_sample_weights_bitwise_vs_legacy(self, participation):
+        strat = PartialParticipation(participation=participation, seed=3)
+        m = M
+        state = strat.init_state(None, None, m)
+        S = max(1, int(round(participation * m)))
+        key = state["key"]
+        for _ in range(5):
+            key, sub = jax.random.split(key)
+            expected = self._legacy_sample(sub, m, S)
+            w, state = strat.sample_weights(state, m)
+            np.testing.assert_array_equal(np.asarray(w), np.asarray(expected))
+
+    def test_mask_matches_fixed_size_process_draw(self):
+        """One owner: the strategy's weights are exactly the shared
+        fixed-size mask, re-normalized."""
+        key = jax.random.PRNGKey(5)
+        mask = fixed_size_mask(key, M, 4)
+        w = renormalized_weights(mask)
+        assert int(np.asarray(mask).sum()) == 4
+        np.testing.assert_array_equal(
+            np.asarray(w) > 0, np.asarray(mask)
+        )
+
+
+# ----------------------------------------------------- hypothesis properties
+# guarded per-class (NOT importorskip at module level, which would skip
+# the whole non-hypothesis suite above with it)
+_HAS_HYPOTHESIS = (
+    __import__("importlib").util.find_spec("hypothesis") is not None
+)
+
+
+@pytest.mark.skipif(not _HAS_HYPOTHESIS, reason="needs hypothesis")
+class TestProperties:
+    def test_any_nonempty_active_set_weights_sum_to_one(self):
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+
+        @given(m=st.integers(2, 24), bits=st.integers(1, 2**24 - 1))
+        @settings(max_examples=60, deadline=None)
+        def inner(m, bits):
+            mask = np.array(
+                [(bits >> (i % 24)) & 1 for i in range(m)], bool
+            )
+            if not mask.any():
+                mask[0] = True
+            w = renormalized_weights(jnp.asarray(mask))
+            assert float(jnp.sum(w)) == pytest.approx(1.0, abs=1e-9)
+            assert (np.asarray(w)[~mask] == 0.0).all()
+
+        inner()
+
+    def test_markov_schedules_respect_contract(self):
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+
+        @given(
+            seed=st.integers(0, 2**16),
+            p_leave=st.floats(0.05, 0.95),
+            p_join=st.floats(0.05, 0.95),
+        )
+        @settings(max_examples=20, deadline=None)
+        def inner(seed, p_leave, p_join):
+            pop = Population(
+                8,
+                MarkovChurn(p_leave=p_leave, p_join=p_join),
+                UniformStragglers(p_straggle=0.5, min_frac=0.2),
+            )
+            s = pop.schedule(seed, 25, 6)
+            assert (s.active.sum(axis=1) >= 1).all()
+            assert (s.budgets[~s.active] == 0).all()
+            assert (s.budgets[s.active] >= 1).all()
+            assert (s.budgets[s.active] <= 6).all()
+
+        inner()

@@ -152,6 +152,49 @@ class TestStepBuildersOnHostMesh:
             )
             assert jax.tree.structure(state1) == jax.tree.structure(state)
 
+    def test_elastic_train_step_executes(self):
+        """The membership-aware elastic round as an SPMD step: schedule
+        inputs (tracker table, weights, budgets, active) ride along and
+        the round executes for a stateful strategy."""
+        import dataclasses as _dc
+
+        from repro.launch.steps import build_elastic_train_step
+
+        cfg = _dc.replace(
+            get_config("granite-8b").reduced(), quantization_bits=8
+        )
+        if not hasattr(jax, "set_mesh"):  # pragma: no cover
+            pytest.skip("jax.set_mesh unavailable on this jax")
+        try:
+            mesh = make_host_mesh(1, 1)
+        except AttributeError as e:  # pragma: no cover
+            pytest.skip(f"host mesh unavailable on this jax: {e}")
+        shape = ShapeConfig("tiny_train", seq_len=32, global_batch=2,
+                            kind="train")
+        with jax.set_mesh(mesh):
+            jitted, specs_fn = build_elastic_train_step(
+                cfg, mesh, algorithm="quantized_gt", num_local_steps=2,
+                dtype=DT,
+            )
+            sp = specs_fn(shape)
+            m = num_agents(mesh, cfg.fed_mode)
+            x = init_params(jax.random.PRNGKey(0), cfg, DT)
+            y = init_delta(cfg, DT)
+            z = lambda t: jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype), t
+            )
+            x1, y1, state1, tracker1 = jitted(shape)(
+                x, y, z(sp["batch"]), z(sp["state"]), z(sp["tracker"]),
+                jnp.full((m,), 1.0 / m, jnp.float32),
+                jnp.full((m,), 2, jnp.int32),
+                jnp.ones((m,), bool),
+                jnp.ones((m,), bool),
+            )
+            assert all(
+                bool(jnp.all(jnp.isfinite(u))) for u in jax.tree.leaves(x1)
+            )
+            assert set(tracker1) == {"gx", "gy"}
+
     def test_prefill_and_decode_execute(self):
         cfg = get_config("starcoder2-7b").reduced()
         mesh = make_host_mesh(1, 1)
