@@ -4,14 +4,31 @@ Finite threshold-classifier class over heterogeneous per-agent Gaussians:
 as the per-agent sample size n grows, both the Theorem-2 bound and the
 measured sup_x |R - f| must decay ~ 1/sqrt(n), with the bound above the
 measurement.  Also reports the Lemma-3 VC upper bound on the Rademacher
-complexity next to the Monte-Carlo estimate."""
+complexity next to the Monte-Carlo estimate.
+
+The second table tracks the MEASURED generalization gap of trained
+iterates for the stochastic strategy family — strategy x noise x
+Dirichlet heterogeneity on the held-out-split quadratic game
+(`problems.quadratic.make_dirichlet_quadratic_problem`): rounds-to-eps
+against the closed-form minimax point next to the final train/test risk
+gap (`core.generalization.generalization_gap`).  `--check` gates the
+claims the table keeps making (SAGDA's noiseless degeneration converges
+linearly at both heterogeneity levels; plain Local SGDA stalls at its
+drift floor under strong heterogeneity; every gap stays bounded)."""
 from __future__ import annotations
+
+import math
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import empirical_rademacher, lemma3_vc_bound, theorem2_bound
+from repro.core import (
+    empirical_rademacher,
+    generalization_gap,
+    lemma3_vc_bound,
+    theorem2_bound,
+)
 
 from .common import emit
 
@@ -76,5 +93,189 @@ def run(rows=None):
     return rows
 
 
+# --------------------------------------------------------------------------
+# stochastic family: strategy x noise x heterogeneity on the held-out split
+# --------------------------------------------------------------------------
+S_DIM, S_N, S_M, S_ALPHAS = 12, 60, 6, (0.1, 100.0)
+S_ETA, S_K, S_ROUNDS, S_EPS = 0.02, 4, 600, 1e-2
+S_SIGMA = 0.05
+#: --check bounds, ~2x the measured values so benign jitter passes but a
+#: regression in the stochastic engine path (noise folds, momentum
+#: steps, SAGDA corrections) trips the gate
+CHECK_MAX_SAGDA_ROUNDS = {0.1: 300, 100.0: 300}
+CHECK_MAX_ABS_GAP = 3.5
+
+
+def _stoch_strategies(noise_name):
+    from repro.fed import SAGDA, LocalSGDAPlus
+    from repro.fed.noise import GaussianNoise
+
+    nz = (
+        {"noise": GaussianNoise(sigma=S_SIGMA)}
+        if noise_name == "gaussian"
+        else {}
+    )
+    return [
+        ("local_sgda", LocalSGDAPlus(momentum=0.0, **nz)),
+        ("local_sgda_plus", LocalSGDAPlus(momentum=0.9, **nz)),
+        ("sagda", SAGDA(**nz)),
+    ]
+
+
+def _stoch_one(prob, strategy, x_star, y_star):
+    from repro.core.engine import make_round, run_strategy_rounds
+
+    rnd = make_round(
+        prob.loss, strategy, S_K, S_ETA, explicit_state=True
+    )
+    x0 = jnp.zeros(S_DIM, jnp.float64)
+    state0 = strategy.init_state(x0, x0, prob.num_agents)
+
+    def metric(x, y):
+        return {
+            "dist": jnp.sqrt(
+                jnp.sum((x - x_star) ** 2) + jnp.sum((y - y_star) ** 2)
+            )
+        }
+
+    (x, y, _), metrics = run_strategy_rounds(
+        rnd, x0, x0, prob.agent_data, S_ROUNDS, state0, metric
+    )
+    dist = np.asarray(metrics["dist"])
+    hit = np.nonzero(dist <= S_EPS)[0]
+    return (
+        float(hit[0]) if hit.size else math.inf,
+        float(dist[-1]),
+        x,
+        y,
+    )
+
+
+def stochastic_rows(rows=None):
+    from repro.data import heterogeneity_index
+    from repro.problems import (
+        make_dirichlet_quadratic_problem,
+        quadratic_minimax_point,
+    )
+
+    jax.config.update("jax_enable_x64", True)
+    rows = [] if rows is None else rows
+    for alpha in S_ALPHAS:
+        prob, test_data, w = make_dirichlet_quadratic_problem(
+            jax.random.PRNGKey(7), dim=S_DIM, num_samples=S_N,
+            num_agents=S_M, alpha=alpha, test_samples=S_N,
+        )
+        het = float(heterogeneity_index(w))
+        x_star, y_star = quadratic_minimax_point(prob)
+        gap_fn = jax.jit(generalization_gap(prob.loss, prob.agent_data, test_data))
+        for noise_name in ("none", "gaussian"):
+            for name, strategy in _stoch_strategies(noise_name):
+                r_eps, final, x, y = _stoch_one(prob, strategy, x_star, y_star)
+                rows.append(
+                    {
+                        "strategy": name,
+                        "noise": noise_name,
+                        "alpha": f"{alpha:g}",
+                        "het_index": f"{het:.3f}",
+                        f"rounds_to_{S_EPS:g}": (
+                            "inf" if math.isinf(r_eps) else int(r_eps)
+                        ),
+                        "final_dist": f"{final:.2e}",
+                        "gen_gap": f"{float(gap_fn(x, y)):+.4f}",
+                        "_r_eps": r_eps,
+                        "_gap": float(gap_fn(x, y)),
+                        "_alpha": alpha,
+                    }
+                )
+    emit(
+        rows,
+        [
+            "strategy",
+            "noise",
+            "alpha",
+            "het_index",
+            f"rounds_to_{S_EPS:g}",
+            "final_dist",
+            "gen_gap",
+        ],
+        "generalization: stochastic family — strategy x noise x "
+        "Dirichlet(alpha), rounds-to-eps + measured gen gap",
+    )
+    return rows
+
+
+def check() -> int:
+    """CI gate over the stochastic table's standing claims.  Returns
+    the number of violations (0 = gate holds):
+
+      1. noiseless SAGDA (bitwise FedGDA-GT) reaches eps within the
+         pinned round budget at BOTH heterogeneity levels — the linear
+         noiseless component of the stochastic engine path;
+      2. noiseless plain Local SGDA under strong heterogeneity
+         (alpha=0.1) never reaches eps — the drift floor the paper's
+         separation rests on (if this starts converging, eps/eta/K
+         drifted and the table stopped demonstrating the claim);
+      3. every measured generalization gap stays within the pinned cap
+         (a blown-up gap means the trained iterates diverged)."""
+    rows = stochastic_rows()
+    by = {(r["strategy"], r["noise"], r["_alpha"]): r for r in rows}
+    bad = 0
+    for alpha in S_ALPHAS:
+        r = by[("sagda", "none", alpha)]["_r_eps"]
+        ok = r <= CHECK_MAX_SAGDA_ROUNDS[alpha]
+        bad += not ok
+        print(
+            f"[{'ok' if ok else 'FAIL'}] sagda/none alpha={alpha:g}: "
+            f"rounds={r} (max {CHECK_MAX_SAGDA_ROUNDS[alpha]})"
+        )
+    r = by[("local_sgda", "none", 0.1)]["_r_eps"]
+    ok = math.isinf(r)
+    bad += not ok
+    print(
+        f"[{'ok' if ok else 'FAIL'}] local_sgda/none alpha=0.1 stalls: "
+        f"rounds={r} (expected inf)"
+    )
+    for r in rows:
+        ok = abs(r["_gap"]) <= CHECK_MAX_ABS_GAP
+        bad += not ok
+        if not ok:
+            print(
+                f"[FAIL] gap blow-up: {r['strategy']}/{r['noise']}"
+                f"/alpha={r['alpha']}: {r['_gap']:+.4f}"
+            )
+    print(f"# gen-gap cap |gap| <= {CHECK_MAX_ABS_GAP}: "
+          f"{'ok' if all(abs(r['_gap']) <= CHECK_MAX_ABS_GAP for r in rows) else 'FAIL'}")
+    return bad
+
+
+def run_all():
+    """Both tables: the Theorem-2 bound table and the stochastic-family
+    gap table (each emits separately — different columns)."""
+    return run() + stochastic_rows()
+
+
+def check_gate():
+    """`benchmarks.run` entry: raise instead of returning a count so the
+    driver's suite loop stops with a non-zero exit on violation."""
+    bad = check()
+    if bad:
+        raise SystemExit(f"generalization --check: {bad} violation(s)")
+
+
 if __name__ == "__main__":
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="gate the stochastic table's claims (SAGDA linear rounds, "
+        "Local SGDA drift floor, bounded gen gaps); exits non-zero on "
+        "violation",
+    )
+    args = ap.parse_args()
+    if args.check:
+        sys.exit(1 if check() else 0)
     run()
+    stochastic_rows()

@@ -7,7 +7,11 @@ Tables:
   fig1        — quadratic game convergence (paper Fig 1)
   fig2        — robust regression under heterogeneity (paper Fig 2)
   fig3        — Local SGDA fixed-point bias vs K (paper Fig 3 / App C)
-  generalization — Theorem-2 bound vs measured gap (paper Sec 4)
+  generalization — Theorem-2 bound vs measured gap (paper Sec 4) + the
+                stochastic family's strategy x noise x heterogeneity
+                rounds-to-eps / gen-gap table
+  generalization_check — the stochastic table's CI gate (exits non-zero
+                on violation; same as generalization.py --check)
   comm        — bytes-to-accuracy, star-topology model (paper headline)
   overlap     — wall-clock round latency, sync vs async runtime
   elastic     — rounds/bytes to eps under population churn scenarios
@@ -39,7 +43,8 @@ def main() -> None:
         "fig1": fig1_quadratic.run,
         "fig2": fig2_robust_regression.run,
         "fig3": fig3_fixed_point.run,
-        "generalization": generalization.run,
+        "generalization": generalization.run_all,
+        "generalization_check": generalization.check_gate,
         "comm": comm_efficiency.run,
         "overlap": comm_efficiency.overlap,
         "elastic": elastic.run,

@@ -56,6 +56,18 @@ class ModelConfig:
     participation: float = 1.0
     compression_ratio: float = 1.0
     quantization_bits: int = 32
+    # stochastic-gradient family (repro.fed.noise): "none" keeps the
+    # deterministic oracle (bitwise-pinned legacy traces); "gaussian" /
+    # "minibatch" wrap every local/anchor gradient eval in the named
+    # NoiseModel, seeded from the DEDICATED noise stream (noise_seed ->
+    # fed.noise.noise_key, never the sampling/compression RNG folds).
+    # momentum > 0 runs Local-SGDA+-style heavy-ball local steps
+    # (optim.momentum.heavy_ball) and voids the fused-anchor shortcut.
+    noise: str = "none"
+    noise_sigma: float = 0.1
+    noise_fraction: float = 0.5
+    noise_seed: int = 0
+    momentum: float = 0.0
     # encode compressed corrections as REAL packed (value, index, scale)
     # payloads (repro.fed.transport) instead of dense masked trees —
     # identical iterates, packed payload bytes matching bytes_per_round

@@ -16,8 +16,10 @@ from .engine import (
     agent_weighted_sum,
     anchor_step,
     default_update,
+    make_noise_vgrad,
     make_phases,
     make_round,
+    noise_eval_keys,
     run_strategy_rounds,
     tracking_corrections,
 )
@@ -39,6 +41,7 @@ from .fixed_point import (
 )
 from .generalization import (
     empirical_rademacher,
+    generalization_gap,
     lemma3_vc_bound,
     theorem2_bound,
 )
@@ -60,8 +63,10 @@ __all__ = [
     "agent_weighted_sum",
     "anchor_step",
     "default_update",
+    "make_noise_vgrad",
     "make_phases",
     "make_round",
+    "noise_eval_keys",
     "run_strategy_rounds",
     "tracking_corrections",
     "make_gda_step",
@@ -77,6 +82,7 @@ __all__ = [
     "appendix_c_fixed_point",
     "prop1_residual",
     "empirical_rademacher",
+    "generalization_gap",
     "lemma3_vc_bound",
     "theorem2_bound",
 ]

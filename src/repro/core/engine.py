@@ -148,6 +148,29 @@ def tracking_corrections(
     return jax.tree.map(corr, gbar_x, gx), jax.tree.map(corr, gbar_y, gy)
 
 
+def noise_eval_keys(noise_keys: jax.Array, idx) -> jax.Array:
+    """Per-agent evaluation keys for ONE stochastic gradient call: fold
+    the in-round call index (0 = the anchor exchange, 1 + k = local step
+    k) into each agent's per-round noise key.  Single owner of the
+    eval-level fold, shared by the fused round, the elastic round and
+    the async shard programs so every schedule consumes the exact same
+    draws (the full fold tree is documented in `repro.fed.noise`)."""
+    return jax.vmap(jax.random.fold_in, in_axes=(0, None))(noise_keys, idx)
+
+
+def make_noise_vgrad(gfn: Callable, noise) -> Callable:
+    """vmapped per-agent stochastic gradient oracle for a noise model
+    (duck-typed on `.grad(gfn, key, x, y, data)` — see
+    `repro.fed.noise.NoiseModel`; this module stays free of `repro.fed`
+    imports).  Signature: `(keys[m], xs, ys, agent_data) -> SaddleField`
+    — the stochastic counterpart of `jax.vmap(gfn, (0, 0, 0))`."""
+
+    def one(key, xi, yi, di):
+        return noise.grad(gfn, key, xi, yi, di)
+
+    return jax.vmap(one, in_axes=(0, 0, 0, 0))
+
+
 # kept as private aliases — pre-split internal names, still referenced by
 # downstream forks of the monolithic engine
 _agent_mean = agent_mean
@@ -181,6 +204,7 @@ class RoundState:
     gbar_y: Pytree = None
     step_budgets: Optional[jax.Array] = None  # [m] local-step caps (None=K)
     active: Optional[jax.Array] = None        # [m] availability mask
+    noise_keys: Optional[jax.Array] = None    # [m] per-round noise keys
     fused: bool = False            # static: anchor shortcut applies
 
 
@@ -189,6 +213,7 @@ jax.tree_util.register_dataclass(
     data_fields=(
         "x", "y", "state", "xs", "ys", "weights",
         "cx", "cy", "gbar_x", "gbar_y", "step_budgets", "active",
+        "noise_keys",
     ),
     meta_fields=("fused",),
 )
@@ -197,8 +222,8 @@ jax.tree_util.register_dataclass(
 class RoundPhases(NamedTuple):
     """The four phase functions for one strategy (see module docstring).
 
-    broadcast(x, y, agent_data, state, *,
-              weights=..., step_budgets=None, active=None) -> RoundState
+    broadcast(x, y, agent_data, state, *, weights=...,
+              step_budgets=None, active=None, noise_keys=...) -> RoundState
     exchange_corrections(rs, agent_data) -> RoundState
     local_steps(rs, agent_data) -> RoundState
     aggregate(rs) -> (x1, y1, state)
@@ -212,7 +237,11 @@ class RoundPhases(NamedTuple):
     `active` carry an elastic schedule's per-agent local-step caps and
     availability mask (`repro.sim`) — `local_steps` freezes an agent
     once its budget is spent, and `None` (the default) is the pinned
-    legacy trace with no gating primitives at all."""
+    legacy trace with no gating primitives at all.  `noise_keys` works
+    like `weights`: left unset, a stochastic strategy samples its
+    per-agent keys from the dedicated noise stream in `state`; a
+    sharded runtime samples once server-side and feeds each shard its
+    slice (None — explicit — means deterministic, e.g. tracker init)."""
 
     broadcast: Callable
     exchange_corrections: Callable
@@ -257,11 +286,13 @@ def make_phases(
             return x1, y1
 
         def broadcast(x, y, agent_data, state, *, weights=_UNSET,
-                      step_budgets=None, active=None):
+                      step_budgets=None, active=None, noise_keys=_UNSET):
             # every "local" step is a global aggregate, so there is no
             # per-agent divergence to budget — step_budgets is ignored;
-            # an elastic schedule's membership enters through `weights`
-            del agent_data, step_budgets
+            # an elastic schedule's membership enters through `weights`.
+            # FullSync is a deterministic baseline: noise_keys accepted
+            # for signature uniformity, never consumed
+            del agent_data, step_budgets, noise_keys
             w = None if weights is _UNSET else weights
             return RoundState(x=x, y=y, state=state, weights=w, active=active)
 
@@ -290,19 +321,33 @@ def make_phases(
     vgrad = jax.vmap(gfn, in_axes=(0, 0, 0))
     use_corr = bool(getattr(strategy, "use_correction", False))
     cdt = getattr(strategy, "correction_dtype", None)
+    # stochastic knobs — None / 0.0 are trace-time identities: the
+    # deterministic path below keeps the exact legacy primitives (no
+    # zeroed noise, no 0-scaled velocity — bitwise-pinned)
+    noise = getattr(strategy, "noise", None)
+    momentum = float(getattr(strategy, "momentum", 0.0) or 0.0)
+    nvgrad = make_noise_vgrad(gfn, noise) if noise is not None else None
+    if momentum:
+        # lazy: optim.momentum imports core — only the momentum round
+        # needs the shared heavy-ball primitive
+        from ..optim.momentum import heavy_ball
 
     def broadcast(x, y, agent_data, state, *, weights=_UNSET,
-                  step_budgets=None, active=None):
+                  step_budgets=None, active=None, noise_keys=_UNSET):
         m = _num_agents(agent_data)
         if weights is _UNSET:
             weights, state = strategy.sample_weights(state, m)
+        if noise_keys is _UNSET:
+            noise_keys = None
+            if noise is not None:
+                noise_keys, state = strategy.sample_noise_keys(state, m)
         xs = tree_broadcast_agents(x, m)
         ys = tree_broadcast_agents(y, m)
         if constrain_agents is not None:
             xs, ys = constrain_agents(xs, ys)
         return RoundState(
             x=x, y=y, state=state, xs=xs, ys=ys, weights=weights,
-            step_budgets=step_budgets, active=active,
+            step_budgets=step_budgets, active=active, noise_keys=noise_keys,
         )
 
     def exchange_corrections(rs, agent_data):
@@ -311,8 +356,15 @@ def make_phases(
         m = _num_agents(agent_data)
         state = rs.state
         if m > 1:
-            # one gradient exchange at the anchor point
-            g0 = vgrad(rs.xs, rs.ys, agent_data)
+            # one gradient exchange at the anchor point (eval index 0 of
+            # the noise stream when stochastic)
+            if noise is None or rs.noise_keys is None:
+                g0 = vgrad(rs.xs, rs.ys, agent_data)
+            else:
+                g0 = nvgrad(
+                    noise_eval_keys(rs.noise_keys, 0),
+                    rs.xs, rs.ys, agent_data,
+                )
             gbar_x = agent_mean(g0.gx, rs.weights)
             gbar_y = agent_mean(g0.gy, rs.weights)
             cx, cy = tracking_corrections(g0.gx, g0.gy, gbar_x, gbar_y, cdt)
@@ -326,7 +378,9 @@ def make_phases(
                 cx = cx.decode()
             if hasattr(cy, "decode"):
                 cy = cy.decode()
-            fused = bool(strategy.exact_correction)
+            # momentum folds the correction into a velocity, so the
+            # first step is no longer the plain anchor update
+            fused = bool(strategy.exact_correction) and not momentum
             return dataclasses.replace(
                 rs, cx=cx, cy=cy, gbar_x=gbar_x, gbar_y=gbar_y,
                 fused=fused, state=state,
@@ -339,11 +393,22 @@ def make_phases(
     def local_steps(rs, agent_data):
         xs, ys = rs.xs, rs.ys
         budgets = rs.step_budgets
+        stochastic = noise is not None and rs.noise_keys is not None
+
+        def grads(xs, ys, k):
+            # k is the in-round step index; the stochastic oracle draws
+            # at eval index 1 + k (0 belongs to the anchor exchange)
+            if not stochastic:
+                return vgrad(xs, ys, agent_data)
+            return nvgrad(
+                noise_eval_keys(rs.noise_keys, 1 + k), xs, ys, agent_data
+            )
+
         if use_corr:
             cx, cy = rs.cx, rs.cy
 
-            def step_once(xs, ys):
-                g = vgrad(xs, ys, agent_data)
+            def step_once(xs, ys, k):
+                g = grads(xs, ys, k)
                 xs = update_fn(xs, g.gx, cx, eta_x, -1.0)
                 ys = update_fn(ys, g.gy, cy, eta_y, +1.0)
                 if constrain_agents is not None:
@@ -353,8 +418,8 @@ def make_phases(
 
         else:
 
-            def step_once(xs, ys):
-                g = vgrad(xs, ys, agent_data)
+            def step_once(xs, ys, k):
+                g = grads(xs, ys, k)
                 xs = jax.tree.map(lambda u, v: u - eta_x * v, xs, g.gx)
                 ys = jax.tree.map(lambda u, v: u + eta_y * v, ys, g.gy)
                 return xs, ys
@@ -373,13 +438,62 @@ def make_phases(
                 ys = agent_where(live, ys1, ys)
             start = 1
         if num_local_steps - start > 0:
-            if budgets is None:
-                # the pinned legacy trace: no gating primitives at all
+            if momentum:
+                # heavy-ball local steps (Local SGDA+): per-round
+                # velocities, zero-initialized, carrying the corrected
+                # step direction; budget gating freezes iterate AND
+                # velocity so a spent agent's round contribution is
+                # exactly its last live step
+                def eff(g, c):
+                    if c is None:
+                        return g
+                    return jax.tree.map(
+                        lambda gv, cv: gv + cv.astype(gv.dtype), g, c
+                    )
+
+                def mom_body(carry, k):
+                    xs, ys, vx, vy = carry
+                    g = grads(xs, ys, k)
+                    vx1 = heavy_ball(vx, eff(g.gx, cx if use_corr else None),
+                                     momentum)
+                    vy1 = heavy_ball(vy, eff(g.gy, cy if use_corr else None),
+                                     momentum)
+                    xs1 = jax.tree.map(lambda u, v: u - eta_x * v, xs, vx1)
+                    ys1 = jax.tree.map(lambda u, v: u + eta_y * v, ys, vy1)
+                    if constrain_agents is not None:
+                        xs1, ys1 = constrain_agents(xs1, ys1)
+                    if budgets is None:
+                        return (xs1, ys1, vx1, vy1), None
+                    live = k < budgets
+                    return (
+                        agent_where(live, xs1, xs),
+                        agent_where(live, ys1, ys),
+                        agent_where(live, vx1, vx),
+                        agent_where(live, vy1, vy),
+                    ), None
+
+                zeros = lambda t: jax.tree.map(jnp.zeros_like, t)
+                (xs, ys, _, _), _ = jax.lax.scan(
+                    mom_body,
+                    (xs, ys, zeros(xs), zeros(ys)),
+                    jnp.arange(start, num_local_steps),
+                )
+            elif budgets is None and not stochastic:
+                # the pinned legacy trace: no gating or indexing
+                # primitives at all
                 (xs, ys), _ = jax.lax.scan(
-                    lambda c, _: (step_once(*c), None),
+                    lambda c, _: (step_once(*c, 0), None),
                     (xs, ys),
                     None,
                     length=num_local_steps - start,
+                )
+            elif budgets is None:
+                # stochastic, full budgets: the scan indexes the noise
+                # stream by step but gates nothing
+                (xs, ys), _ = jax.lax.scan(
+                    lambda c, k: (step_once(*c, k), None),
+                    (xs, ys),
+                    jnp.arange(start, num_local_steps),
                 )
             else:
                 # elastic: step k only advances agents whose budget still
@@ -388,7 +502,7 @@ def make_phases(
                 # its zero weight, for inactive agents) stays exact
                 def gated(carry, k):
                     xs, ys = carry
-                    xs1, ys1 = step_once(xs, ys)
+                    xs1, ys1 = step_once(xs, ys, k)
                     live = k < budgets
                     return (
                         agent_where(live, xs1, xs),

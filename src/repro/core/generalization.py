@@ -7,6 +7,9 @@ Implements:
     hypothesis classes; a lower bound otherwise).
   * The Theorem-2 high-probability bound assembly.
   * The Lemma-3 VC-dimension bound on R(X, Y).
+  * `generalization_gap` — the MEASURED train/held-out risk gap the
+    bounds control, tracked per round by `benchmarks/generalization.py`
+    for the stochastic strategy family.
 """
 from __future__ import annotations
 
@@ -68,6 +71,30 @@ def lemma3_vc_bound(M_i: Sequence[float], n: int, vc_dim: int) -> float:
     m = len(M_i)
     s = sum(Mi**2 for Mi in M_i) / (m * m * n)
     return math.sqrt(2.0 * vc_dim * s * (1.0 + math.log(m * n / vc_dim)))
+
+
+def generalization_gap(
+    loss: Callable,
+    train_data,
+    test_data,
+) -> Callable:
+    """Measured counterpart of the Section-4 bounds: returns
+    gap(x, y) = R_test(x, y) - R_train(x, y), where each risk is the
+    mean over agents of the per-agent loss on that split.
+
+    Only meaningful when the loss is an empirical RISK on both splits
+    (same per-sample-mean scale) — e.g. problems built by
+    `problems.quadratic.make_dirichlet_quadratic_problem`, whose
+    sufficient statistics are per-sample means.  Both data pytrees must
+    be agent-stacked ([m, ...] leaves) with the same m."""
+    vloss = jax.vmap(loss, in_axes=(None, None, 0))
+
+    def gap(x, y):
+        return jnp.mean(vloss(x, y, test_data)) - jnp.mean(
+            vloss(x, y, train_data)
+        )
+
+    return gap
 
 
 def l2_cover_size(radius: float, eps: float, dim: int) -> int:

@@ -1,8 +1,15 @@
-from .synthetic import federated_token_batches, partition_among_agents
+from .synthetic import (
+    dirichlet_partition_weights,
+    federated_token_batches,
+    heterogeneity_index,
+    partition_among_agents,
+)
 from .tokens import synthetic_lm_batch
 
 __all__ = [
+    "dirichlet_partition_weights",
     "federated_token_batches",
+    "heterogeneity_index",
     "partition_among_agents",
     "synthetic_lm_batch",
 ]

@@ -1,14 +1,23 @@
 from .runtime import FederatedRunner, RoundStats
 from .async_runtime import AsyncFederatedRunner
 from .comm import comm_table
+from .noise import (
+    GaussianNoise,
+    MinibatchNoise,
+    NoiseModel,
+    noise_key,
+    resolve_noise,
+)
 from .strategies import (
     CommStrategy,
     CompressedGT,
     FullSync,
     GradientTracking,
     LocalOnly,
+    LocalSGDAPlus,
     PartialParticipation,
     QuantizedGT,
+    SAGDA,
     resolve_strategy,
 )
 from .transport import (
@@ -30,10 +39,17 @@ __all__ = [
     "CommStrategy",
     "CompressedGT",
     "FullSync",
+    "GaussianNoise",
     "GradientTracking",
     "LocalOnly",
+    "LocalSGDAPlus",
+    "MinibatchNoise",
+    "NoiseModel",
     "PartialParticipation",
     "QuantizedGT",
+    "SAGDA",
+    "noise_key",
+    "resolve_noise",
     "resolve_strategy",
     "HEADER_BYTES",
     "LeafPayload",

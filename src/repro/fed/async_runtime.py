@@ -53,10 +53,15 @@ the unmodified overlapped loop.
 The fp-tolerance contract with the sync runner holds because per-agent
 gradients and local steps are elementwise identical computations on
 shard slices, and every random draw (participation sampling, rand-k
-selection scores, stochastic-rounding uniforms) happens once, server-
-side, through the very same `strategy` code path; only the aggregate's
-reduction order differs (per-shard sums combined server-side vs one
-mean), which is the usual ~ulp-level float non-associativity.
+selection scores, stochastic-rounding uniforms, and the per-agent
+gradient-noise keys of a stochastic strategy — `_round_noise_keys`,
+sliced per shard exactly like the participation weights) happens once,
+server-side, through the very same `strategy` code path; only the
+aggregate's reduction order differs (per-shard sums combined
+server-side vs one mean), which is the usual ~ulp-level float
+non-associativity.  Stochastic strategies' noise keys are folded by
+GLOBAL agent index (`fed.noise`), so a shard's draws do not depend on
+how agents were split into shards.
 """
 from __future__ import annotations
 
@@ -70,7 +75,9 @@ import jax.numpy as jnp
 from ..core.engine import (
     agent_mean,
     agent_weighted_sum,
+    make_noise_vgrad,
     make_phases,
+    noise_eval_keys,
     tracking_corrections,
 )
 from ..core.types import Pytree, grad_xy, identity_proj
@@ -172,10 +179,19 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
             getattr(self._strategy, "sync_every_step", False)
         )
         self._cdt = getattr(self._strategy, "correction_dtype", None)
+        self._noise = getattr(self._strategy, "noise", None)
+        self._nvgrad = (
+            make_noise_vgrad(self._gfn, self._noise)
+            if self._noise is not None
+            else None
+        )
         self._fused = (
             self._use_corr
             and self._m > 1
             and bool(self._strategy.exact_correction)
+            # momentum folds the correction into a velocity, so the
+            # first step is no longer the plain anchor update
+            and not getattr(self._strategy, "momentum", 0.0)
         )
         self._build_programs()
 
@@ -194,10 +210,23 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
         cdt = self._cdt
         fused = self._fused
 
-        def shard_grads(x, y, data_s):
-            """Per-shard anchor gradients (the up half of the exchange)."""
-            rs = ph.broadcast(x, y, data_s, {}, weights=None)
-            g = self._vgrad(rs.xs, rs.ys, data_s)
+        noise = self._noise
+
+        def shard_grads(x, y, data_s, nk_s=None):
+            """Per-shard anchor gradients (the up half of the exchange).
+            `nk_s` is this shard's slice of the round's per-agent noise
+            keys; None — a noiseless strategy, or the tracker init,
+            which must match the sync path's deterministic
+            `sim.init_tracker` — is the exact oracle (the dispatch is
+            trace-time: None vs array is part of the jit signature)."""
+            rs = ph.broadcast(x, y, data_s, {}, weights=None,
+                              noise_keys=nk_s)
+            if noise is None or nk_s is None:
+                g = self._vgrad(rs.xs, rs.ys, data_s)
+            else:
+                g = self._nvgrad(
+                    noise_eval_keys(rs.noise_keys, 0), rs.xs, rs.ys, data_s
+                )
             return g.gx, g.gy
 
         def shard_point_grads(x, y, data_s):
@@ -234,7 +263,7 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
             return cx, cy, gbar_x, gbar_y, state
 
         def shard_steps(x, y, data_s, cx_s, cy_s, gbar_x, gbar_y, w_s,
-                        b_s=None):
+                        b_s=None, nk_s=None):
             """Per-shard local_steps + partial aggregate — ONE body for
             both schedules (b_s None is the legacy pinned trace; an
             elastic round passes its budget slice).  It is jitted twice
@@ -246,7 +275,7 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
             (the set of live shard programs changes with membership, so
             there is no stable double-buffer to donate into)."""
             rs = ph.broadcast(x, y, data_s, {}, weights=None,
-                              step_budgets=b_s)
+                              step_budgets=b_s, noise_keys=nk_s)
             rs = dataclasses.replace(
                 rs, cx=cx_s, cy=cy_s, gbar_x=gbar_x, gbar_y=gbar_y,
                 fused=fused,
@@ -374,6 +403,23 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
         ]
         return weights, w_slices
 
+    def _round_noise_keys(self):
+        """Per-agent gradient-noise keys, once per round, server-side —
+        shards receive their slices (mirrors `_round_weights`: the draws
+        must match the sync path's exactly, which holds because the keys
+        are folded by global agent index — see `fed.noise`)."""
+        if self._noise is None:
+            return [None] * self._n_shards
+        keys, state = self._strategy.sample_noise_keys(
+            self._server_state, self._m
+        )
+        self._server_state = state
+        per = self._per
+        return [
+            jax.device_put(keys[i * per : (i + 1) * per], d)
+            for i, d in enumerate(self._shard_devices)
+        ]
+
     def _run_fullsync_round(self, x, y, weights=None, shard_live=None):
         """FullSync: K communicated steps; each is a per-shard gradient
         fan-out + server combine (no local divergence to overlap).
@@ -490,6 +536,7 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
 
     def _run_round(self, x, y, bcast):
         weights, w_slices = self._round_weights()
+        nk_slices = self._round_noise_keys()
         per = self._per
         cx_s = cy_s = [None] * self._n_shards
         gbx_s = gby_s = [None] * self._n_shards
@@ -499,8 +546,10 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
             # per device); the device_put gathers below overlap shards
             # that are still computing
             gs = [
-                self._shard_grads(bx, by, data)
-                for (bx, by), data in zip(bcast, self._data_s)
+                self._shard_grads(bx, by, data, nk)
+                for (bx, by), data, nk in zip(
+                    bcast, self._data_s, nk_slices
+                )
             ]
             gx = self._concat_server([g[0] for g in gs])
             gy = self._concat_server([g[1] for g in gs])
@@ -528,10 +577,11 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
 
         sums = [
             self._shard_steps(
-                bx, by, data, cxi, cyi, gbxi, gbyi, wi
+                bx, by, data, cxi, cyi, gbxi, gbyi, wi, None, nki
             )
-            for (bx, by), data, cxi, cyi, gbxi, gbyi, wi in zip(
-                bcast, self._data_s, cx_s, cy_s, gbx_s, gby_s, w_slices
+            for (bx, by), data, cxi, cyi, gbxi, gbyi, wi, nki in zip(
+                bcast, self._data_s, cx_s, cy_s, gbx_s, gby_s, w_slices,
+                nk_slices,
             )
         ]
         x1, y1 = self._server_combine(
@@ -595,6 +645,11 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
             return x, y, tracker
 
         budgets = jnp.asarray(ev.budgets)
+        # one noise draw per round, server-side, exactly as the sync
+        # elastic round's broadcast samples it — including for absent
+        # agents, whose keys are drawn and discarded (the fold tree is
+        # positional, so presence cannot shift other agents' draws)
+        nk_slices = self._round_noise_keys()
         # fresh per-shard broadcast (no donation — see shard_steps_elastic);
         # absent shards still receive it cheaply enough, keeping the
         # transfer schedule uniform
@@ -626,9 +681,9 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
             # placeholders the active mask discards in favor of the
             # stale tracker rows
             gs = [
-                self._shard_grads(bx, by, data) if live else None
-                for live, (bx, by), data in zip(
-                    shard_live, bcast, self._data_s
+                self._shard_grads(bx, by, data, nk) if live else None
+                for live, (bx, by), data, nk in zip(
+                    shard_live, bcast, self._data_s, nk_slices
                 )
             ]
             if not all(shard_live):
@@ -667,7 +722,7 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
             self._shard_steps_elastic(
                 bcast[i][0], bcast[i][1], self._data_s[i],
                 cx_s[i], cy_s[i], gbx_s[i], gby_s[i],
-                w_slices[i], b_slices[i],
+                w_slices[i], b_slices[i], nk_slices[i],
             )
             for i in range(n)
             if shard_live[i]

@@ -1,0 +1,147 @@
+"""Composable stochastic-gradient noise models for the round engine.
+
+The deterministic engine evaluates each agent's exact gradient oracle;
+the stochastic algorithms of the comparison literature (SAGDA, Local
+SGDA / SGDA+) instead see noisy draws.  A `NoiseModel` wraps the exact
+per-agent gradient function into a *seeded* stochastic oracle, so every
+run — and both runtimes — is replayable bit-for-bit.
+
+Noise-fold contract (pinned by tests/test_stochastic_parity.py)
+---------------------------------------------------------------
+Mirrors `sim.schedule.availability_key`: the noise stream hangs off a
+DEDICATED fold of the run key, never off the raw ``PRNGKey(seed)``
+chains that client sampling (`PartialParticipation.init_state`) and
+correction compression (`_CorrectionCompressor.init_state`) split from.
+Equal integer seeds therefore cannot alias across subsystems, and
+toggling noise on leaves every compression / participation draw
+bitwise unchanged.
+
+  stream  : ``noise_key(seed) = fold_in(PRNGKey(seed), NOISE_STREAM)``
+  round   : ``round_key, sub = split(state["noise_key"])``
+  agent i : ``agent_key = fold_in(sub, i)``          (index in 0..m-1)
+  eval    : ``fold_in(agent_key, 0)``                 anchor exchange
+            ``fold_in(agent_key, 1 + k)``             local step k
+
+Per-agent keys are folded from the agent's *global* index, so a sharded
+runtime can draw the whole ``[m]`` key array once server-side and hand
+each shard its slice — the draws match the fused single-host path
+exactly (`AsyncFederatedRunner._round_noise_keys`, same pattern as
+`_round_weights`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..core.types import SaddleField
+
+#: Dedicated stream constant for the gradient-noise fold.  Any fixed
+#: odd constant distinct from the other stream folds works; sharing the
+#: raw seed (or another subsystem's constant — see
+#: `sim.schedule.AVAILABILITY_STREAM`) is the aliasing bug this prevents.
+NOISE_STREAM = 0x5A_6D_A0  # "sagda-0"
+
+
+def noise_key(seed: int) -> jax.Array:
+    """Root key of the dedicated gradient-noise stream for `seed`."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), NOISE_STREAM)
+
+
+@dataclasses.dataclass(frozen=True)
+class NoiseModel:
+    """A seeded stochastic gradient oracle.
+
+    `grad(gfn, key, x, y, data)` returns a noisy `SaddleField` for ONE
+    agent; `gfn` is the exact oracle (`grad_xy(loss)`), `key` the
+    per-evaluation key from the noise-fold contract above.  Models must
+    be unbiased — ``E_key[grad(...)] == gfn(x, y, data)`` — which the
+    properties suite checks empirically.
+    """
+
+    def grad(
+        self, gfn: Callable, key: jax.Array, x: Any, y: Any, data: Any
+    ) -> SaddleField:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class GaussianNoise(NoiseModel):
+    """Additive oracle noise: ``g + sigma * N(0, I)`` per leaf — the
+    abstraction the stochastic-minimax analyses assume (bounded-variance
+    unbiased oracle).  The x and y components, and every leaf within
+    each, draw from disjoint folds of the eval key, so pytree layout
+    never correlates draws."""
+
+    sigma: float = 0.1
+
+    def grad(self, gfn, key, x, y, data):
+        g = gfn(x, y, data)
+        kx, ky = jax.random.split(key)
+
+        def perturb(k, tree):
+            leaves, treedef = jax.tree.flatten(tree)
+            noisy = [
+                u
+                + jnp.asarray(self.sigma, u.dtype)
+                * jax.random.normal(
+                    jax.random.fold_in(k, i), u.shape, u.dtype
+                )
+                for i, u in enumerate(leaves)
+            ]
+            return jax.tree.unflatten(treedef, noisy)
+
+        return SaddleField(gx=perturb(kx, g.gx), gy=perturb(ky, g.gy))
+
+
+@dataclasses.dataclass(frozen=True)
+class MinibatchNoise(NoiseModel):
+    """Subsampling noise: evaluate the exact oracle on a minibatch of
+    ``round(fraction * n)`` samples drawn WITH replacement along axis 0
+    of every data leaf (with-replacement keeps the estimator unbiased
+    for any loss that is a mean over samples).  Requires per-sample
+    agent data — problems that precompute sufficient statistics (the
+    quadratic game's ``G = A^T A``) have no sample axis left to draw
+    from; use `GaussianNoise` there."""
+
+    fraction: float = 0.5
+
+    def grad(self, gfn, key, x, y, data):
+        n = jax.tree.leaves(data)[0].shape[0]
+        b = max(1, int(round(self.fraction * n)))
+        idx = jax.random.randint(key, (b,), 0, n)
+        sub = jax.tree.map(lambda u: jnp.take(u, idx, axis=0), data)
+        return gfn(x, y, sub)
+
+
+def resolve_noise(
+    spec: Any = None, sigma: float | None = None, fraction: float | None = None
+) -> NoiseModel | None:
+    """Map a noise spec to a `NoiseModel` (or None = deterministic).
+
+    Accepts a `NoiseModel` instance (pass-through), ``None``/"none"
+    (deterministic — unless a scale knob is set, which implies the
+    matching model: CLI users can say just ``--noise-sigma 0.1``),
+    "gaussian" or "minibatch".
+    """
+    if isinstance(spec, NoiseModel):
+        return spec
+    if spec in (None, "", "none"):
+        if sigma:
+            return GaussianNoise(sigma=float(sigma))
+        if fraction:
+            return MinibatchNoise(fraction=float(fraction))
+        return None
+    if spec == "gaussian":
+        return GaussianNoise(
+            sigma=float(sigma) if sigma is not None else 0.1
+        )
+    if spec == "minibatch":
+        return MinibatchNoise(
+            fraction=float(fraction) if fraction is not None else 0.5
+        )
+    raise ValueError(
+        f"unknown noise model {spec!r} (none | gaussian | minibatch)"
+    )

@@ -8,7 +8,12 @@ on the host, and periodically checkpoints; the single-host counterpart of
 `repro.launch.train`.  Stateful strategies (client-sampling RNG,
 error-feedback buffers) have their state initialized lazily on the first
 round and threaded across rounds; build via `FederatedRunner.from_strategy`
-for that path.
+for that path.  Stochastic strategies (a non-None `strategy.noise`) ride
+the same state thread: `state["noise_key"]` is the dedicated noise
+stream (`fed.noise.noise_key`), advanced once per round inside the
+jitted round by `broadcast`, so checkpoint/resume replays the exact
+noise sequence and the async runner — which samples the same stream
+once server-side and slices per shard — consumes bit-identical draws.
 
 This runner executes each round as ONE jitted program on the default
 device: broadcast, exchange and K local steps lower together, so nothing

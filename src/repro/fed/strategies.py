@@ -17,7 +17,18 @@ Protocol consumed by the engine (all trace-time unless noted):
   correction_dtype   optional reduced storage dtype for the correction
   stateful           round carries persistent cross-round state
   init_state(x,y,m)  build that state (RNG keys, error-feedback buffers)
+  noise              optional `fed.noise.NoiseModel`: the local/anchor
+                     gradient oracles become seeded stochastic draws;
+                     None is the deterministic regime and elides every
+                     noise primitive at trace time (bitwise legacy
+                     rounds)
   sample_weights(state, m) -> (weights | None, state)   [traced]
+  sample_noise_keys(state, m) -> (keys | None, state)   [traced]
+                     one [m]-stacked per-agent key array per round from
+                     the DEDICATED noise stream (`fed.noise`), folded by
+                     global agent index so a sharded runtime can draw
+                     once server-side and slice (never aliases the
+                     sampling / compression "key" chains)
   transform_correction(cx, cy, state) -> (cx, cy, state) [traced]
                      cx/cy may come back as `transport.PackedTree` wire
                      payloads (objects with a `.decode()` hook) instead
@@ -44,6 +55,7 @@ import jax.numpy as jnp
 from ..core.engine import agent_where, fixed_size_mask, renormalized_weights
 from ..core.types import Pytree
 from ..kernels.compress_correction import compress_leaf
+from .noise import resolve_noise, noise_key as _noise_stream_key
 from .transport import (
     LeafSpec,
     PackedTree,
@@ -89,17 +101,52 @@ class CommStrategy:
     sync_every_step = False
     use_correction = False
     correction_dtype: Any = None
+    #: optional `fed.noise.NoiseModel` stochastic gradient oracle; None
+    #: is the deterministic regime (bitwise-pinned legacy rounds)
+    noise: Any = None
+    #: seed of the dedicated noise stream (`fed.noise.noise_key` — a
+    #: fold of NOISE_STREAM, never the raw PRNGKey(seed) the sampling /
+    #: compression state chains from, so equal seeds cannot alias)
+    noise_seed: int = 0
 
     @property
     def exact_correction(self) -> bool:
-        return True
+        # gradient noise voids the anchor-point cancellation: the
+        # tracked gbar and the first local step see different draws
+        return self.noise is None
 
     @property
     def stateful(self) -> bool:
-        return False
+        return self.noise is not None
+
+    def _noise_state(self) -> State:
+        """The noise stream's state entry (empty when deterministic) —
+        concrete strategies merge this into their own `init_state`."""
+        if self.noise is None:
+            return {}
+        return {"noise_key": _noise_stream_key(self.noise_seed)}
 
     def init_state(self, x: Pytree, y: Pytree, m: int) -> State:
-        return {}
+        return self._noise_state()
+
+    def sample_noise_keys(
+        self, state: State, m: int
+    ) -> Tuple[Optional[jax.Array], State]:
+        """Per-agent noise keys for ONE round: split the dedicated
+        stream once, then fold each agent's GLOBAL index into the round
+        subkey — a sharded runtime samples this once server-side and
+        hands each shard its slice, bit-identical to the fused path
+        (`fed.noise` documents the full fold tree).  None when the
+        strategy is deterministic."""
+        if self.noise is None:
+            return None, state
+        state = dict(state)
+        key, sub = jax.random.split(state["noise_key"])
+        state["noise_key"] = key
+        keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+            sub, jnp.arange(m)
+        )
+        return keys, state
 
     @property
     def sharded_state_keys(self) -> Tuple[str, ...]:
@@ -198,16 +245,23 @@ class PartialParticipation(GradientTracking):
     name = "partial_participation"
 
     @property
-    def stateful(self) -> bool:
+    def _sampling(self) -> bool:
         return self.participation < 1.0
 
+    @property
+    def stateful(self) -> bool:
+        return self._sampling or self.noise is not None
+
     def init_state(self, x, y, m):
-        if not self.stateful:
-            return {}
-        return {"key": jax.random.PRNGKey(self.seed)}
+        state = self._noise_state()
+        if self._sampling:
+            # the sampling chain stays the raw PRNGKey(seed) it always
+            # was (bitwise-pinned); only the noise stream is a fold
+            state["key"] = jax.random.PRNGKey(self.seed)
+        return state
 
     def sample_weights(self, state, m):
-        if not self.stateful:
+        if not self._sampling:
             return None, state
         S = max(1, int(round(self.participation * m)))
         if S >= m:
@@ -293,12 +347,17 @@ class _CorrectionCompressor(CommStrategy):
 
     @property
     def exact_correction(self) -> bool:
-        # any lossy transform voids the anchor-point cancellation
-        return not self._active
+        # any lossy transform (or gradient noise) voids the
+        # anchor-point cancellation
+        return not self._active and self.noise is None
+
+    @property
+    def _compressor_state(self) -> bool:
+        return self._active and (self.error_feedback or self._needs_rng)
 
     @property
     def stateful(self) -> bool:
-        return self._active and (self.error_feedback or self._needs_rng)
+        return self._compressor_state or self.noise is not None
 
     @property
     def sharded_state_keys(self) -> Tuple[str, ...]:
@@ -308,9 +367,9 @@ class _CorrectionCompressor(CommStrategy):
         return ()
 
     def init_state(self, x, y, m):
-        if not self.stateful:
-            return {}
-        state: State = {}
+        state: State = self._noise_state()
+        if not self._compressor_state:
+            return state
         if self.error_feedback:
             # buffers live in the correction dtype (the engine casts the
             # correction before transform_correction, so residuals carry
@@ -527,7 +586,58 @@ class QuantizedGT(_CorrectionCompressor):
         )
 
 
+@dataclasses.dataclass(frozen=True)
+class SAGDA(GradientTracking):
+    """Stochastic sampled averaged GDA (Yang et al. 2022, PAPERS.md):
+    the gradient-tracking round driven by a stochastic gradient oracle —
+    the anchor exchange AND every local step consume fresh draws from
+    the dedicated noise stream, while the tracking correction
+    c_i = gbar - g_i keeps the local drift centred on the (noisy) global
+    direction.
+
+    ``noise=None`` is the identity configuration: every noise primitive
+    is elided at trace time (not zeroed at run time), so the round is
+    BITWISE GradientTracking — tests/test_stochastic_parity.py pins it."""
+
+    name = "sagda"
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalSGDAPlus(CommStrategy):
+    """Local SGDA+ (Sharma et al. 2022, PAPERS.md): Local SGDA's
+    uncorrected K-step round with heavy-ball momentum on the local
+    update direction (`optim.momentum.heavy_ball`; velocities are
+    per-round, zero-initialized, so the round stays a pure function of
+    the broadcast iterate) and a stochastic gradient oracle.
+
+    ``momentum=0, noise=None`` is the identity configuration: the
+    momentum carry and every noise primitive are elided at trace time,
+    so the round is BITWISE LocalOnly."""
+
+    momentum: float = 0.0
+    name = "local_sgda_plus"
+
+    def bytes_per_round(self, x, y, num_local_steps):
+        # same cost model as LocalOnly: momentum state never leaves the
+        # agent, so one model up/download per round
+        return 2 * _payload_bytes((x, y))
+
+
 # ------------------------------------------------------------------ registry
+def _noise_kwargs(kw) -> dict:
+    """Shared noise knobs for the stochastic-capable aliases; empty when
+    the spec resolves to the deterministic regime, so identity configs
+    construct bit-identical strategy dataclasses."""
+    n = resolve_noise(
+        kw.get("noise"),
+        sigma=kw.get("noise_sigma"),
+        fraction=kw.get("noise_fraction"),
+    )
+    if n is None:
+        return {}
+    return {"noise": n, "noise_seed": kw.get("noise_seed", 0)}
+
+
 _ALIASES = {
     "gda": lambda kw: FullSync(),
     "sync_gda": lambda kw: FullSync(),
@@ -535,20 +645,32 @@ _ALIASES = {
     "local_sgda": lambda kw: LocalOnly(),
     "local_only": lambda kw: LocalOnly(),
     "fedgda_gt": lambda kw: GradientTracking(
-        correction_dtype=kw.get("correction_dtype")
+        correction_dtype=kw.get("correction_dtype"),
+        **_noise_kwargs(kw),
     ),
     "gradient_tracking": lambda kw: GradientTracking(
-        correction_dtype=kw.get("correction_dtype")
+        correction_dtype=kw.get("correction_dtype"),
+        **_noise_kwargs(kw),
+    ),
+    "sagda": lambda kw: SAGDA(
+        correction_dtype=kw.get("correction_dtype"),
+        **_noise_kwargs(kw),
+    ),
+    "local_sgda_plus": lambda kw: LocalSGDAPlus(
+        momentum=kw.get("momentum", 0.0),
+        **_noise_kwargs(kw),
     ),
     "partial_gt": lambda kw: PartialParticipation(
         participation=kw.get("participation", 0.5),
         correction_dtype=kw.get("correction_dtype"),
         seed=kw.get("seed", 0),
+        **_noise_kwargs(kw),
     ),
     "partial_participation": lambda kw: PartialParticipation(
         participation=kw.get("participation", 0.5),
         correction_dtype=kw.get("correction_dtype"),
         seed=kw.get("seed", 0),
+        **_noise_kwargs(kw),
     ),
     "compressed_gt": lambda kw: CompressedGT(
         compression_ratio=kw.get("compression_ratio", 0.1),
@@ -558,6 +680,7 @@ _ALIASES = {
         seed=kw.get("seed", 0),
         use_kernel=kw.get("use_kernel", False),
         wire_transport=kw.get("wire_transport", False),
+        **_noise_kwargs(kw),
     ),
     "quantized_gt": lambda kw: QuantizedGT(
         bits=kw.get("quantization_bits", 8),
@@ -568,6 +691,7 @@ _ALIASES = {
         seed=kw.get("seed", 0),
         use_kernel=kw.get("use_kernel", False),
         wire_transport=kw.get("wire_transport", False),
+        **_noise_kwargs(kw),
     ),
 }
 
@@ -577,9 +701,14 @@ def resolve_strategy(spec, **kwargs) -> CommStrategy:
 
     Accepts the legacy algorithm strings ("gda"/"sync_gda", "local_sgda",
     "fedgda_gt") plus the scenario-opening ones ("partial_gt",
-    "compressed_gt", "quantized_gt").  kwargs supply strategy
-    hyperparameters (correction_dtype, participation, compression_ratio,
-    quantization_bits, ...)."""
+    "compressed_gt", "quantized_gt") and the stochastic family ("sagda",
+    "local_sgda_plus").  kwargs supply strategy hyperparameters
+    (correction_dtype, participation, compression_ratio,
+    quantization_bits, noise / noise_sigma / noise_fraction /
+    noise_seed, momentum, ...).  The legacy strings ("gda",
+    "local_sgda", "full_sync") stay deterministic oracles and ignore
+    the noise knobs — the stochastic regime is opted into via the
+    strategies that define it."""
     if isinstance(spec, CommStrategy):
         return spec
     try:

@@ -99,6 +99,9 @@ def run_one(
     wire_transport=False,
     runtime="sync",
     population=None,
+    noise=None,
+    noise_sigma=None,
+    momentum=None,
 ) -> Dict:
     cfg = get_config(arch)
     if (
@@ -107,6 +110,9 @@ def run_one(
         or compression_ratio is not None
         or quantization_bits is not None
         or wire_transport
+        or noise is not None
+        or noise_sigma is not None
+        or momentum is not None
     ):
         import dataclasses as _dc
 
@@ -121,6 +127,12 @@ def run_one(
             repl["quantization_bits"] = quantization_bits
         if wire_transport:
             repl["wire_transport"] = True
+        if noise is not None:
+            repl["noise"] = noise
+        if noise_sigma is not None:
+            repl["noise_sigma"] = noise_sigma
+        if momentum is not None:
+            repl["momentum"] = momentum
         cfg = _dc.replace(cfg, **repl)
     if runtime != "sync":
         import dataclasses as _dc
@@ -161,6 +173,9 @@ def run_one(
         ),
         "runtime": cfg.runtime if shape.kind == "train" else None,
         "population": cfg.population if shape.kind == "train" else None,
+        "noise": cfg.noise if shape.kind == "train" else None,
+        "noise_sigma": cfg.noise_sigma if shape.kind == "train" else None,
+        "momentum": cfg.momentum if shape.kind == "train" else None,
         "sharding_variant": sharding_variant,
         "sequence_parallel": sequence_parallel,
         "h_shard": h_shard,
@@ -321,6 +336,18 @@ def main() -> None:
                     help="encode compressed corrections as packed "
                          "(value, index, scale) payloads inside the step "
                          "(payload bytes match bytes_per_round)")
+    ap.add_argument("--noise", default=None,
+                    choices=["none", "gaussian", "minibatch"],
+                    help="stochastic-gradient noise model for the "
+                         "stochastic strategies (sagda / local_sgda_plus "
+                         "and the noise-capable GT aliases); the round "
+                         "gains the per-round noise-key state input")
+    ap.add_argument("--noise-sigma", type=float, default=None,
+                    help="gaussian noise scale (implies --noise gaussian "
+                         "semantics only when --noise is set)")
+    ap.add_argument("--momentum", type=float, default=None,
+                    help="local heavy-ball momentum (local_sgda_plus); "
+                         "voids the fused-anchor shortcut")
     ap.add_argument("--runtime", default="sync", choices=["sync", "async"],
                     help="round schedule: sync lowers the fused round; "
                          "async additionally lowers + censuses the "
@@ -357,6 +384,13 @@ def main() -> None:
         and args.participation is None
     ):
         args.participation = 0.5
+    # same active-default rule for the stochastic family: `--algorithm
+    # sagda` without a noise spec would lower plain FedGDA-GT (SAGDA's
+    # zero-noise degeneration is bitwise GT) and tag it as sagda
+    if args.algorithm == "sagda" and args.noise is None:
+        args.noise = "gaussian"
+    if args.algorithm == "local_sgda_plus" and args.momentum is None:
+        args.momentum = 0.9
 
     os.makedirs(args.out, exist_ok=True)
     if args.all:
@@ -380,6 +414,12 @@ def main() -> None:
                 tag += f"__q{args.quantization_bits:d}"
             if args.wire_transport:
                 tag += "__wire"
+            if args.noise and args.noise != "none":
+                tag += f"__n{args.noise}"
+                if args.noise_sigma is not None:
+                    tag += f"{args.noise_sigma:g}"
+            if args.momentum is not None:
+                tag += f"__m{args.momentum:g}"
             if args.runtime != "sync":
                 tag += f"__{args.runtime}"
             if args.population and args.population != "stable":
@@ -415,6 +455,9 @@ def main() -> None:
                     wire_transport=args.wire_transport,
                     runtime=args.runtime,
                     population=args.population,
+                    noise=args.noise,
+                    noise_sigma=args.noise_sigma,
+                    momentum=args.momentum,
                 )
                 with open(path, "w") as f:
                     json.dump(rec, f, indent=1)

@@ -85,14 +85,25 @@ def train_input_specs(
 def _resolve_cfg_strategy(cfg: ModelConfig, algorithm) -> CommStrategy:
     """One owner for the cfg-knob -> strategy resolution, shared by the
     fused train step and the async gather-census step."""
-    return resolve_strategy(
-        algorithm,
+    kw = dict(
         correction_dtype=_CORRECTION_DTYPES.get(cfg.correction_dtype),
         participation=cfg.participation,
         compression_ratio=cfg.compression_ratio,
         quantization_bits=cfg.quantization_bits,
         wire_transport=cfg.wire_transport,
+        momentum=cfg.momentum,
     )
+    # gate on the cfg knob, not on sigma/fraction: resolve_noise treats a
+    # bare nonzero sigma as gaussian, and the defaults (0.1/0.5) would
+    # otherwise silently make every config stochastic
+    if cfg.noise != "none":
+        kw.update(
+            noise=cfg.noise,
+            noise_sigma=cfg.noise_sigma,
+            noise_fraction=cfg.noise_fraction,
+            noise_seed=cfg.noise_seed,
+        )
+    return resolve_strategy(algorithm, **kw)
 
 
 def build_train_step(

@@ -2,7 +2,8 @@
 
 Runs FedGDA-GT (or a baseline / scenario strategy — any
 `resolve_strategy` name: local_sgda, sync_gda, partial_gt, compressed_gt,
-quantized_gt) over one of the assigned architectures on whatever devices
+quantized_gt, and the stochastic family sagda / local_sgda_plus with
+`--noise` / `--momentum`) over one of the assigned architectures on whatever devices
 exist (a host mesh locally; the production mesh on a real cluster), with
 synthetic heterogeneous federated data, metrics and checkpointing.  The
 round comes from the phase-split engine (`make_round`), bitwise-identical
@@ -68,6 +69,21 @@ def main() -> None:
                     help="move compressed corrections as packed "
                          "(value, index, scale) payloads "
                          "(compressed_gt / quantized_gt)")
+    ap.add_argument("--noise", default=None,
+                    choices=["gaussian", "minibatch"],
+                    help="stochastic-gradient noise model (sagda / "
+                         "local_sgda_plus and the noise-capable GT "
+                         "aliases); unset = the deterministic oracle")
+    ap.add_argument("--noise-sigma", type=float, default=None,
+                    help="gaussian noise scale (default 0.1)")
+    ap.add_argument("--noise-fraction", type=float, default=None,
+                    help="minibatch subsampling fraction (default 0.5)")
+    ap.add_argument("--noise-seed", type=int, default=None,
+                    help="seed of the dedicated noise stream "
+                         "(fed.noise.noise_key — a dedicated fold, "
+                         "independent of sampling/compression RNG)")
+    ap.add_argument("--momentum", type=float, default=None,
+                    help="local heavy-ball momentum (local_sgda_plus)")
     ap.add_argument("--runtime", default="sync", choices=["sync", "async"],
                     help="sync: one fused round program per step; "
                          "async: per-agent-shard phase dispatch "
@@ -105,6 +121,11 @@ def main() -> None:
         "compression_ratio": args.compression_ratio,
         "quantization_bits": args.quantization_bits,
         "wire_transport": args.wire_transport or None,
+        "noise": args.noise,
+        "noise_sigma": args.noise_sigma,
+        "noise_fraction": args.noise_fraction,
+        "noise_seed": args.noise_seed,
+        "momentum": args.momentum,
     }
     strategy = resolve_strategy(
         args.algorithm, **{k: v for k, v in knobs.items() if v is not None}

@@ -1,8 +1,9 @@
 from .schedules import constant_schedule, diminishing_schedule
-from .momentum import make_momentum_fedgda_gt_round
+from .momentum import heavy_ball, make_momentum_fedgda_gt_round
 
 __all__ = [
     "constant_schedule",
     "diminishing_schedule",
+    "heavy_ball",
     "make_momentum_fedgda_gt_round",
 ]

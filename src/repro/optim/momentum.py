@@ -1,10 +1,18 @@
-"""Beyond-paper variant: heavy-ball momentum on the *outer* (server) update.
+"""Heavy-ball momentum: the shared velocity primitive + the server variant.
 
-The paper's Algorithm 2 aggregates by plain averaging.  Server momentum is a
-standard FL acceleration (e.g. FedAvgM); here it is applied to the round
-increment while keeping the inner GT loop untouched, so Theorem 1's
-inner-loop analysis still applies round-wise.  OFF by default everywhere;
-benchmarked in EXPERIMENTS §Perf as a beyond-paper optimization.
+`heavy_ball` is the one leafwise recurrence ``v <- beta * v + g`` both
+momentum schedules in the codebase run on:
+
+  * the INNER (local) loop of Local SGDA+ (Sharma et al. 2022) — the
+    engine's momentum local steps (`core.engine.make_phases` imports it
+    lazily, only when `strategy.momentum` is nonzero, so the
+    momentum-free trace carries no velocity primitives and stays
+    bitwise-pinned);
+  * the OUTER (server) update below — a beyond-paper FedAvgM-style
+    acceleration applied to the round increment while keeping the inner
+    GT loop untouched, so Theorem 1's inner-loop analysis still applies
+    round-wise.  OFF by default everywhere; benchmarked in EXPERIMENTS
+    §Perf as a beyond-paper optimization.
 """
 from __future__ import annotations
 
@@ -15,6 +23,14 @@ import jax.numpy as jnp
 
 from ..core.fedgda_gt import make_fedgda_gt_round
 from ..core.types import LossFn, ProjFn, Pytree, identity_proj
+
+
+def heavy_ball(v: Pytree, g: Pytree, beta: float) -> Pytree:
+    """One leafwise heavy-ball velocity update: ``v <- beta * v + g``.
+
+    Pure pytree algebra with no core imports beyond types, so the engine
+    can pull it in lazily without creating an import cycle."""
+    return jax.tree.map(lambda vv, gg: beta * vv + gg, v, g)
 
 
 def make_momentum_fedgda_gt_round(
@@ -38,8 +54,8 @@ def make_momentum_fedgda_gt_round(
         x1, y1 = base(x, y, agent_data)
         dx = jax.tree.map(jnp.subtract, x1, x)
         dy = jax.tree.map(jnp.subtract, y1, y)
-        vx = jax.tree.map(lambda v, d: beta * v + d, vx, dx)
-        vy = jax.tree.map(lambda v, d: beta * v + d, vy, dy)
+        vx = heavy_ball(vx, dx, beta)
+        vy = heavy_ball(vy, dy, beta)
         x2 = proj_x(jax.tree.map(jnp.add, x, vx))
         y2 = proj_y(jax.tree.map(jnp.add, y, vy))
         return (x2, y2, (vx, vy))

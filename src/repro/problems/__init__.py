@@ -1,6 +1,10 @@
 """Concrete federated minimax problems (the paper's experiments + the
 adversarial-LM instantiation used by the assigned architectures)."""
-from .quadratic import make_quadratic_problem, quadratic_minimax_point
+from .quadratic import (
+    make_dirichlet_quadratic_problem,
+    make_quadratic_problem,
+    quadratic_minimax_point,
+)
 from .robust_regression import (
     make_robust_regression_problem,
     robust_loss,
@@ -13,6 +17,7 @@ from .agnostic import (
 )
 
 __all__ = [
+    "make_dirichlet_quadratic_problem",
     "make_quadratic_problem",
     "quadratic_minimax_point",
     "make_robust_regression_problem",

@@ -52,6 +52,75 @@ def make_quadratic_problem(
     )
 
 
+def _sufficient_stats(A, b):
+    """Per-agent per-sample-MEAN sufficient statistics: G_i = A_i^T A_i / n,
+    Ab_i = A_i^T b_i / n.  The 1/n makes the loss an empirical risk (mean
+    over samples), so train and held-out risks are on the same scale and
+    conditioning does not grow with the sample count."""
+    n = A.shape[1]
+    G = jnp.einsum("mnd,mne->mde", A, A) / n
+    Ab = jnp.einsum("mnd,mn->md", A, b) / n
+    return G, Ab
+
+
+def make_dirichlet_quadratic_problem(
+    key: jax.Array,
+    dim: int = 20,
+    num_samples: int = 100,
+    num_agents: int = 10,
+    alpha: float = 1.0,
+    num_components: int = 4,
+    test_samples: int = 0,
+    dtype=jnp.float64,
+):
+    """Dirichlet-heterogeneous quadratic game with a held-out split.
+
+    The population has `num_components` latent regression targets
+    theta_c; agent i draws its mixture over components from
+    Dirichlet(alpha) (`data.synthetic.dirichlet_partition_weights`),
+    then each of its samples picks a component from that mixture:
+
+        row A ~ N(0, I);  b = A theta_c + eps,  eps ~ N(0, 0.25).
+
+    alpha -> 0 gives near-one-hot agents (maximal heterogeneity),
+    alpha -> inf the iid limit; unlike `make_quadratic_problem`, A's
+    row scale is agent-independent so alpha is the ONLY heterogeneity
+    dial.  Sufficient statistics are per-sample MEANS (see
+    `_sufficient_stats`), so the train risk and the held-out risk of
+    `test_data` are directly comparable — that difference is the
+    generalization gap (`core.generalization.generalization_gap`).
+
+    Returns (problem, test_data, weights); `test_data` is None when
+    `test_samples == 0`, `weights` is the [m, C] mixture matrix."""
+    from ..data.synthetic import dirichlet_partition_weights
+
+    k_w, k_theta, k_draw = jax.random.split(key, 3)
+    weights = dirichlet_partition_weights(
+        k_w, num_agents, num_components, alpha, dtype=dtype
+    )
+    theta = jax.random.normal(k_theta, (num_components, dim), dtype=dtype)
+
+    def sample_split(k, n):
+        k_c, k_A, k_eps = jax.random.split(k, 3)
+        # [m, n] component index per sample, drawn from each agent's row
+        comp = jax.vmap(
+            lambda kk, w: jax.random.categorical(kk, jnp.log(w), shape=(n,))
+        )(jax.random.split(k_c, num_agents), weights)
+        A = jax.random.normal(k_A, (num_agents, n, dim), dtype=dtype)
+        eps = 0.5 * jax.random.normal(k_eps, (num_agents, n), dtype=dtype)
+        b = jnp.einsum("mnd,mnd->mn", A, theta[comp]) + eps
+        G, Ab = _sufficient_stats(A, b)
+        return {"G": G, "Ab": Ab}
+
+    k_train, k_test = jax.random.split(k_draw)
+    agent_data = sample_split(k_train, num_samples)
+    test_data = sample_split(k_test, test_samples) if test_samples else None
+    problem = MinimaxProblem(
+        loss=_loss, agent_data=agent_data, num_agents=num_agents
+    )
+    return problem, test_data, weights
+
+
 def quadratic_minimax_point(problem: MinimaxProblem) -> Tuple[jax.Array, jax.Array]:
     """Closed-form minimax point:
     grad_x f = Gbar x + 2 Abbar = 0  ->  x* = -2 Gbar^{-1} Abbar

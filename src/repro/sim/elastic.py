@@ -59,7 +59,9 @@ from ..core.engine import (
     RoundPhases,
     agent_mean,
     agent_where,
+    make_noise_vgrad,
     make_phases,
+    noise_eval_keys,
     tracking_corrections,
 )
 from ..core.types import LossFn, Pytree, grad_xy, identity_proj
@@ -72,7 +74,10 @@ def init_tracker(
     """The tracker table at round 0: every agent's anchor gradient at
     the initial server iterate (x0, y0) — i.e. every agent starts
     freshly re-anchored, exactly like a joiner does later.  Strategies
-    without corrections carry no table ({})."""
+    without corrections carry no table ({}).  Deliberately NOISELESS
+    even for stochastic strategies: the table seeds round 0 before any
+    round key is drawn, and the async runner's lazy tracker init
+    (`AsyncFederatedRunner._init_tracker`) matches this exact oracle."""
     if not getattr(strategy, "use_correction", False):
         return {}
     g = jax.vmap(grad_xy(loss), in_axes=(None, None, 0))(x, y, agent_data)
@@ -203,7 +208,11 @@ def make_elastic_round(
     )
     use_corr = bool(getattr(strategy, "use_correction", False))
     cdt = getattr(strategy, "correction_dtype", None)
-    vgrad = jax.vmap(grad_xy(loss), in_axes=(0, 0, 0))
+    noise = getattr(strategy, "noise", None)
+    momentum = float(getattr(strategy, "momentum", 0.0) or 0.0)
+    gfn = grad_xy(loss)
+    vgrad = jax.vmap(gfn, in_axes=(0, 0, 0))
+    nvgrad = make_noise_vgrad(gfn, noise) if noise is not None else None
 
     def elastic_round(x, y, agent_data, state, tracker, weights, budgets,
                       active, prev_active):
@@ -213,8 +222,19 @@ def make_elastic_round(
         )
         if use_corr:
             # the anchor gradients at the CURRENT broadcast iterate feed
-            # the shared membership-aware exchange (`tracker_exchange`)
-            g = vgrad(rs.xs, rs.ys, agent_data)
+            # the shared membership-aware exchange (`tracker_exchange`);
+            # a stochastic strategy draws them at eval index 0 of the
+            # per-round noise keys `broadcast` just sampled (absent
+            # agents' noisy rows are discarded by the active mask in
+            # favor of their stale tracker rows, exactly like the
+            # deterministic path)
+            if noise is None:
+                g = vgrad(rs.xs, rs.ys, agent_data)
+            else:
+                g = nvgrad(
+                    noise_eval_keys(rs.noise_keys, 0),
+                    rs.xs, rs.ys, agent_data,
+                )
             (
                 cx, cy, gbar_x, gbar_y, state, tab_x, tab_y
             ) = tracker_exchange(
@@ -223,8 +243,8 @@ def make_elastic_round(
             )
             rs = dataclasses.replace(
                 rs, cx=cx, cy=cy, gbar_x=gbar_x, gbar_y=gbar_y,
-                fused=bool(strategy.exact_correction), state=state,
-                active=active,
+                fused=bool(strategy.exact_correction) and not momentum,
+                state=state, active=active,
             )
             tracker = {"gx": tab_x, "gy": tab_y}
         rs = phases.local_steps(rs, agent_data)

@@ -45,6 +45,12 @@ def pytest_configure(config):
         "sim: client-population / elastic-schedule suites (repro.sim); "
         "select with -m sim",
     )
+    config.addinivalue_line(
+        "markers",
+        "stochastic: stochastic-gradient family suites (fed.noise, "
+        "SAGDA / Local SGDA+, noise-fold contract); select with "
+        "-m stochastic",
+    )
 
 
 @pytest.fixture(scope="session")

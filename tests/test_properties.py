@@ -381,3 +381,142 @@ class TestCommAccounting:
         assert gt == 2 * ls  # exactly 2x (paper's cost model)
         if K > 2:
             assert gda > gt  # sync GDA communicates every inner step
+
+
+# ---------------------------------------------- stochastic noise models
+class TestNoiseModels:
+    """fed.noise: unbiasedness with the configured spread, and the
+    independence of the noise stream from the strategies' own RNG."""
+
+    @given(
+        seed=st.integers(0, 2**16),
+        sigma=st.floats(0.05, 0.5, allow_nan=False),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_gaussian_noise_unbiased_with_configured_sigma(self, seed, sigma):
+        from repro.core import grad_xy
+        from repro.fed.noise import GaussianNoise
+
+        d = 4
+        loss = lambda x, y, data: 0.5 * x @ x - 0.5 * y @ y
+        gfn = grad_xy(loss)
+        x = jnp.arange(1.0, d + 1.0)
+        y = -x
+        g0 = gfn(x, y, {})
+        noise = GaussianNoise(sigma=sigma)
+        n_mc = 2048
+        keys = jax.random.split(jax.random.PRNGKey(seed), n_mc)
+        gs = jax.vmap(lambda k: noise.grad(gfn, k, x, y, {}))(keys)
+        tol = 8.0 * sigma / np.sqrt(n_mc)
+        for u, u0 in ((gs.gx, g0.gx), (gs.gy, g0.gy)):
+            mean = np.asarray(jnp.mean(u, axis=0))
+            np.testing.assert_allclose(mean, np.asarray(u0), atol=tol)
+            std = float(jnp.std(u, axis=0).mean())
+            assert abs(std - sigma) < 0.2 * sigma
+
+    @given(seed=st.integers(0, 2**16))
+    @settings(max_examples=10, deadline=None)
+    def test_minibatch_noise_unbiased_for_mean_losses(self, seed):
+        from repro.core import grad_xy
+        from repro.fed.noise import MinibatchNoise
+
+        n, d = 32, 3
+        a = jax.random.normal(jax.random.PRNGKey(42), (n, d))
+        data = {"a": a}
+        # grad_x of mean_i <a_i, x> is mean(a) regardless of x
+        loss = lambda x, y, data: jnp.mean(data["a"] @ x) - 0.5 * y @ y
+        gfn = grad_xy(loss)
+        x, y = jnp.ones(d), jnp.ones(d)
+        noise = MinibatchNoise(fraction=0.25)
+        n_mc = 2048
+        keys = jax.random.split(jax.random.PRNGKey(seed), n_mc)
+        gs = jax.vmap(lambda k: noise.grad(gfn, k, x, y, data))(keys)
+        mean = np.asarray(jnp.mean(gs.gx, axis=0))
+        # std of an 8-sample mean of unit normals ~ 0.35; 2048 MC reps
+        tol = 8.0 * float(jnp.std(a)) / np.sqrt(8) / np.sqrt(n_mc)
+        np.testing.assert_allclose(mean, np.asarray(jnp.mean(a, axis=0)),
+                                   atol=tol)
+        # y is untouched by subsampling (no sample axis in its grad)
+        np.testing.assert_array_equal(
+            np.asarray(gs.gy[0]), np.asarray(gfn(x, y, data).gy)
+        )
+
+    @given(
+        seed=st.integers(0, 2**16),
+        participation=st.floats(0.2, 0.9, allow_nan=False),
+    )
+    @settings(**SETTINGS)
+    def test_sampling_draws_independent_of_noise_toggle(
+        self, seed, participation
+    ):
+        """The fold-tree contract as a property: toggling the noise
+        model on a sampling strategy never changes its participation
+        draws, for ANY seed."""
+        from repro.fed import PartialParticipation
+        from repro.fed.noise import GaussianNoise
+
+        m = 8
+        x = jnp.ones(4)
+        det = PartialParticipation(participation=participation, seed=seed)
+        sto = PartialParticipation(
+            participation=participation, seed=seed,
+            noise=GaussianNoise(sigma=0.1),
+        )
+        s_det = det.init_state(x, x, m)
+        s_sto = sto.init_state(x, x, m)
+        for _ in range(3):
+            w_det, s_det = det.sample_weights(s_det, m)
+            w_sto, s_sto = sto.sample_weights(s_sto, m)
+            np.testing.assert_array_equal(
+                np.asarray(w_det), np.asarray(w_sto)
+            )
+
+
+# ------------------------------------------------ Dirichlet heterogeneity
+class TestDirichletPartitions:
+    @given(
+        seed=st.integers(0, 2**16),
+        m=st.integers(2, 12),
+        c=st.integers(2, 8),
+        alpha=st.floats(0.05, 50.0, allow_nan=False),
+    )
+    @settings(**SETTINGS)
+    def test_weights_are_a_distribution(self, seed, m, c, alpha):
+        from repro.data import dirichlet_partition_weights
+
+        w = dirichlet_partition_weights(jax.random.PRNGKey(seed), m, c, alpha)
+        assert w.shape == (m, c)
+        assert (np.asarray(w) >= 0).all()
+        np.testing.assert_allclose(
+            np.asarray(jnp.sum(w, axis=1)), np.ones(m), rtol=1e-9
+        )
+
+    @given(seed=st.integers(0, 2**16))
+    @settings(**SETTINGS)
+    def test_heterogeneity_monotone_in_alpha(self, seed):
+        """Widely separated concentrations must order the heterogeneity
+        index: near-one-hot agents (alpha -> 0) are farther from the
+        population mixture than near-uniform ones (alpha -> inf)."""
+        from repro.data import dirichlet_partition_weights, heterogeneity_index
+
+        key = jax.random.PRNGKey(seed)
+        m, c = 12, 4
+        het_lo = heterogeneity_index(
+            dirichlet_partition_weights(key, m, c, 0.05)
+        )
+        het_hi = heterogeneity_index(
+            dirichlet_partition_weights(key, m, c, 50.0)
+        )
+        assert float(het_lo) > float(het_hi)
+
+    def test_index_extremes(self):
+        from repro.data import heterogeneity_index
+
+        uniform = jnp.full((6, 4), 0.25)
+        assert float(heterogeneity_index(uniform)) == 0.0
+        onehot = jnp.eye(4)
+        # distinct one-hot agents: TV distance to the uniform mixture
+        # is (C-1)/C
+        np.testing.assert_allclose(
+            float(heterogeneity_index(onehot)), 0.75, rtol=1e-12
+        )

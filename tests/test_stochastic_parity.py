@@ -1,0 +1,315 @@
+"""Stochastic-family differential harness (PR 6 acceptance contracts).
+
+  * Zero-noise degeneration is BITWISE: `SAGDA()` runs the identical
+    trace as `GradientTracking()` (FedGDA-GT), and
+    `LocalSGDAPlus(momentum=0)` the identical trace as `LocalOnly()` —
+    the stochastic layer must be trace-time elided, not zeroed at run
+    time.
+  * The noise-fold contract: noise draws come from a DEDICATED stream
+    (`fed.noise.noise_key` — `fold_in(PRNGKey(seed), NOISE_STREAM)`),
+    which can never alias the client-sampling / compression RNG
+    (`PRNGKey(seed)` directly) or the population availability stream.
+    Toggling noise on a strategy must leave its OTHER random draws
+    (participation sampling, stochastic quantization) bitwise unchanged.
+  * Sync/async runtime parity: both runtimes consume the same
+    server-side noise stream, so stochastic iterates agree to fp
+    tolerance on the 8-device emulation (multihost-marked).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_round
+from repro.fed import (
+    CompressedGT,
+    GradientTracking,
+    LocalOnly,
+    LocalSGDAPlus,
+    PartialParticipation,
+    QuantizedGT,
+    SAGDA,
+)
+from repro.fed.noise import (
+    NOISE_STREAM,
+    GaussianNoise,
+    MinibatchNoise,
+    noise_key,
+    resolve_noise,
+)
+from repro.problems import make_quadratic_problem
+from repro.sim import AVAILABILITY_STREAM
+
+pytestmark = pytest.mark.stochastic
+
+ETA = 1e-4
+ROUNDS = 6  # acceptance: bitwise over >= 5 rounds
+
+
+def _problem(rng, m=6, dim=10):
+    return make_quadratic_problem(rng, dim=dim, num_samples=40, num_agents=m)
+
+
+def _iterate(rnd, x, y, data, rounds=ROUNDS):
+    out = []
+    for _ in range(rounds):
+        x, y = rnd(x, y, data)
+        out.append((np.asarray(x), np.asarray(y)))
+    return out
+
+
+def _iterate_stateful(rnd, x, y, data, state, rounds=ROUNDS):
+    out = []
+    for _ in range(rounds):
+        x, y, state = rnd(x, y, data, state)
+        out.append((np.asarray(x), np.asarray(y)))
+    return out, state
+
+
+def _assert_bitwise(trace_a, trace_b):
+    for t, ((xa, ya), (xb, yb)) in enumerate(zip(trace_a, trace_b)):
+        assert (xa == xb).all(), f"x diverges at round {t}"
+        assert (ya == yb).all(), f"y diverges at round {t}"
+
+
+# ------------------------------------------- zero-noise degeneration (bitwise)
+class TestZeroNoiseDegeneration:
+    @pytest.mark.parametrize("K", [1, 2, 5])
+    def test_sagda_bitwise_equals_gradient_tracking(self, rng, K):
+        """SAGDA without noise IS FedGDA-GT — same engine trace, fused
+        anchor shortcut included."""
+        prob = _problem(rng)
+        sagda = jax.jit(make_round(prob.loss, SAGDA(), K, ETA))
+        gt = jax.jit(make_round(prob.loss, GradientTracking(), K, ETA))
+        x, y = jnp.ones(10), -jnp.ones(10)
+        _assert_bitwise(
+            _iterate(sagda, x, y, prob.agent_data),
+            _iterate(gt, x, y, prob.agent_data),
+        )
+
+    @pytest.mark.parametrize("K", [1, 2, 5])
+    def test_local_sgda_plus_zero_momentum_bitwise_equals_local_only(
+        self, rng, K
+    ):
+        """momentum=0 must not introduce velocity primitives into the
+        trace (a 0-scaled velocity would already break bitwise via
+        -0.0 and fma re-association)."""
+        prob = _problem(rng)
+        lsp = jax.jit(
+            make_round(prob.loss, LocalSGDAPlus(), K, ETA, 2 * ETA)
+        )
+        lo = jax.jit(make_round(prob.loss, LocalOnly(), K, ETA, 2 * ETA))
+        x, y = jnp.ones(10), -jnp.ones(10)
+        _assert_bitwise(
+            _iterate(lsp, x, y, prob.agent_data),
+            _iterate(lo, x, y, prob.agent_data),
+        )
+
+    def test_zero_noise_strategies_are_stateless(self):
+        assert not SAGDA().stateful
+        assert not LocalSGDAPlus().stateful
+        assert not LocalSGDAPlus(momentum=0.9).stateful
+        assert SAGDA(noise=GaussianNoise(sigma=0.1)).stateful
+        assert LocalSGDAPlus(noise=MinibatchNoise(fraction=0.5)).stateful
+
+
+# ------------------------------------------------- noise-fold contract
+class TestNoiseFoldContract:
+    def test_streams_do_not_alias(self):
+        """The three seeded subsystems each fold a distinct stream
+        constant, so equal integer seeds can never produce colliding
+        key sequences across subsystems."""
+        assert NOISE_STREAM != AVAILABILITY_STREAM
+        # the strategy-RNG convention is PRNGKey(seed) directly
+        k_noise = noise_key(0)
+        k_strategy = jax.random.PRNGKey(0)
+        assert not np.array_equal(
+            jax.random.key_data(k_noise), jax.random.key_data(k_strategy)
+        )
+
+    def test_state_layouts_pin_the_fold_tree(self):
+        """Regression pin: which strategy carries which RNG state.  A
+        refactor that starts reusing one key for both draws changes
+        these layouts and must fail here."""
+        x = jnp.ones(4)
+        noise = GaussianNoise(sigma=0.1)
+        assert set(SAGDA(noise=noise).init_state(x, x, 3)) == {"noise_key"}
+        pp = PartialParticipation(participation=0.5, seed=0, noise=noise)
+        st = pp.init_state(x, x, 3)
+        assert set(st) == {"key", "noise_key"}
+        # equal seeds, distinct folds => distinct keys
+        assert not np.array_equal(
+            jax.random.key_data(st["key"]),
+            jax.random.key_data(st["noise_key"]),
+        )
+        # top-k compression has no RNG of its own: EF buffers + the
+        # noise stream only
+        cg = CompressedGT(compression_ratio=0.5, noise=noise, seed=0)
+        assert set(cg.init_state(x, x, 3)) == {"ex", "ey", "noise_key"}
+        # stochastic rounding adds its own key next to the noise stream
+        qg = QuantizedGT(bits=4, noise=noise, seed=0)
+        assert set(qg.init_state(x, x, 3)) == {"ex", "ey", "key", "noise_key"}
+        st = qg.init_state(x, x, 3)
+        assert not np.array_equal(
+            jax.random.key_data(st["key"]),
+            jax.random.key_data(st["noise_key"]),
+        )
+
+    def test_participation_draws_unchanged_by_noise_toggle(self):
+        """Client-sampling weights must be bitwise identical with and
+        without noise — the noise stream is additive state, not a
+        reindexing of the sampling stream."""
+        x = jnp.ones(4)
+        m = 8
+        det = PartialParticipation(participation=0.5, seed=3)
+        sto = PartialParticipation(
+            participation=0.5, seed=3, noise=GaussianNoise(sigma=0.1)
+        )
+        s_det = det.init_state(x, x, m)
+        s_sto = sto.init_state(x, x, m)
+        for _ in range(4):
+            w_det, s_det = det.sample_weights(s_det, m)
+            w_sto, s_sto = sto.sample_weights(s_sto, m)
+            assert (np.asarray(w_det) == np.asarray(w_sto)).all()
+
+    def test_quantization_draws_unchanged_by_noise_toggle(self):
+        """Stochastic-rounding corrections must be bitwise identical
+        with and without noise (same seed)."""
+        m, d = 4, 12
+        cx = jax.random.normal(jax.random.PRNGKey(5), (m, d))
+        cy = jax.random.normal(jax.random.PRNGKey(6), (m, d))
+        det = QuantizedGT(bits=4, seed=1)
+        sto = QuantizedGT(bits=4, seed=1, noise=GaussianNoise(sigma=0.1))
+        s_det = det.init_state(cx[0], cy[0], m)
+        s_sto = sto.init_state(cx[0], cy[0], m)
+        qx_d, qy_d, s_det = det.transform_correction(cx, cy, s_det)
+        qx_s, qy_s, s_sto = sto.transform_correction(cx, cy, s_sto)
+        for a, b in ((qx_d, qx_s), (qy_d, qy_s)):
+            if hasattr(a, "decode"):
+                a, b = a.decode(), b.decode()
+            assert (np.asarray(a) == np.asarray(b)).all()
+        assert np.array_equal(
+            jax.random.key_data(s_det["key"]),
+            jax.random.key_data(s_sto["key"]),
+        )
+
+    def test_noise_key_advances_every_round(self, rng):
+        prob = _problem(rng)
+        strat = SAGDA(noise=GaussianNoise(sigma=0.1), noise_seed=0)
+        rnd = jax.jit(
+            make_round(prob.loss, strat, 2, ETA, explicit_state=True)
+        )
+        x, y = jnp.ones(10), -jnp.ones(10)
+        state = strat.init_state(x, y, prob.num_agents)
+        k0 = np.asarray(jax.random.key_data(state["noise_key"]))
+        _, state = _iterate_stateful(
+            rnd, x, y, prob.agent_data, state, rounds=1
+        )
+        k1 = np.asarray(jax.random.key_data(state["noise_key"]))
+        assert not np.array_equal(k0, k1)
+
+    def test_resolve_noise_gating(self):
+        assert resolve_noise(None) is None
+        assert resolve_noise("none") is None
+        assert isinstance(resolve_noise("gaussian"), GaussianNoise)
+        assert isinstance(resolve_noise("minibatch"), MinibatchNoise)
+        n = GaussianNoise(sigma=0.3)
+        assert resolve_noise(n) is n
+        with pytest.raises(ValueError):
+            resolve_noise("laplace")
+
+
+# ---------------------------------------------- stochastic rounds (seeded)
+class TestStochasticDeterminism:
+    def _trace(self, prob, strat, rounds=3):
+        rnd = jax.jit(
+            make_round(prob.loss, strat, 2, ETA, explicit_state=True)
+        )
+        x, y = jnp.ones(10), -jnp.ones(10)
+        state = strat.init_state(x, y, prob.num_agents)
+        trace, _ = _iterate_stateful(
+            rnd, x, y, prob.agent_data, state, rounds=rounds
+        )
+        return trace
+
+    def test_same_seed_is_bitwise_reproducible(self, rng):
+        prob = _problem(rng)
+        strat = SAGDA(noise=GaussianNoise(sigma=0.1), noise_seed=7)
+        _assert_bitwise(self._trace(prob, strat), self._trace(prob, strat))
+
+    def test_noise_seed_changes_the_draws(self, rng):
+        prob = _problem(rng)
+        a = self._trace(prob, SAGDA(noise=GaussianNoise(0.1), noise_seed=0))
+        b = self._trace(prob, SAGDA(noise=GaussianNoise(0.1), noise_seed=1))
+        assert not np.array_equal(a[0][0], b[0][0])
+
+    def test_noisy_round_differs_from_deterministic_and_stays_finite(
+        self, rng
+    ):
+        prob = _problem(rng)
+        det = self._trace(prob, SAGDA())
+        sto = self._trace(prob, SAGDA(noise=GaussianNoise(sigma=0.1)))
+        assert not np.array_equal(det[-1][0], sto[-1][0])
+        assert np.isfinite(sto[-1][0]).all() and np.isfinite(sto[-1][1]).all()
+
+    def test_momentum_changes_the_trace_without_noise(self, rng):
+        prob = _problem(rng)
+        x, y = jnp.ones(10), -jnp.ones(10)
+        lsp = jax.jit(
+            make_round(
+                prob.loss, LocalSGDAPlus(momentum=0.9), 4, ETA, 2 * ETA
+            )
+        )
+        lo = jax.jit(make_round(prob.loss, LocalOnly(), 4, ETA, 2 * ETA))
+        t_lsp = _iterate(lsp, x, y, prob.agent_data, rounds=2)
+        t_lo = _iterate(lo, x, y, prob.agent_data, rounds=2)
+        assert not np.array_equal(t_lsp[-1][0], t_lo[-1][0])
+        assert np.isfinite(t_lsp[-1][0]).all()
+
+
+# ------------------------------------- sync vs async noise-stream parity
+@pytest.mark.multihost
+class TestSyncAsyncNoiseParity:
+    M, DIM, K = 8, 16, 4
+
+    @pytest.fixture(scope="class")
+    def prob(self):
+        return make_quadratic_problem(
+            jax.random.PRNGKey(0), dim=self.DIM, num_samples=60,
+            num_agents=self.M,
+        )
+
+    @pytest.mark.parametrize(
+        "strategy",
+        [
+            SAGDA(noise=GaussianNoise(sigma=0.1), noise_seed=3),
+            LocalSGDAPlus(
+                momentum=0.9, noise=GaussianNoise(sigma=0.1), noise_seed=3
+            ),
+        ],
+        ids=["sagda", "local_sgda_plus"],
+    )
+    def test_async_matches_sync_noise_stream(
+        self, prob, strategy, fed_devices
+    ):
+        """Both runtimes draw from the one server-side noise stream
+        (per-agent keys folded by GLOBAL agent index), so the stochastic
+        iterates agree like the deterministic ones do."""
+        from repro.fed import AsyncFederatedRunner, FederatedRunner
+
+        x0, y0 = jnp.ones(self.DIM), -jnp.ones(self.DIM)
+        sync = FederatedRunner.from_strategy(
+            prob.loss, strategy, prob.agent_data, self.K, 1e-3
+        )
+        xs, ys = sync.run(x0, y0, ROUNDS)
+        runner = AsyncFederatedRunner(
+            prob.loss, strategy, prob.agent_data, self.K, 1e-3,
+            devices=fed_devices,
+        )
+        xa, ya = runner.run(x0, y0, ROUNDS)
+        np.testing.assert_allclose(
+            np.asarray(xs), np.asarray(xa), rtol=1e-9, atol=1e-12
+        )
+        np.testing.assert_allclose(
+            np.asarray(ys), np.asarray(ya), rtol=1e-9, atol=1e-12
+        )
