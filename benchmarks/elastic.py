@@ -21,6 +21,16 @@ non-zero exit if the stable-scenario elastic path needs > 5% more
 rounds to eps than the seed runner.  Stable schedules are degenerate by
 construction (static-full => the runner takes its bitwise legacy path),
 so any drift here means the degeneracy fast-path broke.
+
+`--population mega` exercises the O(active) sparse path at registry
+scale: the `mega` preset (1e6 agents, 256 active per round, 1024 pods)
+driven by `sim.sparse.SparseElasticEngine` over a `SyntheticDataSource`
+(per-agent data synthesized from the global id — the registry's data
+never exists as one array).  `--check-pods` is its memory gate
+(`elastic_pods` in benchmarks/run.py): the 1e6-agent run's peak host +
+device memory must stay within a constant factor of a 100x-smaller
+registry with the SAME active set — i.e. the peak scales with
+O(active + pods), not with m.
 """
 from __future__ import annotations
 
@@ -174,6 +184,134 @@ def check(tol: float = CHECK_TOL) -> int:
     return bad
 
 
+# ------------------------------------------------- mega: O(active) at 1e6
+MEGA_DIM, MEGA_SAMPLES, MEGA_T = 8, 8, 4
+MEGA_MEM_FACTOR = 1.5  # peak(1e6) must stay within this factor of the
+MEGA_MEM_SLACK = 24 * 2**20  # 100x-smaller registry's peak, + slack
+
+
+def _mega_loss(x, y, data):
+    # the Section-5.1 quadratic loss over per-agent sufficient stats
+    # (same as problems.quadratic; restated so the synthesized rows and
+    # the loss agree on the data layout)
+    G, Ab = data["G"], data["Ab"]
+    return 0.5 * x @ G @ x - 0.5 * y @ G @ y + Ab @ (2.0 * x - y)
+
+
+def _mega_source(m, dim=MEGA_DIM, samples=MEGA_SAMPLES, seed=7):
+    """Per-agent sufficient statistics synthesized from the GLOBAL agent
+    id (a pure fold of the data key) — any subset of the m-agent
+    registry can be generated on demand in O(n) memory, which is the
+    only way 1e6 agents' data exists on a host."""
+    from repro.sim import SyntheticDataSource
+
+    data_key = jax.random.PRNGKey(seed)
+
+    def one(i):
+        k = jax.random.fold_in(data_key, i)
+        k_a, k_t, k_e = jax.random.split(k, 3)
+        A = jax.random.normal(k_a, (samples, dim))
+        theta = jax.random.normal(k_t, (dim,))
+        b = A @ theta + 0.5 * jax.random.normal(k_e, (samples,))
+        return {"G": A.T @ A / samples, "Ab": A.T @ b / samples}
+
+    return SyntheticDataSource(m, jax.jit(jax.vmap(one)))
+
+
+def _mega_engine_run(m, active, pods, T=MEGA_T):
+    from repro.sim import Population, UniformActiveSubset, UniformStragglers
+    from repro.sim.sparse import SparseElasticEngine
+
+    jax.config.update("jax_enable_x64", True)
+    pop = Population(
+        m,
+        UniformActiveSubset(size=active),
+        UniformStragglers(p_straggle=0.3, min_frac=0.5),
+        pods=pods,
+    )
+    eng = SparseElasticEngine(
+        _mega_loss,
+        GradientTracking(),
+        _mega_source(m),
+        K,
+        ETA,
+        pod_map=pop.pod_map(),
+        wire_pods=True,
+        dense_fallback_max_m=0,  # force the sparse path at every m
+    )
+    x0 = jnp.zeros(MEGA_DIM)
+    eng.run(x0, x0, pop.sparse_schedule(SEED, T, K))
+    return eng
+
+
+def run_pods(rows=None):
+    """The `elastic_pods` suite: the mega preset (1e6 agents, 256
+    active, 1024 pods) through the sparse engine, with peak-memory and
+    pod-wire columns, next to a 100x-smaller registry with the same
+    active set — the side-by-side that makes O(active + pods) visible."""
+    from repro.sim.scenarios import MEGA_ACTIVE, MEGA_AGENTS, MEGA_PODS
+
+    from .common import peak_memory
+
+    rows = [] if rows is None else rows
+    for label, m in (("mega_1e6", MEGA_AGENTS), ("ref_1e4", MEGA_AGENTS // 100)):
+        pods = MEGA_PODS if m >= MEGA_PODS else max(1, m // 64)
+        mem = peak_memory(_mega_engine_run, m, MEGA_ACTIVE, pods)
+        eng = mem["result"]
+        rows.append(
+            {
+                "population": label,
+                "m": m,
+                "active": MEGA_ACTIVE,
+                "pods": pods,
+                "rounds": len(eng.history),
+                "host_peak_mib": f"{mem['host_peak_bytes'] / 2**20:.1f}",
+                "live_buf_mib": f"{mem['live_buffer_bytes'] / 2**20:.1f}",
+                "live_pods": eng.history[-1]["live_pods"],
+                "pod_wire_bytes": eng.history[-1]["pod_wire_bytes"],
+                "tracker_touched": eng._tracker.num_touched,
+            }
+        )
+    emit(
+        rows,
+        ["population", "m", "active", "pods", "rounds", "host_peak_mib",
+         "live_buf_mib", "live_pods", "pod_wire_bytes", "tracker_touched"],
+        f"O(active) sparse engine at registry scale (K={K}, "
+        f"T={MEGA_T} rounds, two-level pod aggregation)",
+    )
+    return rows
+
+
+def check_pods(factor: float = MEGA_MEM_FACTOR,
+               slack: int = MEGA_MEM_SLACK) -> int:
+    """CI gate for the million-agent memory claim: the 1e6-agent mega
+    run's peak (host traced + live device buffers) must stay within
+    `factor` x the peak of a 100x-smaller registry with the SAME active
+    set, + `slack`.  Any reintroduced m-dense structure (tracker table,
+    broadcast stack, [T, m] schedule mask — ~100 MiB at m=1e6 for the
+    table alone) trips it; O(active + pods) state cannot.  Returns the
+    number of violations (0 = gate holds)."""
+    from repro.sim.scenarios import MEGA_ACTIVE, MEGA_AGENTS, MEGA_PODS
+
+    from .common import peak_memory
+
+    def total(m, pods):
+        mem = peak_memory(_mega_engine_run, m, MEGA_ACTIVE, pods)
+        mem["result"] = None  # drop the engine before the next run
+        return mem["host_peak_bytes"] + mem["live_buffer_bytes"]
+
+    ref = total(MEGA_AGENTS // 100, MEGA_PODS)
+    mega = total(MEGA_AGENTS, MEGA_PODS)
+    budget = int(ref * factor) + slack
+    ok = mega <= budget
+    print(
+        f"[{'ok' if ok else 'FAIL'}] elastic_pods: mega(m={MEGA_AGENTS:.0e}) "
+        f"peak={mega / 2**20:.1f}MiB vs ref(m={MEGA_AGENTS // 100:.0e}) "
+        f"peak={ref / 2**20:.1f}MiB budget={budget / 2**20:.1f}MiB"
+    )
+    return 0 if ok else 1
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument(
@@ -183,7 +321,26 @@ if __name__ == "__main__":
         f"runner (> {CHECK_TOL:.0%} more rounds to eps exits non-zero); "
         "skips the full scenario sweep",
     )
+    ap.add_argument(
+        "--check-pods",
+        action="store_true",
+        help="gate the mega preset's peak memory: the 1e6-agent sparse "
+        "run must not scale with m (see check_pods)",
+    )
+    ap.add_argument(
+        "--population",
+        default=None,
+        choices=["mega"],
+        help="run the named population instead of the scenario sweep "
+        "(mega: 1e6 agents / 256 active / 1024 pods via the sparse "
+        "engine)",
+    )
     args = ap.parse_args()
+    if args.check_pods:
+        sys.exit(1 if check_pods() else 0)
     if args.check:
         sys.exit(1 if check() else 0)
+    if args.population == "mega":
+        run_pods()
+        sys.exit(0)
     run()

@@ -15,6 +15,9 @@ Tables:
   comm        — bytes-to-accuracy, star-topology model (paper headline)
   overlap     — wall-clock round latency, sync vs async runtime
   elastic     — rounds/bytes to eps under population churn scenarios
+  elastic_pods — the 1e6-agent mega preset through the O(active) sparse
+                engine + pod tree, with peak-memory columns (the gate
+                is elastic.py --check-pods)
   collectives — per-round collective traffic by algorithm (HLO census)
   kernels     — Pallas kernels vs ref oracles
   roofline    — three-term roofline per (arch x shape) (deliverable g)
@@ -48,6 +51,7 @@ def main() -> None:
         "comm": comm_efficiency.run,
         "overlap": comm_efficiency.overlap,
         "elastic": elastic.run,
+        "elastic_pods": elastic.run_pods,
         "collectives": comm_collectives.run,
         "kernels": kernels.run,
         "roofline": roofline.run,

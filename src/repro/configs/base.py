@@ -83,6 +83,12 @@ class ModelConfig:
     # diurnal / straggler_heavy) makes the launchers run the
     # membership-aware elastic round over a seeded RoundSchedule
     population: str = "stable"
+    # two-level aggregation tree (agents -> pods -> server): 0 disables
+    # the pod tier; > 0 splits the fed-axes devices into that many
+    # contiguous pod groups (launch.mesh.pod_device_groups) and the
+    # dry-run records the pod plan + per-pod wire price (--pods).
+    # Must divide the federated device count of the target mesh
+    pods: int = 0
     # shape support
     supports_decode: bool = True
     supports_long_context: bool = False

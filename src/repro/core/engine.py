@@ -131,6 +131,32 @@ def renormalized_weights(active, dtype=None) -> jax.Array:
     return a / jnp.sum(a)
 
 
+def pod_weighted_sums(
+    tree: Pytree, weights: jax.Array, pod_ids: jax.Array, num_pods: int
+) -> Pytree:
+    """Level one of the two-level agent -> pod -> server aggregation
+    tree: per-pod partial weighted sums via segment-sum over the agents'
+    pod assignments (`pod_ids`, [n] int — `sim.PodMap.pod_of` of the
+    active ids).  Leaves gain a leading [num_pods] axis; summing it
+    (`pods_total`) recovers the flat weighted sum to fp tolerance —
+    Σ_p Σ_{i∈p} w_i u_i vs Σ_i w_i u_i differ only in reduction order
+    (tests/test_sparse_elastic.py pins the property)."""
+
+    def seg(u):
+        w = weights.astype(u.dtype)
+        uw = u * w.reshape((-1,) + (1,) * (u.ndim - 1))
+        return jax.ops.segment_sum(uw, pod_ids, num_segments=num_pods)
+
+    return jax.tree.map(seg, tree)
+
+
+def pods_total(pod_tree: Pytree) -> Pytree:
+    """Level two: the server's sum over the pod axis of the partial
+    aggregates from `pod_weighted_sums` (quiet pods contribute exact
+    zeros, so skipping them is a no-op on the value)."""
+    return jax.tree.map(lambda u: jnp.sum(u, axis=0), pod_tree)
+
+
 def tracking_corrections(
     gx: Pytree, gy: Pytree, gbar_x: Pytree, gbar_y: Pytree, cdt=None
 ):
@@ -205,6 +231,11 @@ class RoundState:
     step_budgets: Optional[jax.Array] = None  # [m] local-step caps (None=K)
     active: Optional[jax.Array] = None        # [m] availability mask
     noise_keys: Optional[jax.Array] = None    # [m] per-round noise keys
+    #: GLOBAL agent ids of the rows in this state ([n] int64) — None on
+    #: the dense path (row i IS agent i).  The sparse O(active) runtime
+    #: threads the round's active id list here so id-keyed draws (noise
+    #: stream folds) hit the same per-agent streams as the dense layout
+    active_indices: Optional[jax.Array] = None
     fused: bool = False            # static: anchor shortcut applies
 
 
@@ -213,7 +244,7 @@ jax.tree_util.register_dataclass(
     data_fields=(
         "x", "y", "state", "xs", "ys", "weights",
         "cx", "cy", "gbar_x", "gbar_y", "step_budgets", "active",
-        "noise_keys",
+        "noise_keys", "active_indices",
     ),
     meta_fields=("fused",),
 )
@@ -286,7 +317,8 @@ def make_phases(
             return x1, y1
 
         def broadcast(x, y, agent_data, state, *, weights=_UNSET,
-                      step_budgets=None, active=None, noise_keys=_UNSET):
+                      step_budgets=None, active=None, noise_keys=_UNSET,
+                      active_indices=None):
             # every "local" step is a global aggregate, so there is no
             # per-agent divergence to budget — step_budgets is ignored;
             # an elastic schedule's membership enters through `weights`.
@@ -294,7 +326,8 @@ def make_phases(
             # for signature uniformity, never consumed
             del agent_data, step_budgets, noise_keys
             w = None if weights is _UNSET else weights
-            return RoundState(x=x, y=y, state=state, weights=w, active=active)
+            return RoundState(x=x, y=y, state=state, weights=w, active=active,
+                              active_indices=active_indices)
 
         def exchange_corrections(rs, agent_data):
             del agent_data
@@ -333,14 +366,23 @@ def make_phases(
         from ..optim.momentum import heavy_ball
 
     def broadcast(x, y, agent_data, state, *, weights=_UNSET,
-                  step_budgets=None, active=None, noise_keys=_UNSET):
+                  step_budgets=None, active=None, noise_keys=_UNSET,
+                  active_indices=None):
         m = _num_agents(agent_data)
         if weights is _UNSET:
             weights, state = strategy.sample_weights(state, m)
         if noise_keys is _UNSET:
             noise_keys = None
             if noise is not None:
-                noise_keys, state = strategy.sample_noise_keys(state, m)
+                if active_indices is not None:
+                    # sparse layout: rows are the active subset — fold
+                    # the GLOBAL ids so each agent sees the same noise
+                    # stream it would in the dense [m] layout
+                    noise_keys, state = strategy.sample_noise_keys_ids(
+                        state, active_indices
+                    )
+                else:
+                    noise_keys, state = strategy.sample_noise_keys(state, m)
         xs = tree_broadcast_agents(x, m)
         ys = tree_broadcast_agents(y, m)
         if constrain_agents is not None:
@@ -348,6 +390,7 @@ def make_phases(
         return RoundState(
             x=x, y=y, state=state, xs=xs, ys=ys, weights=weights,
             step_budgets=step_budgets, active=active, noise_keys=noise_keys,
+            active_indices=active_indices,
         )
 
     def exchange_corrections(rs, agent_data):

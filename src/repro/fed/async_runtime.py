@@ -137,6 +137,7 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
         proj_y: Callable = identity_proj,
         metric_fn: Optional[Callable] = None,
         devices: Optional[Sequence] = None,
+        pod_map=None,
         **strategy_kwargs,
     ):
         self._strategy = resolve_strategy(strategy, **strategy_kwargs)
@@ -148,7 +149,28 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
         self._m = _num_agents(agent_data)
 
         devices = list(devices) if devices is not None else jax.local_devices()
-        self._n_shards = largest_shard_count(self._m, len(devices))
+        self._pod_map = pod_map
+        if pod_map is not None:
+            # pod-aligned sharding: pick a shard count dividing the pod
+            # count so every shard holds whole pods — the existing
+            # skip-absent-shards dispatch below then doubles as "skip
+            # quiet pods" with no pod-specific branching (fed.pods)
+            from .pods import pod_aligned_shard_count
+
+            if pod_map.m != self._m:
+                raise ValueError(
+                    f"pod_map is for m={pod_map.m}, runner has {self._m}"
+                )
+            if self._m % pod_map.num_pods != 0:
+                raise ValueError(
+                    f"pod-aligned sharding needs m divisible by the pod "
+                    f"count, got m={self._m}, pods={pod_map.num_pods}"
+                )
+            self._n_shards = pod_aligned_shard_count(
+                pod_map.num_pods, len(devices)
+            )
+        else:
+            self._n_shards = largest_shard_count(self._m, len(devices))
         self._per = self._m // self._n_shards
         #: server device: owns the exchange transform, sampling RNG and
         #: the aggregate; also hosts shard 0 (a dedicated server device
@@ -202,6 +224,15 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
         #: left off (mirrors FederatedRunner.elastic_state)
         self.elastic_state: Optional[Dict] = None
         self.history: List[RoundStats] = []
+
+    @property
+    def pods_per_shard(self) -> Optional[int]:
+        """Whole pods per agent shard under pod-aligned sharding (None
+        without a pod_map) — a quiet run of this many consecutive pods
+        makes its shard's programs skip entirely."""
+        if self._pod_map is None:
+            return None
+        return self._pod_map.num_pods // self._n_shards
 
     # ------------------------------------------------------------ programs
     def _build_programs(self) -> None:

@@ -248,6 +248,21 @@ class FederatedRunner(RunnerHistoryMixin):
         if self._stateful and self._state is None:
             m = jax.tree.leaves(self._agent_data)[0].shape[0]
             self._state = self._strategy.init_state(x, y, m)
+        if schedule is not None and hasattr(schedule, "densify"):
+            # a SparseRoundSchedule (O(active) id lists): this runner's
+            # round math is m-dense, so densify — correct and bitwise
+            # for simulation-scale m, but deliberately refused at a
+            # scale where [T, m] masks defeat the sparse representation
+            # (that regime belongs to sim.sparse.SparseElasticEngine)
+            from ..sim.sparse import DENSE_FALLBACK_MAX_M
+
+            if schedule.m > DENSE_FALLBACK_MAX_M:
+                raise ValueError(
+                    f"sparse schedule over m={schedule.m} agents is too "
+                    f"large to densify (> {DENSE_FALLBACK_MAX_M}); use "
+                    "sim.sparse.SparseElasticEngine for O(active) runs"
+                )
+            schedule = schedule.densify()
         if schedule is not None and schedule.is_static_full:
             # degenerate schedule (all agents, full budgets, every
             # round): the legacy loop below IS that run, bitwise

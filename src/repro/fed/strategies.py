@@ -51,6 +51,7 @@ from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.engine import agent_where, fixed_size_mask, renormalized_weights
 from ..core.types import Pytree
@@ -148,6 +149,24 @@ class CommStrategy:
         )
         return keys, state
 
+    def sample_noise_keys_ids(
+        self, state: State, ids
+    ) -> Tuple[Optional[jax.Array], State]:
+        """`sample_noise_keys` for the sparse O(active) layout: the same
+        one-split-per-round advance of the dedicated stream, but folding
+        the given GLOBAL agent ids instead of arange(m) — an agent draws
+        from the same stream whether its row lives at position `id` of a
+        dense [m] stack or anywhere in an active-subset stack."""
+        if self.noise is None:
+            return None, state
+        state = dict(state)
+        key, sub = jax.random.split(state["noise_key"])
+        state["noise_key"] = key
+        keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+            sub, jnp.asarray(ids)
+        )
+        return keys, state
+
     @property
     def sharded_state_keys(self) -> Tuple[str, ...]:
         """Top-level state entries whose leaves carry a leading per-agent
@@ -177,6 +196,46 @@ class CommStrategy:
         state that can go stale — corrections are re-formed from the
         current server iterate every round — so the default is a no-op."""
         del active, prev_active
+        return state
+
+    def realign_state_rows(self, state: State, prev_ids, ids) -> State:
+        """`rebase_state` for the sparse O(active) layout, where the
+        per-agent state entries (`sharded_state_keys`) carry one row per
+        ACTIVE agent instead of one per population member.  Rows are
+        re-gathered from last round's id layout into this round's: a
+        continuing agent (present in both id lists) keeps its row, every
+        other slot restarts at zero — exactly the dense rebase rule
+        `keep = active & prev_active`, expressed over id lists.
+        `prev_ids` None (first round / fresh start) zeroes everything,
+        matching `init_state`'s zero buffers."""
+        keys = [k for k in self.sharded_state_keys if k in state]
+        if not keys:
+            return state
+        ids = np.asarray(ids)
+        state = dict(state)
+        if prev_ids is None or len(np.asarray(prev_ids)) == 0:
+            pos = np.full(len(ids), -1, np.int64)
+        else:
+            prev_ids = np.asarray(prev_ids)
+            # position of each current id in the previous (sorted) id
+            # layout; -1 = not present last round
+            idx = np.clip(
+                np.searchsorted(prev_ids, ids), 0, len(prev_ids) - 1
+            )
+            pos = np.where(prev_ids[idx] == ids, idx, -1)
+        pos_j = jnp.asarray(pos)
+        keep = jnp.asarray(pos >= 0)
+
+        def regather(t):
+            def leaf(u):
+                rows = jnp.take(u, jnp.maximum(pos_j, 0), axis=0)
+                mask = keep.reshape((-1,) + (1,) * (rows.ndim - 1))
+                return jnp.where(mask, rows, jnp.zeros_like(rows))
+
+            return jax.tree.map(leaf, t)
+
+        for k in keys:
+            state[k] = regather(state[k])
         return state
 
     def bytes_per_round(self, x: Pytree, y: Pytree, num_local_steps: int) -> int:

@@ -102,6 +102,7 @@ def run_one(
     noise=None,
     noise_sigma=None,
     momentum=None,
+    pods=None,
 ) -> Dict:
     cfg = get_config(arch)
     if (
@@ -149,6 +150,10 @@ def run_one(
                 f"known: {sorted(SCENARIOS)}"
             )
         cfg = _dc.replace(cfg, population=population)
+    if pods is not None:
+        import dataclasses as _dc
+
+        cfg = _dc.replace(cfg, pods=pods)
     #: non-stable population => lower the membership-aware elastic round
     #: (extra schedule inputs: tracker table, weights, budgets, active)
     elastic = cfg.population != "stable"
@@ -176,11 +181,18 @@ def run_one(
         "noise": cfg.noise if shape.kind == "train" else None,
         "noise_sigma": cfg.noise_sigma if shape.kind == "train" else None,
         "momentum": cfg.momentum if shape.kind == "train" else None,
+        "pods": cfg.pods if shape.kind == "train" else None,
         "sharding_variant": sharding_variant,
         "sequence_parallel": sequence_parallel,
         "h_shard": h_shard,
         "q_block_override": q_block,
     }
+    if shape.kind == "train" and cfg.pods:
+        # record the two-level tree's device placement + per-pod wire
+        # price alongside the round's census (launch.steps owns the plan)
+        from .steps import pod_aggregation_plan
+
+        rec["pod_plan"] = pod_aggregation_plan(cfg, mesh, cfg.pods)
     t0 = time.perf_counter()
     with jax.set_mesh(mesh):
         if shape.kind == "train" and elastic:
@@ -355,6 +367,10 @@ def main() -> None:
                          "dispatched runtime (tag __async)")
     from ..sim.scenarios import SCENARIOS
 
+    ap.add_argument("--pods", type=int, default=None,
+                    help="two-level aggregation tree: split the fed-axes "
+                         "devices into this many pod groups and record "
+                         "the pod plan (launch.mesh.pod_device_groups)")
     ap.add_argument("--population", default=None,
                     choices=sorted(SCENARIOS),
                     help="client-population scenario (repro.sim); any "
@@ -424,6 +440,8 @@ def main() -> None:
                 tag += f"__{args.runtime}"
             if args.population and args.population != "stable":
                 tag += f"__pop{args.population}"
+            if args.pods:
+                tag += f"__pods{args.pods}"
             if args.variant != "baseline":
                 tag += f"__{args.variant}"
             if args.no_seq_parallel:
@@ -458,6 +476,7 @@ def main() -> None:
                     noise=args.noise,
                     noise_sigma=args.noise_sigma,
                     momentum=args.momentum,
+                    pods=args.pods,
                 )
                 with open(path, "w") as f:
                     json.dump(rec, f, indent=1)

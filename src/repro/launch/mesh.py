@@ -39,3 +39,44 @@ def num_agents(mesh, fed_mode: str) -> int:
     for a in fed_axes(mesh, fed_mode):
         m *= mesh.shape[a]
     return max(m, 1)
+
+
+def pod_device_groups(mesh, fed_mode: str, num_pods: int):
+    """Map aggregation pods onto the mesh's federated axes: the devices
+    along `fed_axes` are split into `num_pods` contiguous groups (row-
+    major over those axes), one group per pod — level one of the
+    agents -> pods -> server tree runs inside a group, and only the
+    per-pod partials cross group boundaries.  Returns a list of
+    `num_pods` device lists.
+
+    `num_pods` must divide the federated device count so groups are
+    equal-sized (equal-shape per-group programs — one compilation
+    serves all, matching the agent-shard rule in `fed.async_runtime`).
+    More pods than federated devices is the simulation regime — pods
+    are then a host-side segment-sum, not a device grouping — and is
+    rejected here so a launch config can't silently oversubscribe."""
+    axes = fed_axes(mesh, fed_mode)
+    if not axes:
+        raise ValueError(
+            f"mesh {mesh.axis_names} has no federated axes in mode "
+            f"{fed_mode!r} to place pods on"
+        )
+    devs = mesh.devices.transpose(
+        [mesh.axis_names.index(a) for a in axes]
+        + [
+            i
+            for i, a in enumerate(mesh.axis_names)
+            if a not in axes
+        ]
+    ).reshape(num_agents(mesh, fed_mode), -1)
+    n_fed = devs.shape[0]
+    if num_pods < 1 or n_fed % num_pods != 0:
+        raise ValueError(
+            f"num_pods={num_pods} must divide the federated device "
+            f"count {n_fed} (mesh {dict(mesh.shape)}, mode {fed_mode!r})"
+        )
+    per = n_fed // num_pods
+    return [
+        [d for row in devs[p * per : (p + 1) * per] for d in row]
+        for p in range(num_pods)
+    ]

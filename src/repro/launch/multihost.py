@@ -161,6 +161,7 @@ class MultiHostRunner:
         proj_x: Callable = identity_proj,
         proj_y: Callable = identity_proj,
         devices: Optional[Sequence] = None,
+        pod_map=None,
         **strategy_kwargs,
     ):
         self._strategy = resolve_strategy(strategy, **strategy_kwargs)
@@ -178,7 +179,20 @@ class MultiHostRunner:
         self._proj_x, self._proj_y = proj_x, proj_y
         self._m = jax.tree.leaves(agent_data)[0].shape[0]
         devices = list(devices) if devices is not None else jax.local_devices()
-        n = largest_shard_count(self._m, len(devices))
+        if pod_map is not None:
+            # pod-aligned shards (shared rule with AsyncFederatedRunner):
+            # whole pods per device shard, so the per-shard packed
+            # payloads double as pod-level partial payloads
+            from ..fed.pods import pod_aligned_shard_count
+
+            if pod_map.m != self._m or self._m % pod_map.num_pods != 0:
+                raise ValueError(
+                    f"pod_map ({pod_map.m} agents, {pod_map.num_pods} "
+                    f"pods) does not align with m={self._m}"
+                )
+            n = pod_aligned_shard_count(pod_map.num_pods, len(devices))
+        else:
+            n = largest_shard_count(self._m, len(devices))
         self._n_shards, self._per = n, self._m // n
         self._server = devices[0]
         self._shard_devices = devices[:n]

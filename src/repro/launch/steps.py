@@ -290,6 +290,36 @@ def build_elastic_train_step(
     return jitted, specs_fn
 
 
+def pod_aggregation_plan(cfg: ModelConfig, mesh, num_pods: int) -> Dict:
+    """The two-level aggregation tree's placement on a launch mesh:
+    agents (the fed-axes device product) are split into `num_pods`
+    contiguous device groups (`mesh.pod_device_groups`), each owning
+    the level-one partial weighted sum of its agents; only the per-pod
+    partials cross group boundaries.  Returns the plan the dry-run
+    records (`--pods`):
+
+      num_pods / agents_per_pod / devices_per_pod — the tree shape;
+      pod_payload_bytes — one pod's per-round wire price on the
+      pod <-> server edge (dense packed framing, priced == measured —
+      `fed.pods.pod_payload_bytes`);
+      groups — per-pod device id lists.
+    """
+    from ..fed.pods import pod_payload_bytes
+    from .mesh import pod_device_groups
+
+    m = num_agents(mesh, cfg.fed_mode)
+    groups = pod_device_groups(mesh, cfg.fed_mode, num_pods)
+    x = abstract_params(cfg, jnp.bfloat16)
+    y = delta_struct(cfg, jnp.bfloat16)
+    return {
+        "num_pods": num_pods,
+        "agents_per_pod": m // num_pods,
+        "devices_per_pod": len(groups[0]),
+        "pod_payload_bytes": pod_payload_bytes(x, y, measured=False),
+        "groups": [[d.id for d in g] for g in groups],
+    }
+
+
 def build_gather_decode_train_step(
     cfg: ModelConfig,
     mesh,

@@ -6,15 +6,24 @@ agents that join, leave and lag — as a deterministic, seedable
 subsystem:
 
   population  availability processes (Bernoulli dropout, Markov churn,
-              diurnal waves, fixed-size sampling) + straggler models +
-              the `Population` registry
-  schedule    `RoundSchedule`: materialized per-round active sets and
-              local-step budgets, from a DEDICATED fold of the run seed
-              (sync and async runtimes consume identical membership)
+              diurnal waves, fixed-size sampling, sparse uniform
+              subsets) + straggler models + the `Population` registry
+              and the `PodMap` agent -> pod assignment
+  schedule    `RoundSchedule` (materialized [T, m]),
+              `ChunkedRoundSchedule` (lazy windows — same rounds
+              bitwise, O(chunk) resident) and `SparseRoundSchedule`
+              (O(active) id lists for `SparseAvailability` processes),
+              all from a DEDICATED fold of the run seed (sync, async
+              and sparse runtimes consume identical membership)
   elastic     `ElasticAggregator` (re-normalized weights, tracker/EF
               rebase) and `make_elastic_round` (the membership-aware
               round over the engine's phases)
-  scenarios   named presets: stable / flaky / diurnal / straggler_heavy
+  sparse      `SparseElasticEngine`: the O(active) driver — running-sum
+              tracker, id-keyed EF/noise rows, optional two-level pod
+              aggregation; dense-fallback-pinned bitwise for small m
+  scenarios   named presets: stable / flaky / diurnal /
+              straggler_heavy / mega (1e6 agents, 256 active, 1024
+              pods)
 """
 from .elastic import (
     ElasticAggregator,
@@ -32,8 +41,11 @@ from .population import (
     FixedSizeSampling,
     MarkovChurn,
     NoStragglers,
+    PodMap,
     Population,
+    SparseAvailability,
     StragglerModel,
+    UniformActiveSubset,
     UniformStragglers,
     fixed_size_mask,
     renormalized_weights,
@@ -41,27 +53,48 @@ from .population import (
 from .scenarios import SCENARIOS, make_population
 from .schedule import (
     AVAILABILITY_STREAM,
+    ChunkedRoundSchedule,
     RoundEvent,
     RoundSchedule,
+    SparseRoundEvent,
+    SparseRoundSchedule,
     availability_key,
+)
+from .sparse import (
+    AgentDataSource,
+    ArrayDataSource,
+    SparseElasticEngine,
+    SparseTracker,
+    SyntheticDataSource,
 )
 
 __all__ = [
     "AVAILABILITY_STREAM",
+    "AgentDataSource",
     "AlwaysOn",
+    "ArrayDataSource",
     "AvailabilityProcess",
     "BernoulliAvailability",
+    "ChunkedRoundSchedule",
     "DeterministicLag",
     "DiurnalAvailability",
     "ElasticAggregator",
     "FixedSizeSampling",
     "MarkovChurn",
     "NoStragglers",
+    "PodMap",
     "Population",
     "RoundEvent",
     "RoundSchedule",
     "SCENARIOS",
+    "SparseAvailability",
+    "SparseElasticEngine",
+    "SparseRoundEvent",
+    "SparseRoundSchedule",
+    "SparseTracker",
     "StragglerModel",
+    "SyntheticDataSource",
+    "UniformActiveSubset",
     "UniformStragglers",
     "availability_key",
     "fixed_size_mask",

@@ -262,12 +262,24 @@ def schedule_bytes(
     schedule,
     *,
     measured: bool = True,
+    pods=None,
 ) -> list:
     """Per-round TOTAL wire bytes of a run under `schedule`: the
     per-agent payload (measured packed buffers by default, the analytic
     price with measured=False) times the number of ACTIVE agents that
     round — departed agents move no bytes, so their payload leaves the
-    account the round they leave.
+    account the round they leave.  Computed STREAMINGLY from the
+    schedule's events (one pass over `ev.num_active`, never the dense
+    [T, m] mask), so dense, chunked and sparse schedules price
+    identically for the same rounds.
+
+    With a `pods` `sim.PodMap`, the two-level tree adds the pod edge:
+    each LIVE pod (>= 1 active agent) moves one partial payload up and
+    one broadcast down per round (`fed.pods.pod_payload_bytes` — dense
+    packed encoding, priced == measured by the PR-3 contract), while
+    the per-agent payloads become agent <-> pod traffic.  The headline
+    saving is the server fan-in: live_pods payloads instead of
+    n_active.
 
     Under a schedule the strategy's OWN client sampling is bypassed
     (membership comes from the schedule), so a participation-discounted
@@ -283,4 +295,15 @@ def schedule_bytes(
         if measured
         else int(strategy.bytes_per_round(x, y, num_local_steps))
     )
-    return [per_agent * int(a.sum()) for a in schedule.active]
+    per_pod = 0
+    if pods is not None:
+        from ..fed.pods import pod_payload_bytes
+
+        per_pod = pod_payload_bytes(x, y, measured=measured)
+    totals = []
+    for ev in schedule:
+        total = per_agent * ev.num_active
+        if pods is not None:
+            total += per_pod * len(pods.live_pods(ev.active_ids))
+        totals.append(total)
+    return totals

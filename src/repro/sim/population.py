@@ -27,6 +27,22 @@ pair yields the identical schedule on every runtime (the sync
 `FederatedRunner`, the per-shard `AsyncFederatedRunner`, a benchmark
 process), which is what makes churn a reproducible benchmark axis
 instead of an accident of the run.
+
+Two scaling regimes coexist (million-agent ROADMAP item):
+
+  * chunked — every process draws each round from a PER-ROUND fold of
+    its key (`sample_rounds`), so a `[t0, t1)` block is bit-identical to
+    the same rows of the full materialization and
+    `repro.sim.schedule.ChunkedRoundSchedule` can generate rounds lazily
+    in O(chunk * m) memory;
+  * sparse — a `SparseAvailability` process emits the ACTIVE ID LIST of
+    a round directly in O(active) work (`sample_active_ids`), never
+    touching an [m] row; `UniformActiveSubset` is the huge-m counterpart
+    of `FixedSizeSampling` (whose permutation draw is O(m)).
+
+`PodMap` partitions agents into contiguous pods for the two-level
+agent -> pod -> server aggregation tree; `Population.pods` opts a
+population into it.
 """
 from __future__ import annotations
 
@@ -34,6 +50,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 # --------------------------------------------------------- shared samplers
@@ -46,16 +63,50 @@ from ..core.engine import fixed_size_mask, renormalized_weights  # noqa: F401,E4
 def _round_keys(key: jax.Array, num_rounds: int) -> jax.Array:
     """One independent key per round, by fold — stable under changes to
     how many draws any single round consumes."""
+    return _round_keys_window(key, 0, num_rounds)
+
+
+def _round_keys_window(key: jax.Array, t0: int, t1: int) -> jax.Array:
+    """Per-round keys for the half-open window [t0, t1).  Folding the
+    ABSOLUTE round index is what makes chunked generation bit-identical
+    to a full materialization: row t's key never depends on where the
+    chunk boundaries fall."""
     return jax.vmap(lambda t: jax.random.fold_in(key, t))(
-        jnp.arange(num_rounds)
+        jnp.arange(t0, t1)
     )
 
 
 # ------------------------------------------------------ availability processes
 class AvailabilityProcess:
-    """Base: emit the [num_rounds, m] availability matrix for one run."""
+    """Base: emit the availability matrix for one run.
+
+    The primitive is `sample_rounds(key, m, t0, t1, carry)` — the rows
+    for the half-open round window [t0, t1), each drawn from a
+    PER-ROUND fold of `key`, plus the carry a stateful process (Markov
+    chains) threads between consecutive windows.  Chunk-invariance
+    contract: splitting [0, T) into consecutive windows and threading
+    the carry yields bit-identical rows to one full-range call, which
+    is what lets `ChunkedRoundSchedule` stream a schedule without ever
+    holding [T, m].  `sample` is the dense convenience wrapper.
+    """
+
+    def sample_rounds(self, key, m: int, t0: int, t1: int, carry=None):
+        """Rows for rounds [t0, t1) -> ([t1 - t0, m] bool, carry')."""
+        raise NotImplementedError
 
     def sample(self, key: jax.Array, m: int, num_rounds: int) -> jax.Array:
+        rows, _ = self.sample_rounds(key, m, 0, num_rounds, None)
+        return rows
+
+
+class SparseAvailability(AvailabilityProcess):
+    """Marker base for processes that can emit a round's ACTIVE ID LIST
+    directly in O(active) work — the representation `SparseRoundSchedule`
+    streams for populations too large to touch [m] rows.  Stateless per
+    round by contract (each round is a pure function of (key, m, t))."""
+
+    def sample_active_ids(self, key, m: int, t: int) -> "np.ndarray":
+        """Sorted unique int64 ids of the agents active in round t."""
         raise NotImplementedError
 
 
@@ -65,9 +116,9 @@ class AlwaysOn(AvailabilityProcess):
     The degenerate process: a schedule built from it is detected as
     static-full and the runners take their bitwise-pinned legacy path."""
 
-    def sample(self, key, m, num_rounds):
+    def sample_rounds(self, key, m, t0, t1, carry=None):
         del key
-        return jnp.ones((num_rounds, m), bool)
+        return jnp.ones((t1 - t0, m), bool), carry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,8 +129,12 @@ class BernoulliAvailability(AvailabilityProcess):
 
     p: float = 0.9
 
-    def sample(self, key, m, num_rounds):
-        return jax.random.bernoulli(key, self.p, (num_rounds, m))
+    def sample_rounds(self, key, m, t0, t1, carry=None):
+        keys = _round_keys_window(key, t0, t1)
+        rows = jax.vmap(
+            lambda rk: jax.random.bernoulli(rk, self.p, (m,))
+        )(keys)
+        return rows, carry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,23 +144,36 @@ class MarkovChurn(AvailabilityProcess):
     CORRELATED across rounds (an agent that left stays gone for
     ~1/p_join rounds), which is what makes naive tracking state stale —
     the case the elastic aggregator's rebase exists for.  Stationary
-    active fraction: p_join / (p_join + p_leave)."""
+    active fraction: p_join / (p_join + p_leave).
+
+    The only stateful process: its carry is the [m] chain state after
+    the last emitted round, threaded between chunks so a windowed scan
+    continues the same trajectory bit-for-bit."""
 
     p_leave: float = 0.2
     p_join: float = 0.6
     start_active: float = 1.0
 
-    def sample(self, key, m, num_rounds):
+    def sample_rounds(self, key, m, t0, t1, carry=None):
         k0, kt = jax.random.split(key)
-        s0 = jax.random.bernoulli(k0, self.start_active, (m,))
+        if carry is None:
+            if t0 != 0:
+                raise ValueError(
+                    "MarkovChurn is stateful: windows starting at "
+                    f"t0={t0} > 0 need the carry from the previous "
+                    "window (thread the second return value)"
+                )
+            carry = jax.random.bernoulli(k0, self.start_active, (m,))
 
         def step(s, rk):
             u = jax.random.uniform(rk, (m,))
             s1 = jnp.where(s, u >= self.p_leave, u < self.p_join)
             return s1, s1
 
-        _, trace = jax.lax.scan(step, s0, _round_keys(kt, num_rounds))
-        return trace
+        s_end, trace = jax.lax.scan(
+            step, carry, _round_keys_window(kt, t0, t1)
+        )
+        return trace, s_end
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,13 +187,15 @@ class DiurnalAvailability(AvailabilityProcess):
     high: float = 1.0
     phase: float = 0.0
 
-    def sample(self, key, m, num_rounds):
-        t = jnp.arange(num_rounds)
+    def sample_rounds(self, key, m, t0, t1, carry=None):
+        t = jnp.arange(t0, t1)
         p = self.low + (self.high - self.low) * 0.5 * (
             1.0 + jnp.cos(2.0 * jnp.pi * t / self.period + self.phase)
         )
-        u = jax.random.uniform(key, (num_rounds, m))
-        return u < p[:, None]
+        u = jax.vmap(
+            lambda rk: jax.random.uniform(rk, (m,))
+        )(_round_keys_window(key, t0, t1))
+        return u < p[:, None], carry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,37 +204,102 @@ class FixedSizeSampling(AvailabilityProcess):
     agents per round — `PartialParticipation`'s draw expressed as a
     degenerate population process (i.i.d. across rounds, no churn
     memory).  Both call `fixed_size_mask`, so the active-set logic has
-    one owner."""
+    one owner.  The permutation draw is O(m) per round — for huge
+    populations use `UniformActiveSubset` instead."""
 
     participation: float = 0.5
 
     def subset_size(self, m: int) -> int:
         return max(1, int(round(self.participation * m)))
 
-    def sample(self, key, m, num_rounds):
+    def sample_rounds(self, key, m, t0, t1, carry=None):
         size = self.subset_size(m)
         if size >= m:
-            return jnp.ones((num_rounds, m), bool)
-        return jax.vmap(lambda rk: fixed_size_mask(rk, m, size))(
-            _round_keys(key, num_rounds)
+            return jnp.ones((t1 - t0, m), bool), carry
+        rows = jax.vmap(lambda rk: fixed_size_mask(rk, m, size))(
+            _round_keys_window(key, t0, t1)
         )
+        return rows, carry
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformActiveSubset(SparseAvailability):
+    """Exactly `size` uniformly sampled agents per round, drawn in
+    O(size) work and memory — the sparse counterpart of
+    `FixedSizeSampling` for populations where even one [m] row is too
+    big.  Draw: rejection sampling of uniform ids, deduplicated in draw
+    order, with the attempt counter folded into the round key so the
+    result is a pure function of (key, m, t)."""
+
+    size: int = 256
+
+    def sample_active_ids(self, key, m, t):
+        if self.size >= m:
+            return np.arange(m, dtype=np.int64)
+        kt = jax.random.fold_in(key, t)
+        seen: dict = {}
+        attempt = 0
+        # oversample ~2x per attempt; for size << m one attempt almost
+        # always suffices (collision probability ~ size^2 / m)
+        block = max(2 * self.size, 64)
+        while len(seen) < self.size:
+            ka = jax.random.fold_in(kt, attempt)
+            draw = np.asarray(
+                jax.random.randint(ka, (block,), 0, m, jnp.int64)
+            )
+            for i in draw:
+                seen.setdefault(int(i), None)
+                if len(seen) >= self.size:
+                    break
+            attempt += 1
+        ids = np.fromiter(seen.keys(), np.int64, self.size)
+        ids.sort()
+        return ids
+
+    def sample_rounds(self, key, m, t0, t1, carry=None):
+        # dense materialization (small-m parity tests only): one row
+        # per round, scattered from the sparse draw so dense == sparse
+        # by construction
+        rows = np.zeros((t1 - t0, m), bool)
+        for i, t in enumerate(range(t0, t1)):
+            rows[i, self.sample_active_ids(key, m, t)] = True
+        return jnp.asarray(rows), carry
 
 
 # ----------------------------------------------------------- straggler models
 class StragglerModel:
     """Base: per-agent-round local-step budgets in [0, K].  The schedule
     builder zeroes budgets of inactive agents and floors active agents
-    at 1 step, so models only decide how SLOW an active agent is."""
+    at 1 step, so models only decide how SLOW an active agent is.
+
+    Like availability, the primitive is windowed (`budgets_rounds`, one
+    key fold per absolute round) so chunked generation is bit-identical
+    to dense; `budgets_for_ids` is the O(active) variant for sparse
+    events — a pure function of (key, t, global id), so the same agent
+    gets the same budget however the round is represented, and
+    `SparseRoundSchedule.densify()` (which scatters these exact values)
+    is self-consistent by construction."""
+
+    def budgets_rounds(
+        self, key, active, t0: int, num_local_steps: int
+    ):
+        """Budgets for rounds [t0, t0 + active.shape[0]) -> [c, m] int32."""
+        raise NotImplementedError
 
     def budgets(self, key: jax.Array, active: jax.Array, num_local_steps: int):
-        raise NotImplementedError
+        return self.budgets_rounds(key, active, 0, num_local_steps)
+
+    def budgets_for_ids(self, key, ids, t: int, num_local_steps: int):
+        """Budgets for the global agent `ids` of round t -> [n] int32.
+        Base: no stragglers — full budget."""
+        return np.full(len(ids), num_local_steps, np.int32)
 
 
 @dataclasses.dataclass(frozen=True)
 class NoStragglers(StragglerModel):
     """Every active agent completes all K local steps."""
 
-    def budgets(self, key, active, num_local_steps):
+    def budgets_rounds(self, key, active, t0, num_local_steps):
         del key
         return jnp.full(active.shape, num_local_steps, jnp.int32)
 
@@ -178,14 +313,37 @@ class UniformStragglers(StragglerModel):
     p_straggle: float = 0.5
     min_frac: float = 0.25
 
-    def budgets(self, key, active, num_local_steps):
-        k_sel, k_cnt = jax.random.split(key)
+    def _row(self, kt, m, num_local_steps):
+        k_sel, k_cnt = jax.random.split(kt)
         lo = max(1, int(-(-self.min_frac * num_local_steps // 1)))
-        slow = jax.random.bernoulli(k_sel, self.p_straggle, active.shape)
-        b = jax.random.randint(
-            k_cnt, active.shape, lo, num_local_steps + 1, jnp.int32
-        )
+        slow = jax.random.bernoulli(k_sel, self.p_straggle, (m,))
+        b = jax.random.randint(k_cnt, (m,), lo, num_local_steps + 1, jnp.int32)
         return jnp.where(slow, b, num_local_steps).astype(jnp.int32)
+
+    def budgets_rounds(self, key, active, t0, num_local_steps):
+        c, m = active.shape
+        return jax.vmap(lambda kt: self._row(kt, m, num_local_steps))(
+            _round_keys_window(key, t0, t0 + c)
+        )
+
+    def budgets_for_ids(self, key, ids, t, num_local_steps):
+        # O(n): one (round, global-id) fold per active agent — same
+        # distribution as the dense row, stable under any active-set
+        # representation of the same round
+        kt = jax.random.fold_in(key, t)
+        k_sel, k_cnt = jax.random.split(kt)
+        lo = max(1, int(-(-self.min_frac * num_local_steps // 1)))
+        ids = jnp.asarray(ids, jnp.int64)
+        sel_keys = jax.vmap(lambda i: jax.random.fold_in(k_sel, i))(ids)
+        cnt_keys = jax.vmap(lambda i: jax.random.fold_in(k_cnt, i))(ids)
+        slow = jax.vmap(lambda k: jax.random.bernoulli(k, self.p_straggle))(
+            sel_keys
+        )
+        b = jax.vmap(
+            lambda k: jax.random.randint(k, (), lo, num_local_steps + 1)
+        )(cnt_keys)
+        out = jnp.where(slow, b, num_local_steps).astype(jnp.int32)
+        return np.asarray(out)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -197,12 +355,58 @@ class DeterministicLag(StragglerModel):
     slow_every: int = 4
     budget_frac: float = 0.25
 
-    def budgets(self, key, active, num_local_steps):
+    def _slow_budget(self, num_local_steps):
+        return max(1, int(-(-self.budget_frac * num_local_steps // 1)))
+
+    def budgets_rounds(self, key, active, t0, num_local_steps):
         del key
         m = active.shape[-1]
         slow = (jnp.arange(m) % self.slow_every) == 0
-        b = max(1, int(-(-self.budget_frac * num_local_steps // 1)))
+        b = self._slow_budget(num_local_steps)
         return jnp.where(slow[None, :], b, num_local_steps).astype(jnp.int32)
+
+    def budgets_for_ids(self, key, ids, t, num_local_steps):
+        del key
+        ids = np.asarray(ids)
+        slow = (ids % self.slow_every) == 0
+        b = self._slow_budget(num_local_steps)
+        return np.where(slow, b, num_local_steps).astype(np.int32)
+
+
+# -------------------------------------------------------------------- pods
+@dataclasses.dataclass(frozen=True)
+class PodMap:
+    """Contiguous partition of the m agents into `num_pods` pods — level
+    one of the two-level agent -> pod -> server aggregation tree.  Agent
+    i belongs to pod i // pod_size; the last pod may be short.  The map
+    is pure arithmetic (no [m] table), so pod routing stays O(active)
+    however large the population."""
+
+    m: int
+    num_pods: int
+
+    def __post_init__(self):
+        if not 1 <= self.num_pods <= self.m:
+            raise ValueError(
+                f"num_pods must be in [1, m={self.m}], got {self.num_pods}"
+            )
+
+    @property
+    def pod_size(self) -> int:
+        return -(-self.m // self.num_pods)  # ceil
+
+    def pod_of(self, ids):
+        """Pod index of each agent id (numpy or jax arrays alike)."""
+        return ids // self.pod_size
+
+    def live_pods(self, ids) -> np.ndarray:
+        """Sorted unique pods with at least one of `ids` — the pods that
+        send a partial payload this round."""
+        return np.unique(np.asarray(self.pod_of(np.asarray(ids))))
+
+    def agents_of(self, pod: int) -> np.ndarray:
+        lo = pod * self.pod_size
+        return np.arange(lo, min(lo + self.pod_size, self.m), dtype=np.int64)
 
 
 # ---------------------------------------------------------------- population
@@ -212,12 +416,15 @@ class Population:
     straggler model.  `min_active` is the server's liveness floor — a
     round the process left empty gets that many agents force-activated
     (deterministically from the schedule's own key stream), so the
-    aggregate is always over a nonempty set."""
+    aggregate is always over a nonempty set.  `pods > 0` opts the
+    population into the two-level aggregation tree (`pod_map()`); 0
+    means flat agent -> server aggregation."""
 
     m: int
     availability: AvailabilityProcess = AlwaysOn()
     stragglers: StragglerModel = NoStragglers()
     min_active: int = 1
+    pods: int = 0
 
     def __post_init__(self):
         if self.m < 1:
@@ -226,6 +433,17 @@ class Population:
             raise ValueError(
                 f"min_active must be in [1, m={self.m}], got {self.min_active}"
             )
+        if self.pods and not 1 <= self.pods <= self.m:
+            raise ValueError(
+                f"pods must be 0 (flat) or in [1, m={self.m}], got {self.pods}"
+            )
+
+    def pod_map(self) -> PodMap | None:
+        return PodMap(self.m, self.pods) if self.pods else None
+
+    @property
+    def supports_sparse(self) -> bool:
+        return isinstance(self.availability, SparseAvailability)
 
     def schedule(self, seed: int, num_rounds: int, num_local_steps: int):
         """Materialize the per-round active sets + step budgets for one
@@ -233,3 +451,28 @@ class Population:
         from .schedule import RoundSchedule
 
         return RoundSchedule.build(self, seed, num_rounds, num_local_steps)
+
+    def chunked_schedule(
+        self, seed: int, num_rounds: int, num_local_steps: int, *,
+        chunk_rounds: int = 128,
+    ):
+        """Lazy schedule generating [chunk_rounds, m] blocks on demand —
+        bit-identical rounds to `schedule(...)`, O(chunk * m) memory."""
+        from .schedule import ChunkedRoundSchedule
+
+        return ChunkedRoundSchedule(
+            self, seed, num_rounds, num_local_steps,
+            chunk_rounds=chunk_rounds,
+        )
+
+    def sparse_schedule(self, seed: int, num_rounds: int, num_local_steps: int):
+        """O(active)-per-round schedule of `SparseRoundEvent`s; requires
+        a `SparseAvailability` process (e.g. `UniformActiveSubset`)."""
+        from .schedule import SparseRoundSchedule
+
+        if not self.supports_sparse:
+            raise TypeError(
+                "sparse schedules need a SparseAvailability process, got "
+                f"{type(self.availability).__name__}"
+            )
+        return SparseRoundSchedule(self, seed, num_rounds, num_local_steps)

@@ -19,6 +19,17 @@ thing by "flaky":
   straggler_heavy  nearly everyone shows up (5% dropout) but 60% of
                    agent-rounds are stragglers completing a uniform
                    1/4..all of their K local steps.
+  mega             the million-agent preset: m = 1e6 registered agents,
+                   a uniform 256-agent active subset per round
+                   (`UniformActiveSubset` — a `SparseAvailability`, so
+                   only `sparse_schedule` applies; densifying is an
+                   error at this scale), light stragglers, and 1024
+                   pods for the two-level aggregation tree.  Runs in
+                   O(active + pods) host memory through
+                   `sim.sparse.SparseElasticEngine`
+                   (benchmarks/elastic.py --population mega gates the
+                   memory claim).  The m argument is IGNORED — the
+                   scenario pins its own scale.
 """
 from __future__ import annotations
 
@@ -31,8 +42,14 @@ from .population import (
     MarkovChurn,
     NoStragglers,
     Population,
+    UniformActiveSubset,
     UniformStragglers,
 )
+
+#: the mega preset's pinned scale (the m argument is ignored)
+MEGA_AGENTS = 1_000_000
+MEGA_ACTIVE = 256
+MEGA_PODS = 1024
 
 SCENARIOS: Dict[str, Callable[[int], Population]] = {
     "stable": lambda m: Population(m, AlwaysOn(), NoStragglers()),
@@ -48,6 +65,12 @@ SCENARIOS: Dict[str, Callable[[int], Population]] = {
         m,
         BernoulliAvailability(p=0.95),
         UniformStragglers(p_straggle=0.6, min_frac=0.25),
+    ),
+    "mega": lambda m: Population(
+        MEGA_AGENTS,
+        UniformActiveSubset(size=MEGA_ACTIVE),
+        UniformStragglers(p_straggle=0.3, min_frac=0.5),
+        pods=MEGA_PODS,
     ),
 }
 

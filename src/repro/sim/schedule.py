@@ -1,4 +1,4 @@
-"""RoundSchedule: the materialized per-round (active set, step budgets).
+"""RoundSchedule: the per-round (active set, step budgets) of one run.
 
 A schedule is built ONCE from (population, seed, num_rounds, K) and then
 consumed by whichever runtime executes the run — the sync
@@ -11,15 +11,30 @@ and the seed: it cannot drift when some other consumer of the run seed
 draws it takes, and sync and async runtimes consume bit-identical active
 sets for the same config (tests/test_population.py pins this).
 
-The arrays are materialized host-side (numpy) — populations are small
-(m agents, not parameters), and host arrays let the runners make cheap
-per-round control-flow decisions (skip fully-inactive shards, take the
-bitwise-pinned full-participation path) without device round-trips.
+Three representations share the same event contract (million-agent
+ROADMAP item — memory must scale with the ACTIVE set, not m):
+
+  * `RoundSchedule` — the dense [T, m] materialization, host-side numpy.
+    Fine for simulation-scale populations; every membership fact is a
+    cheap array op.
+  * `ChunkedRoundSchedule` — the same rounds bit-for-bit, generated
+    lazily in [chunk_rounds, m] blocks from the per-round key folds
+    (`AvailabilityProcess.sample_rounds`).  O(chunk * m) resident
+    memory; sequential iteration costs one block sample per chunk.
+  * `SparseRoundSchedule` — O(active) per round: events carry the active
+    ID LIST (`SparseRoundEvent`), never an [m] row.  Requires a
+    `SparseAvailability` process; `densify()` scatters it into a dense
+    `RoundSchedule` for small-m parity tests.
+
+Per-round statistics (`participation_rate`, `churn_events`,
+`summary_trace`) are computed STREAMINGLY by iterating events — one pass,
+no [T, m] densification — so reporting works identically for all three.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator
+import zlib
+from typing import Iterator, Optional
 
 import jax
 import jax.numpy as jnp
@@ -56,8 +71,132 @@ class RoundEvent:
     def churned(self) -> bool:
         return bool(self.joined.any() or self.departed.any())
 
+    @property
+    def active_ids(self) -> np.ndarray:
+        """Sorted global ids of this round's active agents — the
+        representation-independent view shared with `SparseRoundEvent`."""
+        return np.nonzero(self.active)[0].astype(np.int64)
 
-class RoundSchedule:
+
+@dataclasses.dataclass(frozen=True)
+class SparseRoundEvent:
+    """One round's membership facts in O(active): the sorted active id
+    list plus per-active budgets, no [m] row anywhere.  `prev_ids` None
+    means a fresh start (the dense all-present convention); joins and
+    departures then report empty rather than scanning m agents."""
+
+    index: int
+    m: int
+    active_ids: np.ndarray           # [n] int64, sorted unique
+    budgets: np.ndarray              # [n] int32 (>= 1), aligned to active_ids
+    prev_ids: Optional[np.ndarray]   # previous round's ids, or None
+    full: bool
+
+    @property
+    def num_active(self) -> int:
+        return len(self.active_ids)
+
+    @property
+    def joined_ids(self) -> np.ndarray:
+        if self.prev_ids is None:
+            return np.empty(0, np.int64)
+        return np.setdiff1d(self.active_ids, self.prev_ids)
+
+    @property
+    def departed_ids(self) -> np.ndarray:
+        if self.prev_ids is None:
+            return np.empty(0, np.int64)
+        return np.setdiff1d(self.prev_ids, self.active_ids)
+
+    @property
+    def churned(self) -> bool:
+        return self.prev_ids is not None and not np.array_equal(
+            self.active_ids, self.prev_ids
+        )
+
+    def to_dense(self, num_local_steps: int) -> RoundEvent:
+        """Scatter into the dense event representation (small m only).
+        A None `prev_ids` densifies to the all-present convention,
+        matching a dense schedule's round 0."""
+        active = np.zeros(self.m, bool)
+        active[self.active_ids] = True
+        budgets = np.zeros(self.m, np.int32)
+        budgets[self.active_ids] = self.budgets
+        if self.prev_ids is None:
+            prev = np.ones(self.m, bool)
+        else:
+            prev = np.zeros(self.m, bool)
+            prev[self.prev_ids] = True
+        return RoundEvent(
+            index=self.index,
+            active=active,
+            budgets=budgets,
+            joined=active & ~prev,
+            departed=prev & ~active,
+            full=bool(
+                active.all() and (budgets == num_local_steps).all()
+            ),
+        )
+
+
+def _event_ids(ev) -> np.ndarray:
+    """Representation-independent active-id view of any event type."""
+    return ev.active_ids
+
+
+class ScheduleStats:
+    """Streaming per-round statistics, shared by every schedule flavor.
+
+    One pass over events; nothing here materializes [T, m], which is the
+    satellite contract that keeps reporting working for chunked and
+    sparse schedules.  Requires `__iter__`, `__len__`, `.m`,
+    `.num_local_steps`, `.seed` on the concrete class.
+    """
+
+    def participation_rate(self) -> float:
+        total = 0
+        for ev in self:
+            total += ev.num_active
+        return total / (len(self) * self.m)
+
+    def churn_events(self) -> int:
+        """Rounds whose active set differs from the previous round's
+        (round 0 never counts — there is no in-schedule predecessor)."""
+        count = 0
+        prev = None
+        for ev in self:
+            ids = _event_ids(ev)
+            if prev is not None and not np.array_equal(ids, prev):
+                count += 1
+            prev = ids
+        return count
+
+    def summary_trace(self) -> dict:
+        """Per-round membership summary without the [T, m] mask:
+        active counts, budget totals, and a CRC digest of each round's
+        sorted active ids (representation-independent — a dense and a
+        sparse schedule of the same rounds digest identically).
+        Identical configs must yield identical summaries whatever
+        runtime consumes them."""
+        n_active = np.zeros(len(self), np.int64)
+        budget_total = np.zeros(len(self), np.int64)
+        digest = np.zeros(len(self), np.uint32)
+        for t, ev in enumerate(self):
+            n_active[t] = ev.num_active
+            budget_total[t] = int(np.asarray(ev.budgets).sum())
+            digest[t] = zlib.crc32(
+                np.ascontiguousarray(_event_ids(ev)).tobytes()
+            )
+        return {
+            "num_active": n_active,
+            "budget_total": budget_total,
+            "active_digest": digest,
+            "seed": self.seed,
+            "num_local_steps": self.num_local_steps,
+        }
+
+
+class RoundSchedule(ScheduleStats):
     """Iterator over `RoundEvent`s for one run (see module docstring).
 
     `is_static_full` flags the degenerate all-on/no-straggler schedule:
@@ -113,10 +252,17 @@ class RoundSchedule:
         m = population.m
         key = availability_key(seed)
         k_avail, k_strag, k_force = jax.random.split(key, 3)
-        active = population.availability.sample(k_avail, m, num_rounds)
-        active = _force_min_active(active, population.min_active, k_force)
-        budgets = population.stragglers.budgets(
-            k_strag, active, num_local_steps
+        # one full-range window — the SAME per-round-fold primitives the
+        # chunked schedule streams, so chunked == dense is bitwise by
+        # construction rather than by luck
+        active, _ = population.availability.sample_rounds(
+            k_avail, m, 0, num_rounds, None
+        )
+        active = _force_min_active(
+            active, population.min_active, k_force, 0
+        )
+        budgets = population.stragglers.budgets_rounds(
+            k_strag, active, 0, num_local_steps
         )
         budgets = _clamp_budgets(active, budgets, num_local_steps)
         return cls(
@@ -191,7 +337,9 @@ class RoundSchedule:
     def trace(self) -> dict:
         """The full membership record, for regression tests and
         benchmark provenance: identical configs must yield identical
-        traces whatever runtime consumes them."""
+        traces whatever runtime consumes them.  (Only the dense
+        schedule offers the [T, m] arrays; use `summary_trace()` for a
+        representation-independent record.)"""
         return {
             "active": self.active.copy(),
             "budgets": self.budgets.copy(),
@@ -199,24 +347,347 @@ class RoundSchedule:
             "num_local_steps": self.num_local_steps,
         }
 
-    def participation_rate(self) -> float:
-        return float(self.active.mean())
 
-    def churn_events(self) -> int:
-        """Rounds whose active set differs from the previous round's."""
-        return int(
-            (self.active[1:] != self.active[:-1]).any(axis=1).sum()
+class ChunkedRoundSchedule(ScheduleStats):
+    """The same rounds as `RoundSchedule.build(population, seed, ...)`,
+    bit-for-bit, generated lazily in [chunk_rounds, m] blocks.
+
+    Resident memory is O(chunk_rounds * m) (one block plus the carry /
+    boundary-row checkpoints, each O(m)), not O(T * m) — the schedule
+    half of the million-agent story.  Correctness rests on the
+    per-round-fold contract of `AvailabilityProcess.sample_rounds`: a
+    row's draw depends only on the absolute round index, never on where
+    block boundaries fall; the one stateful process (`MarkovChurn`)
+    threads its carry across consecutive blocks, and random access
+    behind the last checkpoint replays forward from the nearest one.
+    """
+
+    def __init__(
+        self,
+        population,
+        seed: int,
+        num_rounds: int,
+        num_local_steps: int,
+        *,
+        chunk_rounds: int = 128,
+        start: int = 0,
+        prev_active=None,
+        _carry0=None,
+    ):
+        if num_rounds < 1:
+            raise ValueError(f"need >= 1 round, got {num_rounds}")
+        self.population = population
+        self.seed = int(seed)
+        self.num_local_steps = int(num_local_steps)
+        self.chunk_rounds = max(1, int(chunk_rounds))
+        self._T = int(num_rounds)
+        self._start = int(start)  # absolute round of our index 0
+        self.prev_active = (
+            None if prev_active is None else np.asarray(prev_active, bool)
+        )
+        key = availability_key(seed)
+        self._k_avail, self._k_strag, self._k_force = jax.random.split(key, 3)
+        # checkpoints: absolute round -> (carry entering it, row before it)
+        self._carries = {self._start: _carry0}
+        self._prev_rows = {self._start: self.prev_active}
+        self._cache = None  # (abs_t0, active[c,m], budgets[c,m], prev_row)
+
+    # ------------------------------------------------------------ access
+    @property
+    def num_rounds(self) -> int:
+        return self._T
+
+    @property
+    def m(self) -> int:
+        return self.population.m
+
+    @property
+    def is_static_full(self) -> bool:
+        # decided from config, not materialization: only the degenerate
+        # all-on / no-straggler population is static-full
+        from .population import AlwaysOn, NoStragglers
+
+        return isinstance(
+            self.population.availability, AlwaysOn
+        ) and isinstance(self.population.stragglers, NoStragglers)
+
+    def __len__(self) -> int:
+        return self._T
+
+    def __iter__(self) -> Iterator[RoundEvent]:
+        return (self[t] for t in range(self._T))
+
+    def __getitem__(self, t: int) -> RoundEvent:
+        if not 0 <= t < self._T:
+            raise IndexError(t)
+        abs0, active, budgets, prev_row = self._block(t // self.chunk_rounds)
+        i = t - (abs0 - self._start)
+        a = active[i]
+        if i > 0:
+            prev = active[i - 1]
+        elif prev_row is not None:
+            prev = prev_row
+        else:
+            prev = np.ones((self.m,), bool)
+        b = budgets[i]
+        return RoundEvent(
+            index=t,
+            active=a,
+            budgets=b,
+            joined=a & ~prev,
+            departed=prev & ~a,
+            full=bool(a.all() and (b == self.num_local_steps).all()),
         )
 
+    def tail(self, start: int) -> "ChunkedRoundSchedule":
+        """Remaining rounds from `start`, still chunked: advances the
+        availability carry to the cut point so the tail continues the
+        exact same trajectory (resume parity with the dense `tail`)."""
+        if not 0 <= start <= self._T:
+            raise IndexError(start)
+        carry, prev_row = self._advance_to(self._start + start)
+        return ChunkedRoundSchedule(
+            self.population,
+            self.seed,
+            self._T - start,
+            self.num_local_steps,
+            chunk_rounds=self.chunk_rounds,
+            start=self._start + start,
+            prev_active=prev_row,
+            _carry0=carry,
+        )
 
-def _force_min_active(active, min_active: int, key):
+    def materialize(self) -> RoundSchedule:
+        """Densify into a `RoundSchedule` (small m / tests only)."""
+        blocks_a, blocks_b = [], []
+        nblocks = -(-self._T // self.chunk_rounds)
+        for b in range(nblocks):
+            _, active, budgets, _ = self._block(b)
+            blocks_a.append(active)
+            blocks_b.append(budgets)
+        return RoundSchedule(
+            np.concatenate(blocks_a),
+            np.concatenate(blocks_b),
+            self.num_local_steps,
+            seed=self.seed,
+            population=self.population,
+            prev_active=self.prev_active,
+        )
+
+    def trace(self) -> dict:
+        return self.summary_trace()
+
+    # --------------------------------------------------------- generation
+    def _sample_window(self, t0: int, t1: int, carry, with_budgets=True):
+        pop = self.population
+        rows, carry1 = pop.availability.sample_rounds(
+            self._k_avail, pop.m, t0, t1, carry
+        )
+        rows = _force_min_active(rows, pop.min_active, self._k_force, t0)
+        rows_np = np.asarray(rows, bool)
+        if not with_budgets:
+            return rows_np, None, carry1
+        budgets = pop.stragglers.budgets_rounds(
+            self._k_strag, rows, t0, self.num_local_steps
+        )
+        budgets = _clamp_budgets(rows, budgets, self.num_local_steps)
+        return rows_np, np.asarray(budgets, np.int32), carry1
+
+    def _advance_to(self, abs_t: int):
+        """Carry + preceding row entering absolute round `abs_t`,
+        replaying forward from the nearest checkpoint at or before it."""
+        s = max(cp for cp in self._carries if cp <= abs_t)
+        carry = self._carries[s]
+        prev_row = self._prev_rows[s]
+        while s < abs_t:
+            e = min(abs_t, s + self.chunk_rounds)
+            rows, _, carry = self._sample_window(
+                s, e, carry, with_budgets=False
+            )
+            prev_row = rows[-1]
+            s = e
+            self._carries[s] = carry
+            self._prev_rows[s] = prev_row
+        return carry, prev_row
+
+    def _block(self, b: int):
+        abs0 = self._start + b * self.chunk_rounds
+        abs1 = min(self._start + self._T, abs0 + self.chunk_rounds)
+        if self._cache is not None and self._cache[0] == abs0:
+            return self._cache
+        carry, prev_row = self._advance_to(abs0)
+        active, budgets, carry1 = self._sample_window(abs0, abs1, carry)
+        self._carries[abs1] = carry1
+        self._prev_rows[abs1] = active[-1]
+        self._cache = (abs0, active, budgets, prev_row)
+        return self._cache
+
+
+class SparseRoundSchedule(ScheduleStats):
+    """O(active)-per-round schedule: every event is a `SparseRoundEvent`
+    carrying the active id list, drawn statelessly from the per-round
+    fold of the availability stream.  Nothing here allocates an [m]
+    row, so a 1e6-agent population with a few hundred active agents
+    costs a few KB per round.  `densify()` scatters the same draws into
+    a dense `RoundSchedule` — the small-m bridge the parity tests pin
+    against."""
+
+    def __init__(
+        self,
+        population,
+        seed: int,
+        num_rounds: int,
+        num_local_steps: int,
+        *,
+        start: int = 0,
+        prev_ids=None,
+    ):
+        from .population import SparseAvailability
+
+        if not isinstance(population.availability, SparseAvailability):
+            raise TypeError(
+                "SparseRoundSchedule needs a SparseAvailability process, "
+                f"got {type(population.availability).__name__}"
+            )
+        size = getattr(population.availability, "size", None)
+        if size is not None and size < population.min_active:
+            raise ValueError(
+                f"subset size {size} is below the population's "
+                f"min_active={population.min_active} floor"
+            )
+        if num_rounds < 1:
+            raise ValueError(f"need >= 1 round, got {num_rounds}")
+        self.population = population
+        self.seed = int(seed)
+        self.num_local_steps = int(num_local_steps)
+        self._T = int(num_rounds)
+        self._start = int(start)
+        self.prev_ids = (
+            None if prev_ids is None else np.asarray(prev_ids, np.int64)
+        )
+        key = availability_key(seed)
+        # same stream split as the dense builder; k_force is unused
+        # because sparse processes guarantee a nonempty draw themselves
+        self._k_avail, self._k_strag, _ = jax.random.split(key, 3)
+        self._ids_cache: dict = {}
+
+    # ------------------------------------------------------------ access
+    @property
+    def num_rounds(self) -> int:
+        return self._T
+
+    @property
+    def m(self) -> int:
+        return self.population.m
+
+    @property
+    def is_static_full(self) -> bool:
+        return False
+
+    def __len__(self) -> int:
+        return self._T
+
+    def __iter__(self) -> Iterator[SparseRoundEvent]:
+        return (self[t] for t in range(self._T))
+
+    def _ids(self, abs_t: int) -> np.ndarray:
+        ids = self._ids_cache.get(abs_t)
+        if ids is None:
+            ids = self.population.availability.sample_active_ids(
+                self._k_avail, self.m, abs_t
+            )
+            # keep only a sliding window: sequential iteration reuses
+            # round t's ids as round t+1's prev without re-drawing
+            if len(self._ids_cache) > 2:
+                self._ids_cache.pop(min(self._ids_cache))
+            self._ids_cache[abs_t] = ids
+        return ids
+
+    def __getitem__(self, t: int) -> SparseRoundEvent:
+        if not 0 <= t < self._T:
+            raise IndexError(t)
+        abs_t = self._start + t
+        ids = self._ids(abs_t)
+        if len(ids) == 0:
+            raise ValueError(f"round {t} has no active agents")
+        budgets = np.clip(
+            self.population.stragglers.budgets_for_ids(
+                self._k_strag, ids, abs_t, self.num_local_steps
+            ),
+            1,
+            self.num_local_steps,
+        ).astype(np.int32)
+        prev = self._ids(abs_t - 1) if t > 0 else self.prev_ids
+        return SparseRoundEvent(
+            index=t,
+            m=self.m,
+            active_ids=ids,
+            budgets=budgets,
+            prev_ids=prev,
+            full=bool(
+                len(ids) == self.m
+                and (budgets == self.num_local_steps).all()
+            ),
+        )
+
+    def tail(self, start: int) -> "SparseRoundSchedule":
+        """Remaining rounds from `start`; round 0 of the tail reports
+        churn against the ids that actually ran before the cut."""
+        if not 0 <= start <= self._T:
+            raise IndexError(start)
+        prev = (
+            self._ids(self._start + start - 1)
+            if start > 0
+            else self.prev_ids
+        )
+        return SparseRoundSchedule(
+            self.population,
+            self.seed,
+            self._T - start,
+            self.num_local_steps,
+            start=self._start + start,
+            prev_ids=prev,
+        )
+
+    def densify(self) -> RoundSchedule:
+        """Scatter into the dense representation (small m only) — the
+        bridge the bitwise small-m parity pin runs through: dense events
+        of the densified schedule equal `ev.to_dense()` of the sparse
+        ones by construction."""
+        active = np.zeros((self._T, self.m), bool)
+        budgets = np.zeros((self._T, self.m), np.int32)
+        for t, ev in enumerate(self):
+            active[t, ev.active_ids] = True
+            budgets[t, ev.active_ids] = ev.budgets
+        prev_active = None
+        if self.prev_ids is not None:
+            prev_active = np.zeros(self.m, bool)
+            prev_active[self.prev_ids] = True
+        return RoundSchedule(
+            active,
+            budgets,
+            self.num_local_steps,
+            seed=self.seed,
+            population=self.population,
+            prev_active=prev_active,
+        )
+
+    def trace(self) -> dict:
+        return self.summary_trace()
+
+
+def _force_min_active(active, min_active: int, key, t0: int = 0):
     """Guarantee >= min_active agents per round: deficient rounds get the
-    top-priority agents (a per-round uniform draw from the schedule's
-    own key stream) force-activated.  Rounds already at the floor are
-    untouched, so the common case stays exactly what the process drew."""
+    top-priority agents (a per-round fold of the schedule's own key
+    stream — row t's draw depends only on the absolute round index, so
+    chunked generation matches dense bitwise) force-activated.  Rounds
+    already at the floor are untouched, so the common case stays exactly
+    what the process drew."""
     T, m = active.shape
     deficit = active.sum(axis=1) < min_active
-    pri = jax.random.uniform(key, (T, m))
+    pri = jax.vmap(
+        lambda t: jax.random.uniform(jax.random.fold_in(key, t), (m,))
+    )(jnp.arange(t0, t0 + T))
     rank = jnp.argsort(jnp.argsort(-pri, axis=1), axis=1)
     forced = rank < min_active
     return jnp.where(deficit[:, None], active | forced, active)

@@ -1,0 +1,552 @@
+"""O(active) elastic execution: sparse tracker state + the sparse round.
+
+The dense elastic path (`sim.elastic`) is correct but m-dense: the
+tracker table, the broadcast stacks and the EF buffers all carry one row
+per POPULATION member.  This module is the million-agent counterpart —
+everything scales with the ACTIVE set:
+
+**SparseTracker.**  The dense tracker table never needs to be held:
+gbar is its MEAN, and only active agents' rows change per round.  So the
+tracker is (a) the running SUM of the full table (one gradient-shaped
+pytree, O(dim)), (b) explicit rows only for agents that have been active
+at least once since init ("touched"), and (c) the anchor iterate
+(x0, y0) at which every untouched agent's row is, by construction, its
+init-time anchor gradient — recomputable on demand from its data.  A
+round updates `sum += Σ_active (g_new - g_old)` and re-anchors the
+touched rows; `gbar = sum / m` equals the dense full-table mean up to
+fp reduction order.  Memory: O(dim + touched); touched grows with
+distinct participants, bounded by m but ~active * rounds in the sparse
+regime.
+
+**SparseElasticEngine.**  Drives `SparseRoundSchedule`s through
+per-round programs whose shapes are [n_active, ...]: data rows are
+gathered from an `AgentDataSource` (dense arrays, or synthesized
+per-id for populations too large to materialize), strategy EF rows are
+re-gathered between rounds via `CommStrategy.realign_state_rows`, and
+noise streams fold GLOBAL agent ids (`RoundState.active_indices`) so an
+agent's draws don't depend on the layout.  With a `sim.PodMap` the
+aggregate runs the two-level tree (`core.engine.pod_weighted_sums` ->
+`pods_total`), optionally shipping the live pods' partials through
+`fed.pods.encode_pod_partials` (dense `PackedTree`s — bitwise codec)
+for wire accounting.
+
+**Dense fallback.**  For m <= `dense_fallback_max_m` the engine
+densifies the schedule and routes through `fed.runtime.FederatedRunner`
++ `sim.make_elastic_round` — the EXISTING dense elastic machinery —
+which is the bitwise small-m pin of the sparse entry point
+(tests/test_sparse_elastic.py).  The genuinely-sparse path matches the
+dense path to fp tolerance for deterministic-draw strategies (reduction
+order differs; RNG-shaped transforms — stochastic rounding, rand-k —
+draw [n·rows] instead of [m·rows] uniforms and are excluded from parity
+by construction).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.engine import (
+    RoundPhases,
+    agent_where,
+    make_noise_vgrad,
+    make_phases,
+    noise_eval_keys,
+    pod_weighted_sums,
+    pods_total,
+    renormalized_weights,
+    tracking_corrections,
+)
+from ..core.types import LossFn, Pytree, grad_xy, identity_proj
+from ..core.types import tree_broadcast_agents
+
+#: populations at or below this size route through the dense elastic
+#: machinery (bitwise-pinned); above it the O(active) path engages
+DENSE_FALLBACK_MAX_M = 4096
+
+
+# ----------------------------------------------------------- data sources
+class AgentDataSource:
+    """O(active) access to per-agent data: the sparse round gathers only
+    the active agents' rows, so a huge population's data never needs to
+    exist as one [m, ...] array."""
+
+    m: int
+
+    def gather(self, ids: np.ndarray) -> Pytree:
+        """Rows (leading axis len(ids)) for the given GLOBAL ids."""
+        raise NotImplementedError
+
+
+class ArrayDataSource(AgentDataSource):
+    """Dense [m, ...] per-agent arrays as a source (simulation scale)."""
+
+    def __init__(self, agent_data: Pytree):
+        self.agent_data = agent_data
+        self.m = int(jax.tree.leaves(agent_data)[0].shape[0])
+
+    def gather(self, ids):
+        idx = jnp.asarray(np.asarray(ids))
+        return jax.tree.map(lambda u: jnp.take(u, idx, axis=0), self.agent_data)
+
+    def materialize(self) -> Pytree:
+        return self.agent_data
+
+
+class SyntheticDataSource(AgentDataSource):
+    """Per-agent data synthesized from the global id on demand:
+    `row_fn(ids[n]) -> rows [n, ...]` must be a pure function of the
+    ids (typically a fold of a data key), so any subset of agents can
+    be generated at any time in O(n) memory — the only way a 1e6-agent
+    population fits on a host."""
+
+    def __init__(self, m: int, row_fn: Callable):
+        self.m = int(m)
+        self._row_fn = row_fn
+
+    def gather(self, ids):
+        return self._row_fn(jnp.asarray(np.asarray(ids)))
+
+    def materialize(self) -> Pytree:
+        # dense fallback / tests only — deliberately O(m)
+        return self.gather(np.arange(self.m, dtype=np.int64))
+
+
+# ---------------------------------------------------------- sparse tracker
+class SparseTracker:
+    """Running-sum + touched-rows representation of the dense tracker
+    table (see module docstring).  Rows live host-side (numpy) because
+    they are a per-agent K/V store, not a tensor the round math scans;
+    the running sums stay on device."""
+
+    def __init__(self, m: int, sum_gx: Pytree, sum_gy: Pytree,
+                 x0: Pytree, y0: Pytree):
+        self.m = int(m)
+        self.sum_gx = sum_gx
+        self.sum_gy = sum_gy
+        self.x0 = x0
+        self.y0 = y0
+        self._index: Dict[int, int] = {}
+        self._gx_leaves: Optional[List[np.ndarray]] = None
+        self._gy_leaves: Optional[List[np.ndarray]] = None
+        self._gx_def = None
+        self._gy_def = None
+        self._cap = 0
+        self._n = 0
+
+    # ------------------------------------------------------------- init
+    @classmethod
+    def init(
+        cls,
+        loss: LossFn,
+        x0: Pytree,
+        y0: Pytree,
+        source: AgentDataSource,
+        chunk: int = 8192,
+    ) -> "SparseTracker":
+        """Σ_i g_i(x0, y0) over ALL m agents, computed in id chunks:
+        O(m) compute once, O(chunk) resident memory — the init cost the
+        sparse representation cannot avoid (gbar is a full-population
+        mean), paid without ever materializing an [m, ...] stack."""
+        gfn = grad_xy(loss)
+
+        @jax.jit
+        def chunk_sums(x, y, data):
+            g = jax.vmap(gfn, in_axes=(None, None, 0))(x, y, data)
+            s = lambda t: jax.tree.map(lambda u: jnp.sum(u, axis=0), t)
+            return s(g.gx), s(g.gy)
+
+        m = source.m
+        chunk = max(1, min(chunk, m))
+        sum_gx = sum_gy = None
+        add = lambda a, b: (
+            b if a is None else jax.tree.map(jnp.add, a, b)
+        )
+        # equal-size main chunks + one remainder: two trace shapes max
+        for lo in range(0, m - m % chunk, chunk):
+            ids = np.arange(lo, lo + chunk, dtype=np.int64)
+            sx, sy = chunk_sums(x0, y0, source.gather(ids))
+            sum_gx, sum_gy = add(sum_gx, sx), add(sum_gy, sy)
+        if m % chunk:
+            ids = np.arange(m - m % chunk, m, dtype=np.int64)
+            sx, sy = chunk_sums(x0, y0, source.gather(ids))
+            sum_gx, sum_gy = add(sum_gx, sx), add(sum_gy, sy)
+        return cls(m, sum_gx, sum_gy, x0, y0)
+
+    # ------------------------------------------------------------ access
+    @property
+    def num_touched(self) -> int:
+        return self._n
+
+    def lookup(self, ids: np.ndarray):
+        """(touched [n] bool, rows_gx, rows_gy) for the given ids; rows
+        of never-touched agents are zeros — the round program replaces
+        them with the recomputed anchor gradient under the mask."""
+        ids = np.asarray(ids)
+        pos = np.array([self._index.get(int(i), -1) for i in ids], np.int64)
+        touched = pos >= 0
+        safe = np.where(touched, pos, 0)
+
+        def take(leaves, treedef, like):
+            if leaves is None:
+                return jax.tree.map(jnp.zeros_like, like)
+            sel = [leaf[safe] for leaf in leaves]
+            out = jax.tree.unflatten(treedef, sel)
+            mask = jnp.asarray(touched)
+            return jax.tree.map(
+                lambda u: jnp.where(
+                    mask.reshape((-1,) + (1,) * (u.ndim - 1)), u,
+                    jnp.zeros_like(u),
+                ),
+                out,
+            )
+
+        n = len(ids)
+        zx = jax.tree.map(
+            lambda u: jnp.zeros((n,) + u.shape, u.dtype), self.x0
+        )
+        zy = jax.tree.map(
+            lambda u: jnp.zeros((n,) + u.shape, u.dtype), self.y0
+        )
+        rows_gx = take(self._gx_leaves, self._gx_def, zx)
+        rows_gy = take(self._gy_leaves, self._gy_def, zy)
+        return touched, rows_gx, rows_gy
+
+    def commit(self, ids: np.ndarray, new_gx: Pytree, new_gy: Pytree,
+               sum_gx: Pytree, sum_gy: Pytree) -> None:
+        """Store this round's fresh anchor rows and adopt the updated
+        running sums the round program computed."""
+        ids = np.asarray(ids)
+        gx_leaves, gx_def = jax.tree.flatten(new_gx)
+        gy_leaves, gy_def = jax.tree.flatten(new_gy)
+        gx_np = [np.asarray(u) for u in gx_leaves]
+        gy_np = [np.asarray(u) for u in gy_leaves]
+        if self._gx_leaves is None:
+            self._gx_def, self._gy_def = gx_def, gy_def
+            self._gx_leaves = [
+                np.empty((0,) + u.shape[1:], u.dtype) for u in gx_np
+            ]
+            self._gy_leaves = [
+                np.empty((0,) + u.shape[1:], u.dtype) for u in gy_np
+            ]
+        # assign row slots (grow geometrically on demand)
+        pos = np.empty(len(ids), np.int64)
+        for j, i in enumerate(np.asarray(ids)):
+            i = int(i)
+            p = self._index.get(i)
+            if p is None:
+                p = self._n
+                self._index[i] = p
+                self._n += 1
+            pos[j] = p
+        if self._n > self._cap:
+            new_cap = max(16, self._cap * 2, self._n)
+            grow = lambda leaves: [
+                np.concatenate(
+                    [u, np.empty((new_cap - len(u),) + u.shape[1:], u.dtype)]
+                )
+                for u in leaves
+            ]
+            self._gx_leaves = grow(self._gx_leaves)
+            self._gy_leaves = grow(self._gy_leaves)
+            self._cap = new_cap
+        for store, rows in zip(self._gx_leaves, gx_np):
+            store[pos] = rows
+        for store, rows in zip(self._gy_leaves, gy_np):
+            store[pos] = rows
+        self.sum_gx, self.sum_gy = sum_gx, sum_gy
+
+
+# ----------------------------------------------------------- sparse engine
+class SparseElasticEngine:
+    """O(active) driver for `SparseRoundSchedule`s (module docstring).
+
+    Always membership-aware (re-normalized 1/n_active weights, tracker
+    running-sum exchange, EF row realignment) — the naive-server
+    `rebase=False` ablation exists only on the dense path, where the
+    full registry it mis-weights over is actually materialized.
+
+    Per-round programs are jitted per active-set SIZE: a fixed-size
+    sampler (`UniformActiveSubset`) compiles once; variable-size
+    processes recompile per distinct n_active.
+    """
+
+    def __init__(
+        self,
+        loss: LossFn,
+        strategy,
+        source: AgentDataSource,
+        num_local_steps: int,
+        eta_x: float,
+        eta_y: Optional[float] = None,
+        *,
+        proj_x: Callable = identity_proj,
+        proj_y: Callable = identity_proj,
+        pod_map=None,
+        wire_pods: bool = False,
+        metric_fn: Optional[Callable] = None,
+        init_chunk: int = 8192,
+        dense_fallback_max_m: int = DENSE_FALLBACK_MAX_M,
+    ):
+        from ..fed.strategies import resolve_strategy
+
+        self._loss = loss
+        self._strategy = resolve_strategy(strategy)
+        self._source = source
+        self._K = int(num_local_steps)
+        self._eta_x = eta_x
+        self._eta_y = eta_x if eta_y is None else eta_y
+        self._proj_x = proj_x
+        self._proj_y = proj_y
+        self._pods = pod_map
+        self._wire_pods = bool(wire_pods)
+        if self._wire_pods and pod_map is None:
+            raise ValueError("wire_pods needs a pod_map")
+        self._metric_raw = metric_fn
+        self._metric_fn = jax.jit(metric_fn) if metric_fn else None
+        self._init_chunk = int(init_chunk)
+        self._fallback_m = int(dense_fallback_max_m)
+        self._use_corr = bool(getattr(self._strategy, "use_correction", False))
+        self._phases: RoundPhases = make_phases(
+            loss, self._strategy, self._K, self._eta_x, self._eta_y,
+            proj_x=proj_x, proj_y=proj_y,
+        )
+        gfn = grad_xy(loss)
+        self._vgrad = jax.vmap(gfn, in_axes=(0, 0, 0))
+        noise = getattr(self._strategy, "noise", None)
+        self._noise = noise
+        self._nvgrad = make_noise_vgrad(gfn, noise) if noise else None
+        self._momentum = float(getattr(self._strategy, "momentum", 0.0) or 0.0)
+        self._jit_round = jax.jit(self._round_program)
+        # cross-run continuation (resume=True)
+        self._tracker: Optional[SparseTracker] = None
+        self._state: Optional[Pytree] = None
+        self._prev_ids: Optional[np.ndarray] = None
+        self._dense_runner = None
+        self.history: List[Dict] = []
+
+    # ----------------------------------------------------- round program
+    def _round_program(self, x, y, data, ids, budgets, touched,
+                       st_gx, st_gy, sum_gx, sum_gy, state, pod_ids,
+                       x0, y0):
+        """One sparse round as a single traced program; `n` is read from
+        the data shapes at trace time (recompiles per distinct size).
+        (x0, y0) is the tracker's init anchor — an argument, not a
+        closure capture, so a fresh non-resume run retraces nothing."""
+        n = jax.tree.leaves(data)[0].shape[0]
+        active = jnp.ones((n,), bool)
+        weights = renormalized_weights(active)
+        rs = self._phases.broadcast(
+            x, y, data, state,
+            weights=weights, step_budgets=budgets, active=active,
+            active_indices=ids,
+        )
+        new_gx = new_gy = None
+        if self._use_corr:
+            if self._noise is None:
+                g = self._vgrad(rs.xs, rs.ys, data)
+            else:
+                g = self._nvgrad(
+                    noise_eval_keys(rs.noise_keys, 0), rs.xs, rs.ys, data
+                )
+            # untouched agents' last table row IS their init anchor
+            # gradient — recompute it at (x0, y0) (the same noiseless
+            # oracle `init_tracker` uses) and select under the mask
+            g0 = self._vgrad(
+                tree_broadcast_agents(x0, n),
+                tree_broadcast_agents(y0, n),
+                data,
+            )
+            old_gx = agent_where(touched, st_gx, g0.gx)
+            old_gy = agent_where(touched, st_gy, g0.gy)
+            upd = lambda s, gn, go: jax.tree.map(
+                lambda sv, nv, ov: sv
+                + jnp.sum(nv - ov, axis=0).astype(sv.dtype),
+                s, gn, go,
+            )
+            sum_gx = upd(sum_gx, g.gx, old_gx)
+            sum_gy = upd(sum_gy, g.gy, old_gy)
+            gbar_x = jax.tree.map(lambda s: s / self._source.m, sum_gx)
+            gbar_y = jax.tree.map(lambda s: s / self._source.m, sum_gy)
+            cdt = getattr(self._strategy, "correction_dtype", None)
+            cx, cy = tracking_corrections(g.gx, g.gy, gbar_x, gbar_y, cdt)
+            cx, cy, state2 = self._strategy.transform_correction(
+                cx, cy, rs.state
+            )
+            if hasattr(cx, "decode"):
+                cx = cx.decode()
+            if hasattr(cy, "decode"):
+                cy = cy.decode()
+            rs = dataclasses.replace(
+                rs, cx=cx, cy=cy, gbar_x=gbar_x, gbar_y=gbar_y,
+                fused=bool(self._strategy.exact_correction)
+                and not self._momentum,
+                state=state2,
+            )
+            new_gx, new_gy = g.gx, g.gy
+        else:
+            rs = self._phases.exchange_corrections(rs, data)
+        rs = self._phases.local_steps(rs, data)
+        pod_px = pod_py = None
+        if self._pods is not None and not getattr(
+            self._strategy, "sync_every_step", False
+        ):
+            # two-level aggregate: agent rows -> per-pod partial
+            # weighted sums -> server total (fp-tolerance-equal to the
+            # flat weighted mean; quiet pods are exact zero rows)
+            pod_px = pod_weighted_sums(
+                rs.xs, rs.weights, pod_ids, self._pods.num_pods
+            )
+            pod_py = pod_weighted_sums(
+                rs.ys, rs.weights, pod_ids, self._pods.num_pods
+            )
+            x1 = self._proj_x(pods_total(pod_px))
+            y1 = self._proj_y(pods_total(pod_py))
+            state3 = rs.state
+        else:
+            x1, y1, state3 = self._phases.aggregate(rs)
+        return (x1, y1, state3, new_gx, new_gy, sum_gx, sum_gy,
+                pod_px, pod_py)
+
+    # --------------------------------------------------------------- run
+    def run(self, x, y, schedule, num_rounds: Optional[int] = None,
+            log_every: int = 0, resume: bool = False):
+        """Drive `num_rounds` (default: all) of `schedule`.  With
+        `resume=True` the engine continues from its own previous run
+        (tracker sums, touched rows, strategy state, prev ids) — pass
+        `schedule.tail(t)` for the remaining rounds."""
+        T = len(schedule) if num_rounds is None else int(num_rounds)
+        if len(schedule) < T:
+            raise ValueError(
+                f"schedule covers {len(schedule)} rounds, need {T}"
+            )
+        if schedule.m != self._source.m:
+            raise ValueError(
+                f"schedule is for m={schedule.m}, source has "
+                f"{self._source.m}"
+            )
+        if (
+            self._fallback_m
+            and self._source.m <= self._fallback_m
+            and hasattr(schedule, "densify")
+            and hasattr(self._source, "materialize")
+        ):
+            return self._run_dense(x, y, schedule, T, log_every, resume)
+        return self._run_sparse(x, y, schedule, T, log_every, resume)
+
+    def _run_dense(self, x, y, schedule, T, log_every, resume):
+        """Small-m fallback: densify and route through the EXISTING
+        dense elastic machinery (`FederatedRunner` +
+        `make_elastic_round`) — bitwise-equal to a dense elastic run by
+        construction, which is the small-m pin of this entry point."""
+        from ..fed.runtime import FederatedRunner
+
+        if self._dense_runner is None:
+            self._dense_runner = FederatedRunner.from_strategy(
+                self._loss, self._strategy, self._source.materialize(),
+                self._K, self._eta_x, self._eta_y,
+                metric_fn=self._metric_raw,
+                proj_x=self._proj_x, proj_y=self._proj_y,
+            )
+        runner = self._dense_runner
+        prev_n = len(runner.history)
+        x, y = runner.run(
+            x, y, T, log_every=log_every,
+            schedule=schedule.densify(),
+            elastic_state=runner.elastic_state if resume else None,
+        )
+        for s in runner.history[prev_n:]:
+            self.history.append(
+                {"round": s.round_index, "path": "dense-fallback",
+                 **s.metrics}
+            )
+        return x, y
+
+    def _run_sparse(self, x, y, schedule, T, log_every, resume):
+        from ..fed.pods import encode_pod_partials
+
+        strategy = self._strategy
+        if resume and self._tracker is None:
+            raise ValueError("resume=True but no previous sparse run")
+        if not resume:
+            self._tracker = (
+                SparseTracker.init(
+                    self._loss, x, y, self._source, self._init_chunk
+                )
+                if self._use_corr
+                else SparseTracker(
+                    self._source.m,
+                    jax.tree.map(jnp.zeros_like, x),
+                    jax.tree.map(jnp.zeros_like, y),
+                    x, y,
+                )
+            )
+            self._state = None
+            self._prev_ids = None
+        for t in range(T):
+            ev = schedule[t]
+            ids = ev.active_ids
+            n = len(ids)
+            data = self._source.gather(ids)
+            if self._state is None:
+                self._state = (
+                    strategy.init_state(x, y, n)
+                    if getattr(strategy, "stateful", False)
+                    else {}
+                )
+            else:
+                # re-gather per-agent state rows (EF residuals) from the
+                # previous round's id layout into this one: continuing
+                # agents keep their rows, everyone else restarts at zero
+                # — the dense `rebase_state` rule over id lists
+                self._state = strategy.realign_state_rows(
+                    self._state, self._prev_ids, ids
+                )
+            touched, st_gx, st_gy = self._tracker.lookup(ids)
+            pod_ids = (
+                jnp.asarray(self._pods.pod_of(ids))
+                if self._pods is not None
+                else jnp.zeros((n,), jnp.int32)
+            )
+            (
+                x, y, self._state, new_gx, new_gy, sum_gx, sum_gy,
+                pod_px, pod_py,
+            ) = self._jit_round(
+                x, y, data, jnp.asarray(ids), jnp.asarray(ev.budgets),
+                jnp.asarray(touched), st_gx, st_gy,
+                self._tracker.sum_gx, self._tracker.sum_gy,
+                self._state, pod_ids,
+                self._tracker.x0, self._tracker.y0,
+            )
+            if self._use_corr:
+                self._tracker.commit(ids, new_gx, new_gy, sum_gx, sum_gy)
+            rec = {"round": t, "path": "sparse", "n_active": n}
+            if self._pods is not None:
+                live = self._pods.live_pods(ids)
+                rec["live_pods"] = len(live)
+                if self._wire_pods and pod_px is not None:
+                    rows = jnp.asarray(live)
+                    gather_live = lambda tree: jax.tree.map(
+                        lambda u: jnp.take(u, rows, axis=0), tree
+                    )
+                    packed = encode_pod_partials(
+                        (gather_live(pod_px), gather_live(pod_py))
+                    )
+                    rec["pod_wire_bytes"] = packed.total_bytes()
+            if self._metric_fn is not None:
+                rec.update(
+                    {k: float(v) for k, v in self._metric_fn(x, y).items()}
+                )
+            self.history.append(rec)
+            if log_every and (t % log_every == 0 or t == T - 1):
+                msg = " ".join(
+                    f"{k}={v:.3e}" if isinstance(v, float) else f"{k}={v}"
+                    for k, v in rec.items()
+                    if k not in ("round", "path")
+                )
+                print(f"[sparse round {t:5d}] {msg}")
+            self._prev_ids = ids
+        return x, y

@@ -51,6 +51,11 @@ def pytest_configure(config):
         "SAGDA / Local SGDA+, noise-fold contract); select with "
         "-m stochastic",
     )
+    config.addinivalue_line(
+        "markers",
+        "pods: O(active) sparse-state + two-level pod-aggregation "
+        "suites (sim.sparse, fed.pods); select with -m pods",
+    )
 
 
 @pytest.fixture(scope="session")

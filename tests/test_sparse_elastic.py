@@ -1,0 +1,569 @@
+"""O(active) sparse elastic + the two-level pod aggregation tree.
+
+The acceptance-grade facts pinned here (PR: million-agent elastic runs):
+  * `ChunkedRoundSchedule` generates the SAME rounds as the dense
+    builder bit-for-bit — including across chunk boundaries for the
+    stateful `MarkovChurn` carry, under random access, and for resumed
+    tails;
+  * the streaming statistics (`participation_rate`, `churn_events`,
+    `summary_trace`) agree across dense / chunked / sparse
+    representations of the same rounds, without densifying;
+  * `SparseRoundSchedule` events scatter (`to_dense` / `densify`) into
+    exactly the dense schedule the parity runs consume, and `tail`
+    reports churn at the resume seam against what actually ran;
+  * `SparseElasticEngine` at small m routes through the dense elastic
+    machinery BITWISE (dense fallback) for all six strategy families,
+    and the genuinely-sparse path matches the dense reference to fp
+    tolerance for the deterministic-draw families (RNG-shaped draws —
+    stochastic rounding — are excluded by construction: they consume
+    [n·rows] instead of [m·rows] uniforms);
+  * resume via `schedule.tail(t)` + `resume=True` is bitwise equal to
+    the uninterrupted run on both the sparse and fallback paths;
+  * the pod tree (`pod_weighted_sums` -> `pods_total`) equals the flat
+    weighted mean to fp tolerance (property-tested), quiet pods are
+    exact zero rows, and `fed.pods.encode_pod_partials` round-trips
+    bitwise through the packed transport;
+  * `schedule_bytes` with pods prices per-agent + per-live-pod traffic
+    streamingly, priced == measured, identically for sparse and
+    densified schedules;
+  * `realign_state_rows` re-gathers EF residual rows across id layouts
+    (continuing agents keep rows, everyone else restarts at zero);
+  * `benchmarks.common.peak_memory` reports a host allocation peak that
+    actually covers the allocation it measured (the primitive behind
+    the 1e6-agent O(active) memory gate).
+"""
+import importlib.util
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import pod_weighted_sums, pods_total
+from repro.fed import (
+    CompressedGT,
+    FederatedRunner,
+    FullSync,
+    GradientTracking,
+    LocalOnly,
+    PartialParticipation,
+    QuantizedGT,
+)
+from repro.fed.pods import (
+    decode_pod_partials,
+    encode_pod_partials,
+    pod_aligned_shard_count,
+    pod_payload_bytes,
+)
+from repro.problems import make_quadratic_problem
+from repro.sim import (
+    ArrayDataSource,
+    BernoulliAvailability,
+    MarkovChurn,
+    PodMap,
+    Population,
+    SparseElasticEngine,
+    UniformActiveSubset,
+    UniformStragglers,
+    schedule_bytes,
+)
+
+pytestmark = [pytest.mark.sim, pytest.mark.pods]
+
+ETA = 1e-4
+M, T, K = 8, 6, 5
+ACTIVE = 4
+
+_HAS_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
+
+
+def _problem(m=M, dim=16, samples=40):
+    return make_quadratic_problem(
+        jax.random.PRNGKey(0), dim=dim, num_samples=samples, num_agents=m
+    )
+
+
+def _sparse_pop(m=M, size=ACTIVE, pods=0):
+    return Population(
+        m,
+        UniformActiveSubset(size=size),
+        UniformStragglers(p_straggle=0.5, min_frac=0.4),
+        pods=pods,
+    )
+
+
+STRATEGIES = [
+    ("full_sync", FullSync(), 1),
+    ("local_only", LocalOnly(), 5),
+    ("gradient_tracking", GradientTracking(), 5),
+    ("partial_participation", PartialParticipation(participation=0.5, seed=0), 5),
+    ("compressed_gt", CompressedGT(compression_ratio=0.25, seed=0), 5),
+    ("quantized_gt", QuantizedGT(bits=8, seed=0), 5),
+]
+# deterministic-draw families for the genuinely-sparse fp parity:
+# QuantizedGT's stochastic rounding draws one uniform per CARRIED row,
+# so [n_active·rows] vs [m·rows] streams diverge by construction
+SPARSE_PARITY = [s for s in STRATEGIES if s[0] != "quantized_gt"]
+
+
+def _events_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a.active), np.asarray(b.active))
+    np.testing.assert_array_equal(np.asarray(a.budgets), np.asarray(b.budgets))
+    np.testing.assert_array_equal(np.asarray(a.joined), np.asarray(b.joined))
+    np.testing.assert_array_equal(
+        np.asarray(a.departed), np.asarray(b.departed)
+    )
+    assert a.full == b.full and a.index == b.index
+
+
+# ------------------------------------------------- chunked == dense bitwise
+class TestChunkedSchedule:
+    CHURN = [
+        MarkovChurn(p_leave=0.3, p_join=0.5),  # stateful: carry threads
+        BernoulliAvailability(p=0.6),          # stateless per-round fold
+    ]
+
+    @pytest.mark.parametrize("avail", CHURN, ids=lambda p: type(p).__name__)
+    def test_chunked_rounds_match_dense_bitwise(self, avail):
+        """Every chunked event equals the dense builder's, with chunk
+        boundaries that do NOT divide T (carry crosses them)."""
+        pop = Population(12, avail, UniformStragglers(0.7, 0.3))
+        dense = pop.schedule(0, 40, K)
+        ch = pop.chunked_schedule(0, 40, K, chunk_rounds=7)
+        assert len(ch) == len(dense) and ch.m == dense.m
+        for t in range(40):
+            _events_equal(ch[t], dense[t])
+
+    def test_chunked_random_access_replays_from_checkpoints(self):
+        pop = Population(10, MarkovChurn(0.2, 0.6), UniformStragglers())
+        dense = pop.schedule(3, 30, K)
+        ch = pop.chunked_schedule(3, 30, K, chunk_rounds=4)
+        # jump straight to a late block, then back behind the carry
+        _events_equal(ch[27], dense[27])
+        _events_equal(ch[2], dense[2])
+        _events_equal(ch[15], dense[15])
+
+    def test_chunked_tail_continues_the_trajectory(self):
+        pop = Population(12, MarkovChurn(0.3, 0.5), UniformStragglers())
+        dense = pop.schedule(0, 40, K)
+        tail = pop.chunked_schedule(0, 40, K, chunk_rounds=7).tail(13)
+        dtail = dense.tail(13)
+        assert len(tail) == len(dtail)
+        for t in range(len(tail)):
+            _events_equal(tail[t], dtail[t])
+
+    def test_chunked_materialize_equals_dense_trace(self):
+        pop = Population(12, MarkovChurn(0.3, 0.5), UniformStragglers())
+        a = pop.schedule(0, 40, K).trace()
+        b = pop.chunked_schedule(0, 40, K, chunk_rounds=9).materialize().trace()
+        np.testing.assert_array_equal(a["active"], b["active"])
+        np.testing.assert_array_equal(a["budgets"], b["budgets"])
+
+
+# ----------------------------------------------- streaming statistics parity
+class TestStreamingStats:
+    def test_stats_agree_dense_vs_chunked(self):
+        pop = Population(12, MarkovChurn(0.3, 0.5), UniformStragglers())
+        dense = pop.schedule(0, 40, K)
+        ch = pop.chunked_schedule(0, 40, K, chunk_rounds=7)
+        assert ch.participation_rate() == pytest.approx(
+            dense.participation_rate(), abs=1e-15
+        )
+        assert ch.churn_events() == dense.churn_events()
+        a, b = dense.summary_trace(), ch.summary_trace()
+        for k in ("num_active", "budget_total", "active_digest"):
+            np.testing.assert_array_equal(a[k], b[k])
+
+    def test_sparse_summary_matches_densified(self):
+        """The CRC digest is over SORTED ACTIVE IDS — representation-
+        independent, so a sparse schedule and its densification summarize
+        identically without either touching the other's layout."""
+        sp = _sparse_pop().sparse_schedule(0, T, K)
+        de = sp.densify()
+        a, b = sp.summary_trace(), de.summary_trace()
+        for k in ("num_active", "budget_total", "active_digest"):
+            np.testing.assert_array_equal(a[k], b[k])
+        assert sp.participation_rate() == pytest.approx(ACTIVE / M, abs=1e-15)
+        assert sp.churn_events() == de.churn_events()
+
+
+# ----------------------------------------------- sparse schedule contract
+class TestSparseScheduleContract:
+    def test_events_scatter_to_the_densified_schedule(self):
+        sp = _sparse_pop().sparse_schedule(0, T, K)
+        de = sp.densify()
+        for t in range(T):
+            _events_equal(sp[t].to_dense(K), de[t])
+
+    def test_event_contract(self):
+        sp = _sparse_pop().sparse_schedule(0, T, K)
+        for ev in sp:
+            ids = ev.active_ids
+            assert ids.dtype == np.int64
+            assert (np.diff(ids) > 0).all()  # sorted unique
+            assert ev.num_active == ACTIVE
+            assert (ev.budgets >= 1).all() and (ev.budgets <= K).all()
+
+    def test_tail_reports_churn_at_the_seam(self):
+        sp = _sparse_pop().sparse_schedule(0, T, K)
+        tail = sp.tail(3)
+        np.testing.assert_array_equal(tail[0].active_ids, sp[3].active_ids)
+        np.testing.assert_array_equal(tail[0].prev_ids, sp[2].active_ids)
+        np.testing.assert_array_equal(
+            tail[0].joined_ids,
+            np.setdiff1d(sp[3].active_ids, sp[2].active_ids),
+        )
+        np.testing.assert_array_equal(
+            tail[0].departed_ids,
+            np.setdiff1d(sp[2].active_ids, sp[3].active_ids),
+        )
+        # a fresh sparse schedule has no predecessor: empty churn report
+        assert sp[0].prev_ids is None and len(sp[0].joined_ids) == 0
+
+    def test_dense_process_is_rejected(self):
+        pop = Population(M, MarkovChurn(), UniformStragglers())
+        with pytest.raises(TypeError, match="SparseAvailability"):
+            pop.sparse_schedule(0, T, K)
+
+
+# ------------------------------------------------- engine parity + resume
+class TestSparseEngineParity:
+    def _reference(self, strategy, Ks, sched, prob, x0):
+        runner = FederatedRunner.from_strategy(
+            prob.loss, strategy, prob.agent_data, Ks, ETA
+        )
+        return runner.run(x0, x0, len(sched), schedule=sched.densify())
+
+    @pytest.mark.parametrize("name,strategy,Ks", STRATEGIES,
+                             ids=[s[0] for s in STRATEGIES])
+    def test_dense_fallback_bitwise_equals_dense_elastic(
+        self, name, strategy, Ks
+    ):
+        """m = 8 <= DENSE_FALLBACK_MAX_M: the sparse entry point routes
+        through the EXISTING dense elastic machinery, bitwise."""
+        prob = _problem()
+        x0 = jnp.zeros(16)
+        sched = _sparse_pop().sparse_schedule(0, T, Ks)
+        xr, yr = self._reference(strategy, Ks, sched, prob, x0)
+        eng = SparseElasticEngine(
+            prob.loss, strategy, ArrayDataSource(prob.agent_data), Ks, ETA
+        )
+        xe, ye = eng.run(x0, x0, sched)
+        np.testing.assert_array_equal(np.asarray(xr), np.asarray(xe))
+        np.testing.assert_array_equal(np.asarray(yr), np.asarray(ye))
+        assert all(r["path"] == "dense-fallback" for r in eng.history)
+
+    @pytest.mark.parametrize("name,strategy,Ks", SPARSE_PARITY,
+                             ids=[s[0] for s in SPARSE_PARITY])
+    def test_forced_sparse_matches_dense_to_fp_tolerance(
+        self, name, strategy, Ks
+    ):
+        """dense_fallback_max_m=0 forces the O(active) path; only the
+        reduction order differs from the dense reference."""
+        prob = _problem()
+        x0 = jnp.zeros(16)
+        sched = _sparse_pop().sparse_schedule(0, T, Ks)
+        xr, yr = self._reference(strategy, Ks, sched, prob, x0)
+        eng = SparseElasticEngine(
+            prob.loss, strategy, ArrayDataSource(prob.agent_data), Ks, ETA,
+            dense_fallback_max_m=0,
+        )
+        xe, ye = eng.run(x0, x0, sched)
+        np.testing.assert_allclose(
+            np.asarray(xr), np.asarray(xe), rtol=1e-8, atol=1e-10
+        )
+        np.testing.assert_allclose(
+            np.asarray(yr), np.asarray(ye), rtol=1e-8, atol=1e-10
+        )
+        assert all(r["path"] == "sparse" for r in eng.history)
+
+    @pytest.mark.parametrize("fallback", [0, 4096],
+                             ids=["sparse", "dense-fallback"])
+    def test_resume_via_tail_is_bitwise(self, fallback):
+        prob = _problem()
+        x0 = jnp.zeros(16)
+        sched = _sparse_pop().sparse_schedule(0, T, K)
+        mk = lambda: SparseElasticEngine(
+            prob.loss, GradientTracking(),
+            ArrayDataSource(prob.agent_data), K, ETA,
+            dense_fallback_max_m=fallback,
+        )
+        full = mk()
+        xf, yf = full.run(x0, x0, sched)
+        split = mk()
+        xm, ym = split.run(x0, x0, sched, num_rounds=3)
+        xs, ys = split.run(xm, ym, sched.tail(3), resume=True)
+        np.testing.assert_array_equal(np.asarray(xf), np.asarray(xs))
+        np.testing.assert_array_equal(np.asarray(yf), np.asarray(ys))
+        assert len(split.history) == len(full.history) == T
+
+    def test_sparse_resume_without_a_run_raises(self):
+        prob = _problem()
+        eng = SparseElasticEngine(
+            prob.loss, GradientTracking(),
+            ArrayDataSource(prob.agent_data), K, ETA,
+            dense_fallback_max_m=0,
+        )
+        sched = _sparse_pop().sparse_schedule(0, T, K)
+        with pytest.raises(ValueError, match="resume"):
+            eng.run(jnp.zeros(16), jnp.zeros(16), sched, resume=True)
+
+    def test_schedule_population_mismatch_raises(self):
+        prob = _problem()
+        eng = SparseElasticEngine(
+            prob.loss, GradientTracking(),
+            ArrayDataSource(prob.agent_data), K, ETA,
+        )
+        sched = _sparse_pop(m=12, size=4).sparse_schedule(0, T, K)
+        with pytest.raises(ValueError, match="m=12"):
+            eng.run(jnp.zeros(16), jnp.zeros(16), sched)
+
+
+# ------------------------------------------------------- pod aggregation
+class TestPodAggregation:
+    def test_pod_engine_matches_flat_and_records_wire(self):
+        """The two-level aggregate changes only the reduction order; the
+        history carries the pod tier's observability (live pods + packed
+        partial payload bytes)."""
+        prob = _problem()
+        x0 = jnp.zeros(16)
+        pop = _sparse_pop(pods=4)
+        sched = pop.sparse_schedule(0, T, K)
+        mk = lambda pods, wire: SparseElasticEngine(
+            prob.loss, GradientTracking(),
+            ArrayDataSource(prob.agent_data), K, ETA,
+            pod_map=pods, wire_pods=wire, dense_fallback_max_m=0,
+        )
+        xf, yf = mk(None, False).run(x0, x0, sched)
+        eng = mk(pop.pod_map(), True)
+        xp, yp = eng.run(x0, x0, sched)
+        np.testing.assert_allclose(
+            np.asarray(xf), np.asarray(xp), rtol=1e-8, atol=1e-10
+        )
+        np.testing.assert_allclose(
+            np.asarray(yf), np.asarray(yp), rtol=1e-8, atol=1e-10
+        )
+        for rec in eng.history:
+            assert 1 <= rec["live_pods"] <= 4
+            assert rec["pod_wire_bytes"] > 0
+
+    def test_pod_tree_equals_flat_weighted_mean(self):
+        """Seeded property sweep: pods_total . pod_weighted_sums is the
+        flat weighted sum for any (n, P, assignment)."""
+        for seed, n, P in [(0, 5, 2), (1, 16, 4), (2, 7, 7), (3, 24, 3)]:
+            k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+            u = {
+                "a": jax.random.normal(k1, (n, 3)),
+                "b": jax.random.normal(k2, (n,)),
+            }
+            w = jax.nn.softmax(jax.random.normal(k3, (n,)))
+            pod_ids = np.asarray(
+                jax.random.randint(k3, (n,), 0, P, jnp.int32)
+            )
+            total = pods_total(
+                pod_weighted_sums(u, w, jnp.asarray(pod_ids), P)
+            )
+            flat = jax.tree.map(
+                lambda v: jnp.tensordot(w.astype(v.dtype), v, axes=1), u
+            )
+            for a, b in zip(jax.tree.leaves(total), jax.tree.leaves(flat)):
+                np.testing.assert_allclose(
+                    np.asarray(a), np.asarray(b), rtol=1e-12, atol=1e-14
+                )
+
+    def test_quiet_pods_are_exact_zero_rows(self):
+        u = jnp.arange(12.0).reshape(4, 3)
+        w = jnp.full((4,), 0.25)
+        pod_ids = jnp.zeros((4,), jnp.int32)  # everyone in pod 0 of 3
+        part = pod_weighted_sums(u, w, pod_ids, 3)
+        np.testing.assert_array_equal(np.asarray(part[1:]), 0.0)
+
+    @pytest.mark.skipif(not _HAS_HYPOTHESIS, reason="needs hypothesis")
+    def test_pod_tree_property_hypothesis(self):
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+
+        @given(
+            seed=st.integers(0, 2**16),
+            n=st.integers(1, 32),
+            num_pods=st.integers(1, 8),
+        )
+        @settings(max_examples=40, deadline=None)
+        def inner(seed, n, num_pods):
+            k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+            u = jax.random.normal(k1, (n, 4))
+            w = jax.nn.softmax(jax.random.normal(k2, (n,)))
+            pod_ids = jax.random.randint(k2, (n,), 0, num_pods, jnp.int32)
+            total = pods_total(pod_weighted_sums(u, w, pod_ids, num_pods))
+            flat = jnp.tensordot(w, u, axes=1)
+            np.testing.assert_allclose(
+                np.asarray(total), np.asarray(flat), rtol=1e-10, atol=1e-12
+            )
+
+        inner()
+
+    def test_encode_decode_roundtrip_is_bitwise(self):
+        k = jax.random.PRNGKey(9)
+        partials = {
+            "x": jax.random.normal(k, (3, 16)),
+            "y": jax.random.normal(k, (3, 5)).astype(jnp.float32),
+        }
+        packed = encode_pod_partials(partials)
+        out = decode_pod_partials(packed)
+        for a, b in zip(jax.tree.leaves(partials), jax.tree.leaves(out)):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert packed.total_bytes() > 0
+
+    def test_pod_payload_priced_equals_measured(self):
+        x = jnp.zeros((16,))
+        y = jnp.zeros((16,))
+        assert pod_payload_bytes(x, y, measured=True) == pod_payload_bytes(
+            x, y, measured=False
+        )
+
+    def test_pod_aligned_shard_count(self):
+        for num_pods in range(1, 25):
+            for max_shards in range(1, 10):
+                d = pod_aligned_shard_count(num_pods, max_shards)
+                assert 1 <= d <= max_shards
+                assert num_pods % d == 0
+                # largest such divisor
+                assert not any(
+                    num_pods % e == 0 for e in range(d + 1, max_shards + 1)
+                )
+        with pytest.raises(ValueError):
+            pod_aligned_shard_count(0, 4)
+
+    def test_pod_map_partition(self):
+        pm = PodMap(10, 3)  # pod_size = ceil(10/3) = 4: pods 4/4/2
+        got = np.concatenate([pm.agents_of(p) for p in range(3)])
+        np.testing.assert_array_equal(got, np.arange(10))
+        np.testing.assert_array_equal(
+            np.asarray(pm.pod_of(np.array([0, 3, 4, 9]))), [0, 0, 1, 2]
+        )
+        np.testing.assert_array_equal(pm.live_pods(np.array([9, 1, 0])), [0, 2])
+
+
+# --------------------------------------------------- wire accounting (pods)
+class TestScheduleBytesWithPods:
+    def test_streaming_price_matches_hand_account(self):
+        from repro.fed.transport import measured_bytes_per_round
+
+        prob = _problem()
+        x = jnp.zeros(16)
+        pop = _sparse_pop(pods=4)
+        sp = pop.sparse_schedule(0, T, K)
+        pm = pop.pod_map()
+        strat = GradientTracking()
+        got = schedule_bytes(strat, x, x, K, sp, pods=pm)
+        per_agent = measured_bytes_per_round(strat, x, x, K)
+        per_pod = pod_payload_bytes(x, x)
+        want = [
+            per_agent * ev.num_active
+            + per_pod * len(pm.live_pods(ev.active_ids))
+            for ev in sp
+        ]
+        assert got == want
+        del prob
+
+    def test_sparse_and_densified_price_identically(self):
+        x = jnp.zeros(16)
+        pop = _sparse_pop(pods=4)
+        sp = pop.sparse_schedule(0, T, K)
+        pm = pop.pod_map()
+        strat = GradientTracking()
+        a = schedule_bytes(strat, x, x, K, sp, pods=pm)
+        b = schedule_bytes(strat, x, x, K, sp.densify(), pods=pm)
+        assert a == b
+
+    def test_priced_equals_measured(self):
+        x = jnp.zeros(16)
+        pop = _sparse_pop(pods=4)
+        sp = pop.sparse_schedule(0, T, K)
+        pm = pop.pod_map()
+        strat = GradientTracking()
+        assert schedule_bytes(
+            strat, x, x, K, sp, pods=pm, measured=True
+        ) == schedule_bytes(strat, x, x, K, sp, pods=pm, measured=False)
+
+
+# ------------------------------------------------------- EF row realignment
+class TestRealignStateRows:
+    def test_continuing_rows_carry_others_restart_at_zero(self):
+        strat = CompressedGT(compression_ratio=0.25, seed=0)
+        x0 = jnp.zeros(16)
+        state = strat.init_state(x0, x0, 3)
+        assert set(strat.sharded_state_keys) <= set(state)
+        # distinguishable rows: row j of the prev layout filled with its
+        # own GLOBAL id
+        prev_ids = np.array([2, 5, 9])
+        for k in strat.sharded_state_keys:
+            state[k] = jax.tree.map(
+                lambda u: jnp.asarray(prev_ids, u.dtype).reshape(
+                    (-1,) + (1,) * (u.ndim - 1)
+                )
+                * jnp.ones_like(u),
+                state[k],
+            )
+        ids = np.array([5, 7, 9])
+        out = strat.realign_state_rows(state, prev_ids, ids)
+        for k in strat.sharded_state_keys:
+            rows = np.asarray(jax.tree.leaves(out[k])[0])
+            np.testing.assert_array_equal(rows[0], 5.0)  # continued
+            np.testing.assert_array_equal(rows[1], 0.0)  # new agent
+            np.testing.assert_array_equal(rows[2], 9.0)  # continued
+
+    def test_none_prev_zeroes_everything(self):
+        strat = CompressedGT(compression_ratio=0.25, seed=0)
+        x0 = jnp.zeros(4)
+        state = strat.init_state(x0, x0, 2)
+        for k in strat.sharded_state_keys:
+            state[k] = jax.tree.map(lambda u: u + 1.0, state[k])
+        out = strat.realign_state_rows(state, None, np.array([0, 1]))
+        for k in strat.sharded_state_keys:
+            for leaf in jax.tree.leaves(out[k]):
+                np.testing.assert_array_equal(np.asarray(leaf), 0.0)
+
+
+# --------------------------------------------------------- pod device groups
+def _data_mesh(devices):
+    return jax.sharding.Mesh(
+        np.array(devices).reshape(8, 1), ("data", "model")
+    )
+
+
+class TestPodDeviceGroups:
+    def test_groups_partition_the_fed_devices(self, fed_devices):
+        from repro.launch.mesh import pod_device_groups
+
+        mesh = _data_mesh(fed_devices)
+        groups = pod_device_groups(mesh, "A", 4)
+        assert len(groups) == 4 and all(len(g) == 2 for g in groups)
+        flat = [d for g in groups for d in g]
+        assert [d.id for d in flat] == sorted(d.id for d in flat)
+        assert len(set(flat)) == 8
+
+    def test_non_dividing_pod_count_is_rejected(self, fed_devices):
+        from repro.launch.mesh import pod_device_groups
+
+        mesh = _data_mesh(fed_devices)
+        with pytest.raises(ValueError, match="divide"):
+            pod_device_groups(mesh, "A", 3)
+
+
+# --------------------------------------------------------- peak-memory gate
+class TestPeakMemoryHelper:
+    def test_reports_cover_the_allocation(self):
+        from benchmarks.common import peak_memory
+
+        n = 400_000  # 3.2 MB of float64
+
+        def work():
+            buf = np.ones(n, np.float64)
+            return float(buf.sum())
+
+        rec = peak_memory(work)
+        assert rec["result"] == float(n)
+        assert rec["host_peak_bytes"] >= n * 8
+        assert rec["live_buffer_bytes"] >= 0
