@@ -39,37 +39,7 @@ def out_dir() -> str:
     return d
 
 
-def peak_memory(fn, *args, **kwargs) -> Dict:
-    """Run fn(*args, **kwargs) and report its peak memory footprint:
-
-      host_peak_bytes    tracemalloc's peak traced python/numpy
-                         allocation during the call (deltas against the
-                         running baseline — tracing starts/stops here);
-      live_buffer_bytes  a census of live jax device buffers at the end
-                         of the call (`jax.live_arrays`), the device-
-                         side residency the traced-malloc peak misses;
-      result             fn's return value.
-
-    This is the measurement behind the O(active) memory gate: the mega
-    population run's peak must scale with the ACTIVE set (+ pods), not
-    with the m = 1e6 registry (`benchmarks/elastic.py --check`)."""
-    import tracemalloc
-
-    import jax
-
-    tracemalloc.start()
-    try:
-        result = fn(*args, **kwargs)
-        _, host_peak = tracemalloc.get_traced_memory()
-    finally:
-        tracemalloc.stop()
-    live = sum(
-        a.size * a.dtype.itemsize
-        for a in jax.live_arrays()
-        if hasattr(a, "size") and hasattr(a, "dtype")
-    )
-    return {
-        "host_peak_bytes": int(host_peak),
-        "live_buffer_bytes": int(live),
-        "result": result,
-    }
+# peak_memory moved to repro.obs.memory (one owner; measurements can now
+# land in a run ledger via its telemetry kwarg) — re-exported here so
+# existing callers keep working unchanged.
+from repro.obs.memory import peak_memory  # noqa: E402,F401

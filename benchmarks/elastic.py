@@ -249,9 +249,8 @@ def run_pods(rows=None):
     active, 1024 pods) through the sparse engine, with peak-memory and
     pod-wire columns, next to a 100x-smaller registry with the same
     active set — the side-by-side that makes O(active + pods) visible."""
+    from repro.obs import peak_memory
     from repro.sim.scenarios import MEGA_ACTIVE, MEGA_AGENTS, MEGA_PODS
-
-    from .common import peak_memory
 
     rows = [] if rows is None else rows
     for label, m in (("mega_1e6", MEGA_AGENTS), ("ref_1e4", MEGA_AGENTS // 100)):
@@ -291,9 +290,8 @@ def check_pods(factor: float = MEGA_MEM_FACTOR,
     broadcast stack, [T, m] schedule mask — ~100 MiB at m=1e6 for the
     table alone) trips it; O(active + pods) state cannot.  Returns the
     number of violations (0 = gate holds)."""
+    from repro.obs import peak_memory
     from repro.sim.scenarios import MEGA_ACTIVE, MEGA_AGENTS, MEGA_PODS
-
-    from .common import peak_memory
 
     def total(m, pods):
         mem = peak_memory(_mega_engine_run, m, MEGA_ACTIVE, pods)

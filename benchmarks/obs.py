@@ -1,0 +1,162 @@
+"""Telemetry overhead — the observability suite's cost gate.
+
+The unified telemetry sink (`repro.obs.Telemetry`) is host-side only: a
+runner given `telemetry=None` executes its exact pre-telemetry trace
+(the bitwise pin, tests/test_obs.py), and an attached sink adds a few
+dict appends and one `perf_counter` pair per round.  This suite measures
+that cost on the Section-5.1 quadratic game through the sync
+`FederatedRunner` — the same runner/round every other benchmark uses —
+in three modes:
+
+  disabled   telemetry=None (the baseline every pin compares against);
+  enabled    an in-memory `Telemetry()` sink, no probes — spans +
+             wire-byte counters only;
+  ledger     the same sink streaming every event to a JSONL run ledger
+             (`repro.obs.RunLedger`), then read BACK from disk: the
+             table's byte column comes from the ledger file, not from
+             the in-memory runner — the consumption path is part of
+             what's measured.
+
+Timing design: the sink costs deterministic microseconds per round,
+while shared-machine scheduler noise arrives in one-sided multi-second
+BURSTS that can straddle several consecutive full-length runs and
+masquerade as sink cost.  So modes are timed as many short interleaved
+chunks (disabled/enabled/ledger rotating every ~0.15 s, faster than the
+burst timescale) and each mode is scored by the mean of its `LOW_K`
+fastest chunks — a low-noise estimator that a single straggling chunk
+cannot move.
+
+`--check` is the CI gate: non-zero exit if enabled-without-probes costs
+more than `CHECK_TOL` (3%) wall-clock over disabled.  Probes are
+deliberately outside the gate — a sampled `gt_residual` does real
+device work and is priced by `--telemetry-probe-every`, not hidden in
+the sink.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fed import FederatedRunner, GradientTracking
+from repro.obs import RunLedger, Telemetry
+from repro.problems import make_quadratic_problem
+
+ETA, K = 1e-4, 10
+DIM, M = 256, 8
+CHUNKS = 24  # interleaved timing chunks per mode
+T_CHUNK = 25  # rounds per chunk: ~0.15 s, well below the noise-burst scale
+LOW_K = 6  # score = mean of each mode's LOW_K fastest chunks
+CHECK_TOL = 0.03  # enabled-without-probes may cost at most 3% wall-clock
+
+
+def _runner():
+    jax.config.update("jax_enable_x64", True)
+    prob = make_quadratic_problem(
+        jax.random.PRNGKey(0), dim=DIM, num_samples=200, num_agents=M
+    )
+    return FederatedRunner.from_strategy(
+        prob.loss, GradientTracking(), prob.agent_data, K, ETA
+    )
+
+
+def _time_chunk(runner, telemetry) -> float:
+    x0 = jnp.zeros(DIM)
+    runner.telemetry = telemetry
+    t0 = time.perf_counter()
+    out = runner.run(x0, x0, T_CHUNK)
+    jax.block_until_ready(out)  # completion, not async-dispatch, time
+    return time.perf_counter() - t0
+
+
+def _measure(runner, sinks):
+    """Chunk-interleaved low-quartile timing.  `sinks` is one telemetry
+    (or None) per mode; every mode runs CHUNKS chunks, rotating mode
+    each chunk so noise bursts hit all modes alike, and is scored by the
+    mean of its LOW_K fastest chunks."""
+    _time_chunk(runner, None)  # compile + cache warmup, shared by all modes
+    _time_chunk(runner, None)
+    times = [[] for _ in sinks]
+    for _ in range(CHUNKS):
+        for mode, tm in enumerate(sinks):
+            times[mode].append(_time_chunk(runner, tm))
+    return [float(np.mean(sorted(ts)[:LOW_K])) for ts in times]
+
+
+def run(rows=None):
+    rows = [] if rows is None else rows
+    runner = _runner()
+
+    # ledger mode: stream to JSONL, then CONSUME the file — byte truth
+    # for the table comes from reading the run ledger back, the same
+    # path post-hoc analysis uses
+    with tempfile.TemporaryDirectory() as d:
+        ledger = RunLedger(d)
+        tm_on = Telemetry()
+        off_s, on_s, led_s = _measure(
+            runner, [None, tm_on, Telemetry(ledger=ledger)]
+        )
+        ledger.close()
+        events = RunLedger.events(d)
+    runner.telemetry = None
+    led_bytes = sum(
+        e["value"] for e in events
+        if e["kind"] == "counter" and e["name"] == "wire_bytes"
+    )
+
+    def row(mode, secs, n_events, bytes_=""):
+        return {
+            "mode": mode,
+            "rounds": CHUNKS * T_CHUNK,
+            "chunk_s": f"{secs:.3f}",
+            "per_round_us": f"{secs / T_CHUNK * 1e6:.1f}",
+            "overhead_pct": f"{(secs / off_s - 1) * 100:.2f}",
+            "events": n_events,
+            "ledger_wire_bytes": bytes_,
+        }
+
+    rows.append(row("disabled", off_s, 0))
+    rows.append(row("enabled", on_s, len(tm_on.events)))
+    rows.append(row("ledger", led_s, len(events), led_bytes))
+    from .common import emit
+
+    emit(
+        rows,
+        ["mode", "rounds", "chunk_s", "per_round_us", "overhead_pct",
+         "events", "ledger_wire_bytes"],
+        f"telemetry overhead, sync quadratic round (dim={DIM}, m={M}, "
+        f"K={K}; gate: enabled <= {CHECK_TOL:.0%} over disabled)",
+    )
+    return rows
+
+
+def check(tol: float = CHECK_TOL) -> int:
+    runner = _runner()
+    off_s, on_s = _measure(runner, [None, Telemetry()])
+    ratio = on_s / off_s
+    ok = ratio <= 1.0 + tol
+    print(
+        f"[{'ok' if ok else 'FAIL'}] obs: enabled/disabled wall-clock "
+        f"ratio {ratio:.4f} (disabled {off_s:.3f}s, enabled {on_s:.3f}s "
+        f"per {T_CHUNK}-round chunk, budget {1.0 + tol:.2f})"
+    )
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="CI gate: exit non-zero if the enabled-without-probes sink "
+             f"costs > {CHECK_TOL:.0%} wall-clock over disabled",
+    )
+    args = ap.parse_args()
+    if args.check:
+        sys.exit(check())
+    run()

@@ -21,6 +21,8 @@ Tables:
   collectives — per-round collective traffic by algorithm (HLO census)
   kernels     — Pallas kernels vs ref oracles
   roofline    — three-term roofline per (arch x shape) (deliverable g)
+  obs         — telemetry sink overhead, disabled vs enabled vs ledger
+                (the gate is obs.py --check: enabled <= 3% over disabled)
 """
 from __future__ import annotations
 
@@ -39,6 +41,7 @@ def main() -> None:
         fig3_fixed_point,
         generalization,
         kernels,
+        obs,
         roofline,
     )
 
@@ -55,6 +58,7 @@ def main() -> None:
         "collectives": comm_collectives.run,
         "kernels": kernels.run,
         "roofline": roofline.run,
+        "obs": obs.run,
     }
     summary = []
     for name, fn in suites.items():

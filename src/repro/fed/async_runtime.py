@@ -138,10 +138,16 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
         metric_fn: Optional[Callable] = None,
         devices: Optional[Sequence] = None,
         pod_map=None,
+        telemetry=None,
         **strategy_kwargs,
     ):
         self._strategy = resolve_strategy(strategy, **strategy_kwargs)
         self._K = num_local_steps
+        #: repro.obs.Telemetry sink or None (None = pre-telemetry code
+        #: verbatim); public so tests flip it on a compiled runner
+        self.telemetry = telemetry
+        self._loss = loss
+        self._num_local_steps = num_local_steps
         self._eta_x = eta_x
         self._eta_y = eta_x if eta_y is None else eta_y
         self._proj_x = proj_x
@@ -535,11 +541,17 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
             # degenerate schedule: the overlapped legacy loop below IS
             # the full-participation run
             schedule = None
+        self._last_schedule = schedule
         if schedule is not None:
             return self._run_elastic(
                 x, y, num_rounds, schedule, rebase, log_every,
                 elastic_state,
             )
+        tm = self.telemetry
+        per_agent = None
+        if tm is not None:
+            self._emit_wire_probe(tm, x, y)
+            per_agent = self._wire_counter_args(x, y, scheduled=False)
         # double-buffered broadcast: the per-shard (x, y) copies for the
         # round ABOUT to run; refreshed (device_put enqueued) as soon as
         # the aggregate producing the next iterates is dispatched.
@@ -548,6 +560,8 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
         bcast = None if self._sync_every else self._bcast(x, y)
         for t in range(num_rounds):
             t0 = time.perf_counter()
+            if tm is not None:
+                tm.begin_round(t)
             if self._sync_every:
                 x, y = self._run_fullsync_round(x, y)
             else:
@@ -559,6 +573,18 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
                 }
             dt = time.perf_counter() - t0
             self.history.append(RoundStats(t, metrics, dt))
+            if tm is not None:
+                tm.round_event(
+                    t, runtime="async", seconds=dt,
+                    n_shards=self._n_shards,
+                )
+                if per_agent is not None:
+                    tm.counter(
+                        "wire_bytes", per_agent * self._m,
+                        per_agent=per_agent, n_active=self._m,
+                    )
+                self._emit_probes(tm, t, x, y)
+                tm.end_round(t)
             if log_every and (t % log_every == 0 or t == num_rounds - 1):
                 msg = " ".join(f"{k}={v:.3e}" for k, v in metrics.items())
                 print(f"[async round {t:5d}] {msg} ({dt*1e3:.1f} ms)")
@@ -566,6 +592,9 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
         return x, y
 
     def _run_round(self, x, y, bcast):
+        from ..obs.telemetry import maybe_span
+
+        tm = self.telemetry
         weights, w_slices = self._round_weights()
         nk_slices = self._round_noise_keys()
         per = self._per
@@ -576,53 +605,67 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
             # before any result is awaited (async dispatch == one stream
             # per device); the device_put gathers below overlap shards
             # that are still computing
-            gs = [
-                self._shard_grads(bx, by, data, nk)
-                for (bx, by), data, nk in zip(
-                    bcast, self._data_s, nk_slices
+            with maybe_span(tm, "exchange_corrections",
+                            dispatches=self._n_shards):
+                gs = [
+                    self._shard_grads(bx, by, data, nk)
+                    for (bx, by), data, nk in zip(
+                        bcast, self._data_s, nk_slices
+                    )
+                ]
+                gx = self._concat_server([g[0] for g in gs])
+                gy = self._concat_server([g[1] for g in gs])
+                full_state = self._gather_state()
+                cx, cy, gbar_x, gbar_y, new_state = self._server_exchange(
+                    gx, gy, full_state, weights
                 )
-            ]
-            gx = self._concat_server([g[0] for g in gs])
-            gy = self._concat_server([g[1] for g in gs])
-            full_state = self._gather_state()
-            cx, cy, gbar_x, gbar_y, new_state = self._server_exchange(
-                gx, gy, full_state, weights
-            )
-            self._scatter_state(dict(new_state))
-            # down-link: correction slices + the global anchor gradient
-            cx_s = [
-                jax.device_put(_slice_agents(cx, i * per, (i + 1) * per), d)
-                for i, d in enumerate(self._shard_devices)
-            ]
-            cy_s = [
-                jax.device_put(_slice_agents(cy, i * per, (i + 1) * per), d)
-                for i, d in enumerate(self._shard_devices)
-            ]
-            gbx_s = [jax.device_put(gbar_x, d) for d in self._shard_devices]
-            gby_s = [jax.device_put(gbar_y, d) for d in self._shard_devices]
+                self._scatter_state(dict(new_state))
+                # down-link: correction slices + the global anchor gradient
+                cx_s = [
+                    jax.device_put(
+                        _slice_agents(cx, i * per, (i + 1) * per), d
+                    )
+                    for i, d in enumerate(self._shard_devices)
+                ]
+                cy_s = [
+                    jax.device_put(
+                        _slice_agents(cy, i * per, (i + 1) * per), d
+                    )
+                    for i, d in enumerate(self._shard_devices)
+                ]
+                gbx_s = [
+                    jax.device_put(gbar_x, d) for d in self._shard_devices
+                ]
+                gby_s = [
+                    jax.device_put(gbar_y, d) for d in self._shard_devices
+                ]
         elif self._use_corr:
             # m == 1: correction identically zero — build it shard-side
             z = [self._zeros_like_agents(bx, by) for (bx, by) in bcast]
             cx_s = [zi[0] for zi in z]
             cy_s = [zi[1] for zi in z]
 
-        sums = [
-            self._shard_steps(
-                bx, by, data, cxi, cyi, gbxi, gbyi, wi, None, nki
+        with maybe_span(tm, "local_steps", dispatches=self._n_shards):
+            sums = [
+                self._shard_steps(
+                    bx, by, data, cxi, cyi, gbxi, gbyi, wi, None, nki
+                )
+                for (bx, by), data, cxi, cyi, gbxi, gbyi, wi, nki in zip(
+                    bcast, self._data_s, cx_s, cy_s, gbx_s, gby_s, w_slices,
+                    nk_slices,
+                )
+            ]
+        with maybe_span(tm, "aggregate"):
+            x1, y1 = self._server_combine(
+                [jax.device_put(a, self._server) for a, _ in sums],
+                [jax.device_put(b, self._server) for _, b in sums],
             )
-            for (bx, by), data, cxi, cyi, gbxi, gbyi, wi, nki in zip(
-                bcast, self._data_s, cx_s, cy_s, gbx_s, gby_s, w_slices,
-                nk_slices,
-            )
-        ]
-        x1, y1 = self._server_combine(
-            [jax.device_put(a, self._server) for a, _ in sums],
-            [jax.device_put(b, self._server) for _, b in sums],
-        )
         # double-buffer flip: enqueue next round's broadcast immediately
         # (the transfers ride behind the still-executing local steps; the
         # donated buffers they replace free as those programs retire)
-        return x1, y1, self._bcast(x1, y1)
+        with maybe_span(tm, "broadcast", dispatches=self._n_shards):
+            bcast = self._bcast(x1, y1)
+        return x1, y1, bcast
 
     # ---------------------------------------------------------- elastic rounds
     def _run_elastic(self, x, y, num_rounds, schedule, rebase, log_every,
@@ -663,6 +706,9 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
         }
 
     def _run_elastic_round(self, x, y, ev, agg, tracker, prev_active):
+        from ..obs.telemetry import maybe_span
+
+        tm = self.telemetry
         per = self._per
         active = jax.device_put(jnp.asarray(ev.active), self._server)
         weights = agg.weights(active)
@@ -670,6 +716,10 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
         shard_live = [
             bool(ev.active[i * per : (i + 1) * per].any()) for i in range(n)
         ]
+        if tm is not None:
+            for i, live in enumerate(shard_live):
+                if not live:
+                    tm.emit("event", "shard_skipped", shard=i)
 
         if self._sync_every:
             x, y = self._run_fullsync_round(x, y, weights, shard_live)
@@ -684,10 +734,11 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
         # fresh per-shard broadcast (no donation — see shard_steps_elastic);
         # absent shards still receive it cheaply enough, keeping the
         # transfer schedule uniform
-        bcast = [
-            (jax.device_put(x, d), jax.device_put(y, d))
-            for d in self._shard_devices
-        ]
+        with maybe_span(tm, "broadcast", dispatches=n):
+            bcast = [
+                (jax.device_put(x, d), jax.device_put(y, d))
+                for d in self._shard_devices
+            ]
         w_slices = [
             jax.device_put(weights[i * per : (i + 1) * per], d)
             for i, d in enumerate(self._shard_devices)
@@ -700,6 +751,7 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
         cx_s = cy_s = [None] * n
         gbx_s = gby_s = [None] * n
         if self._use_corr:
+            _exch_t0 = time.perf_counter()
             if tracker is None:
                 tracker = self._init_tracker(bcast)
             else:
@@ -745,34 +797,37 @@ class AsyncFederatedRunner(RunnerHistoryMixin):
             ]
             gbx_s = [jax.device_put(gbar_x, d) for d in self._shard_devices]
             gby_s = [jax.device_put(gbar_y, d) for d in self._shard_devices]
+            if tm is not None:
+                # post-hoc span (the body stays un-nested): dispatch +
+                # host time of the live shards' exchange fan-out
+                tm.emit(
+                    "span", "exchange_corrections",
+                    seconds=time.perf_counter() - _exch_t0,
+                    dispatches=sum(shard_live),
+                )
 
         # local steps only on live shards: a shard that left this round
         # runs NOTHING (that is the elastic contract — its weight slice
         # is zero, so it has no aggregate share either)
-        sums = [
-            self._shard_steps_elastic(
-                bcast[i][0], bcast[i][1], self._data_s[i],
-                cx_s[i], cy_s[i], gbx_s[i], gby_s[i],
-                w_slices[i], b_slices[i], nk_slices[i],
+        with maybe_span(tm, "local_steps", dispatches=sum(shard_live)):
+            sums = [
+                self._shard_steps_elastic(
+                    bcast[i][0], bcast[i][1], self._data_s[i],
+                    cx_s[i], cy_s[i], gbx_s[i], gby_s[i],
+                    w_slices[i], b_slices[i], nk_slices[i],
+                )
+                for i in range(n)
+                if shard_live[i]
+            ]
+        with maybe_span(tm, "aggregate"):
+            x1, y1 = self._server_combine(
+                [jax.device_put(a, self._server) for a, _ in sums],
+                [jax.device_put(b, self._server) for _, b in sums],
             )
-            for i in range(n)
-            if shard_live[i]
-        ]
-        x1, y1 = self._server_combine(
-            [jax.device_put(a, self._server) for a, _ in sums],
-            [jax.device_put(b, self._server) for _, b in sums],
-        )
         return x1, y1, tracker
 
     # ------------------------------------------------------------- reporting
-    def wire_report(self, x: Pytree, y: Pytree, num_local_steps: int) -> Dict:
-        from .transport import measured_bytes_per_round
-
-        return {
-            "bytes_per_round": int(
-                self._strategy.bytes_per_round(x, y, num_local_steps)
-            ),
-            "measured_bytes_per_round": measured_bytes_per_round(
-                self._strategy, x, y, num_local_steps
-            ),
-        }
+    # `wire_report` comes from RunnerHistoryMixin (one owner for both
+    # runtimes, schedule-aware); probes read the gathered state:
+    def _telemetry_state(self) -> Dict:
+        return self._gather_state()

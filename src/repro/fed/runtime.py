@@ -33,6 +33,19 @@ via the strategy's `rebase_state` hook; `rebase=False` is the
 naive-server ablation).  A static-full schedule degenerates to the
 unmodified legacy loop, so full participation stays bitwise identical
 to running without a schedule (tests/test_elastic.py).
+
+Both runners emit into an optional `repro.obs.Telemetry` sink
+(`telemetry=...`): per-round spans, wire-byte counters
+(`sim.per_agent_bytes` x the round's active count — the same
+active-set-aware account `wire_report` prices), and sampled invariant
+probes (`repro.obs.probes`).  `telemetry=None` (the default) runs the
+pre-telemetry code verbatim — the sink lives entirely on the host, the
+jitted round programs never change, and iterates stay bitwise identical
+(tests/test_obs.py).  `Telemetry(phase_spans=True)` additionally lets a
+strategy-built sync runner dispatch the four engine phases as SEPARATE
+jitted programs for genuine per-phase wall-clock — matching the fused
+round to fp tolerance by the phases contract (tests/test_phases.py: the
+composition is the same math, only XLA's program partitioning differs).
 """
 from __future__ import annotations
 
@@ -56,19 +69,161 @@ class RoundStats:
 
 
 class RunnerHistoryMixin:
-    """Per-round history + the elastic-schedule driver shared by the
-    sync and async runners."""
+    """Per-round history, the wire report, telemetry emission and the
+    elastic-schedule driver shared by the sync and async runners."""
 
     history: List[RoundStats]
+    #: optional `repro.obs.Telemetry` sink — PUBLIC so tests can flip it
+    #: on an already-compiled runner; None runs the pre-telemetry code
+    #: verbatim (the bitwise pin, tests/test_obs.py)
+    telemetry = None
+    #: remembered by `run(..., schedule=...)` so `wire_report` defaults
+    #: to the schedule the run actually executed
+    _last_schedule = None
+    _num_local_steps: Optional[int] = None
+    _loss: Optional[Callable] = None
 
     def metric_series(self, name: str) -> np.ndarray:
         available = sorted({k for s in self.history for k in s.metrics})
-        if self.history and name not in available:
+        if name not in available:
+            # also on an EMPTY history: a silent empty array for any
+            # name hides typos exactly when a run produced nothing
             raise ValueError(
                 f"unknown metric {name!r}; available metric keys: "
                 f"{available}"
             )
         return np.array([s.metrics[name] for s in self.history])
+
+    def wire_report(
+        self,
+        x: Pytree,
+        y: Pytree,
+        num_local_steps: int,
+        schedule=None,
+        pods=None,
+    ) -> Dict:
+        """Priced vs measured per-round communication for this runner's
+        strategy: the analytic `bytes_per_round` next to the probe of the
+        actual packed buffer lengths (`transport.measured_bytes_per_round`,
+        headers included).  Requires a strategy-built runner.
+
+        On an elastic/sparse run the full-participation price is wrong —
+        only the schedule's active agents move bytes — so with a
+        schedule (passed explicitly, or remembered from the last
+        `run(..., schedule=...)`) the report adds the active-set-aware
+        account via `sim.schedule_bytes`: the per-ACTIVE-agent payload
+        (`sim.per_agent_bytes` — participation patched to 1, membership
+        comes from the schedule) and the scheduled totals."""
+        if self._strategy is None:
+            raise ValueError("wire_report needs a runner built from_strategy")
+        from .transport import measured_bytes_per_round
+
+        report = {
+            "bytes_per_round": int(
+                self._strategy.bytes_per_round(x, y, num_local_steps)
+            ),
+            "measured_bytes_per_round": measured_bytes_per_round(
+                self._strategy, x, y, num_local_steps
+            ),
+        }
+        if schedule is None:
+            schedule = self._last_schedule
+        if schedule is not None and not getattr(
+            schedule, "is_static_full", False
+        ):
+            from ..sim.elastic import per_agent_bytes, schedule_bytes
+
+            totals = schedule_bytes(
+                self._strategy, x, y, num_local_steps, schedule, pods=pods
+            )
+            report["scheduled_per_agent_bytes"] = per_agent_bytes(
+                self._strategy, x, y, num_local_steps
+            )
+            report["scheduled_total_bytes"] = int(np.sum(totals))
+            report["scheduled_mean_bytes_per_round"] = float(np.mean(totals))
+        return report
+
+    # ------------------------------------------------------- telemetry
+    def _telemetry_state(self) -> Optional[Dict]:
+        """The strategy-state dict probes read (EF residual buffers);
+        overridden by runners that hold state elsewhere (sharded)."""
+        return getattr(self, "_state", None)
+
+    def _wire_counter_args(self, x, y, scheduled: bool = True
+                           ) -> Optional[int]:
+        """Per-agent payload for the "wire_bytes" counter; None when the
+        runner lacks the strategy/K context (raw-round runners).  On a
+        scheduled (elastic) run membership comes from the schedule, so
+        the payload is `sim.per_agent_bytes` (participation patched to
+        1) — the same account `wire_report` and `sim.schedule_bytes`
+        price.  Unscheduled, the strategy's OWN client sampling governs
+        and the payload is `measured_bytes_per_round` as-is."""
+        if self._strategy is None or self._num_local_steps is None:
+            return None
+        if scheduled:
+            from ..sim.elastic import per_agent_bytes
+
+            return per_agent_bytes(
+                self._strategy, x, y, self._num_local_steps
+            )
+        from .transport import measured_bytes_per_round
+
+        return int(measured_bytes_per_round(
+            self._strategy, x, y, self._num_local_steps
+        ))
+
+    def _emit_wire_probe(self, tm, x, y) -> None:
+        """One-shot priced-vs-measured probe at run start."""
+        if (
+            self._strategy is None
+            or self._num_local_steps is None
+            or not tm.probe_due("priced_vs_measured", 0)
+        ):
+            return
+        from ..obs import probes as _p
+
+        tm.probe_value(
+            "priced_vs_measured",
+            0,
+            _p.priced_vs_measured(
+                self._strategy, x, y, self._num_local_steps
+            ),
+        )
+
+    def _emit_probes(self, tm, t, x, y, tracker=None) -> None:
+        """Sampled invariant probes shared by both runners — pure
+        functions from `repro.obs.probes` over state the runner already
+        holds.  `tracker` is the elastic tracker table on an elastic
+        round; without one the GT residual recomputes the anchor
+        corrections from the loss (full participation only)."""
+        from ..obs import probes as _p
+
+        if tm.probe_due("gt_residual", t):
+            if tracker is not None:
+                if tracker.get("gx") is not None:
+                    cx, cy = _p.corrections_from_table(
+                        tracker["gx"], tracker["gy"]
+                    )
+                    tm.probe_value("gt_residual", t, _p.gt_residual(cx, cy))
+            elif (
+                self._loss is not None
+                and getattr(self._strategy, "use_correction", False)
+                and getattr(self, "_agent_data", None) is not None
+            ):
+                from ..core.types import grad_xy
+
+                cx, cy = _p.anchor_corrections(
+                    grad_xy(self._loss), x, y, self._agent_data
+                )
+                tm.probe_value("gt_residual", t, _p.gt_residual(cx, cy))
+        if tm.probe_due("ef_residual", t):
+            norms = _p.ef_residual_norms(self._telemetry_state())
+            if norms:
+                tm.probe_value("ef_residual", t, norms)
+        if tm.gap_fn is not None and tm.probe_due("duality_gap", t):
+            tm.probe_value(
+                "duality_gap", t, _p.duality_gap(tm.gap_fn, x, y)
+            )
 
     def _drive_elastic(
         self,
@@ -117,9 +272,16 @@ class RunnerHistoryMixin:
         else:
             tracker = init_tracker_fn(x, y)
             prev_active = None
+        tm = self.telemetry
+        per_agent = None
+        if tm is not None:
+            self._emit_wire_probe(tm, x, y)
+            per_agent = self._wire_counter_args(x, y)
         for t in range(num_rounds):
             t0 = time.perf_counter()
             ev = schedule[t]
+            if tm is not None:
+                tm.begin_round(t)
             x, y, tracker = round_fn(x, y, ev, agg, tracker, prev_active)
             prev_active = jnp.asarray(ev.active)
             metrics = {"n_active": float(ev.num_active)}
@@ -129,6 +291,18 @@ class RunnerHistoryMixin:
                 )
             dt = time.perf_counter() - t0
             self.history.append(RoundStats(t, metrics, dt))
+            if tm is not None:
+                tm.round_event(
+                    t, runtime=label, seconds=dt,
+                    n_active=int(ev.num_active),
+                )
+                if per_agent is not None:
+                    tm.counter(
+                        "wire_bytes", per_agent * int(ev.num_active),
+                        per_agent=per_agent, n_active=int(ev.num_active),
+                    )
+                self._emit_probes(tm, t, x, y, tracker=tracker)
+                tm.end_round(t)
             if log_every and (t % log_every == 0 or t == num_rounds - 1):
                 msg = " ".join(f"{k}={v:.3e}" for k, v in metrics.items())
                 print(f"[{label} {t:5d}] {msg} ({dt*1e3:.1f} ms)")
@@ -151,6 +325,7 @@ class FederatedRunner(RunnerHistoryMixin):
         strategy=None,
         elastic_round_fn: Optional[Callable] = None,
         tracker_init_fn: Optional[Callable] = None,
+        telemetry=None,
     ):
         self._round = jax.jit(round_fn)
         self._agent_data = agent_data
@@ -161,6 +336,16 @@ class FederatedRunner(RunnerHistoryMixin):
         # explicit_state=True and is called as round(x, y, data, state)
         self._strategy = strategy
         self._state: Optional[Pytree] = None
+        #: repro.obs.Telemetry sink or None (None = pre-telemetry code
+        #: verbatim); public so tests flip it on a compiled runner
+        self.telemetry = telemetry
+        # set by from_strategy — feed the wire counters / probes and the
+        # lazily-jitted per-phase programs (Telemetry(phase_spans=True))
+        self._loss: Optional[Callable] = None
+        self._num_local_steps: Optional[int] = None
+        self._phase_factory: Optional[Callable] = None
+        self._phase_fns = None
+        self._last_schedule = None
         # elastic (sim.RoundSchedule) support: the membership-aware round
         # round(x, y, data, state, tracker, weights, budgets, active)
         # and the tracker-table initializer (x, y, data) -> tracker.
@@ -187,13 +372,14 @@ class FederatedRunner(RunnerHistoryMixin):
         metric_fn: Optional[Callable] = None,
         checkpoint_dir: Optional[str] = None,
         checkpoint_every: int = 0,
+        telemetry=None,
         **round_kwargs,
     ) -> "FederatedRunner":
         """Build the round for `strategy` (name or CommStrategy) via the
         unified engine and wrap it in a runner."""
         import functools
 
-        from ..core.engine import make_round
+        from ..core.engine import make_phases, make_round
         from ..sim.elastic import init_tracker, make_elastic_round
         from .strategies import resolve_strategy
 
@@ -215,7 +401,7 @@ class FederatedRunner(RunnerHistoryMixin):
         elastic = make_elastic_round(
             loss, strategy, num_local_steps, eta_x, eta_y, **elastic_kwargs
         )
-        return cls(
+        runner = cls(
             rnd,
             agent_data,
             metric_fn=metric_fn,
@@ -224,7 +410,21 @@ class FederatedRunner(RunnerHistoryMixin):
             strategy=strategy,
             elastic_round_fn=elastic,
             tracker_init_fn=functools.partial(init_tracker, loss, strategy),
+            telemetry=telemetry,
         )
+        runner._loss = loss
+        runner._num_local_steps = num_local_steps
+        # deferred: Telemetry(phase_spans=True) rebuilds the SAME phases
+        # as separate jitted programs (bitwise-identical to the fused
+        # round — tests/test_phases.py); nothing is traced until used
+        runner._phase_factory = functools.partial(
+            make_phases, loss, strategy, num_local_steps, eta_x, eta_y,
+            **{
+                k: v for k, v in round_kwargs.items()
+                if k in ("proj_x", "proj_y", "update_fn", "constrain_agents")
+            },
+        )
+        return runner
 
     @property
     def _stateful(self) -> bool:
@@ -267,14 +467,32 @@ class FederatedRunner(RunnerHistoryMixin):
             # degenerate schedule (all agents, full budgets, every
             # round): the legacy loop below IS that run, bitwise
             schedule = None
+        self._last_schedule = schedule
         if schedule is not None:
             return self._run_elastic(
                 x, y, num_rounds, schedule, rebase, log_every,
                 elastic_state,
             )
+        tm = self.telemetry
+        per_agent = None
+        round_dispatch = None
+        if tm is not None:
+            self._emit_wire_probe(tm, x, y)
+            per_agent = self._wire_counter_args(x, y, scheduled=False)
+            if tm.phase_spans and self._phase_factory is not None:
+                round_dispatch = self._phase_round(tm)
         for t in range(num_rounds):
             t0 = time.perf_counter()
-            if self._stateful:
+            if tm is not None:
+                tm.begin_round(t)
+            if round_dispatch is not None:
+                x, y, new_state = round_dispatch(
+                    x, y, self._agent_data,
+                    self._state if self._stateful else {},
+                )
+                if self._stateful:
+                    self._state = new_state
+            elif self._stateful:
                 x, y, self._state = self._round(
                     x, y, self._agent_data, self._state
                 )
@@ -288,6 +506,16 @@ class FederatedRunner(RunnerHistoryMixin):
                 }
             dt = time.perf_counter() - t0
             self.history.append(RoundStats(t, metrics, dt))
+            if tm is not None:
+                tm.round_event(t, runtime="sync", seconds=dt)
+                if per_agent is not None:
+                    m = jax.tree.leaves(self._agent_data)[0].shape[0]
+                    tm.counter(
+                        "wire_bytes", per_agent * m,
+                        per_agent=per_agent, n_active=m,
+                    )
+                self._emit_probes(tm, t, x, y)
+                tm.end_round(t)
             if log_every and (t % log_every == 0 or t == num_rounds - 1):
                 msg = " ".join(f"{k}={v:.3e}" for k, v in metrics.items())
                 print(f"[round {t:5d}] {msg} ({dt*1e3:.1f} ms)")
@@ -344,6 +572,10 @@ class FederatedRunner(RunnerHistoryMixin):
                 weights, budgets, active,
                 agg.round_prev_active(active, prev_active),
             )
+            if self._stateful:
+                # keep the probe-visible state current mid-run (the
+                # mixin's ef_residual probe reads `_telemetry_state`)
+                self._state = state
             return x, y, tracker
 
         def checkpoint_fn(t, x, y, tracker, prev_active):
@@ -378,20 +610,42 @@ class FederatedRunner(RunnerHistoryMixin):
             self._state = state
         return x, y
 
-    def wire_report(self, x: Pytree, y: Pytree, num_local_steps: int) -> Dict:
-        """Priced vs measured per-round communication for this runner's
-        strategy: the analytic `bytes_per_round` next to the probe of the
-        actual packed buffer lengths (`transport.measured_bytes_per_round`,
-        headers included).  Requires a strategy-built runner."""
-        if self._strategy is None:
-            raise ValueError("wire_report needs a runner built from_strategy")
-        from .transport import measured_bytes_per_round
+    def _phase_round(self, tm):
+        """The `Telemetry(phase_spans=True)` dispatch: the four engine
+        phases as SEPARATE jitted programs, each wrapped in a span and
+        blocked to completion so the span measures device time, not
+        async-dispatch time.  `RoundState` is a registered pytree, so
+        the phases cross jit boundaries directly; the composition is the
+        fused round's math (tests/test_phases.py pins separately-jitted
+        phases to the fused round at rtol 1e-12 — XLA partitions the
+        programs differently, so agreement is fp-level, not bitwise).
+        Lazily traced on first use: default-mode runners never pay for
+        it."""
+        if self._phase_factory is None:
+            raise ValueError(
+                "phase_spans needs a runner built via from_strategy"
+            )
+        if self._phase_fns is None:
+            phases = self._phase_factory()
+            # broadcast's keyword-only knobs carry `_UNSET` sentinel
+            # defaults (not jit-traceable) — bind the positional form
+            self._phase_fns = (
+                jax.jit(lambda x, y, d, s: phases.broadcast(x, y, d, s)),
+                jax.jit(phases.exchange_corrections),
+                jax.jit(phases.local_steps),
+                jax.jit(phases.aggregate),
+            )
+        bcast, exch, local, aggr = self._phase_fns
 
-        return {
-            "bytes_per_round": int(
-                self._strategy.bytes_per_round(x, y, num_local_steps)
-            ),
-            "measured_bytes_per_round": measured_bytes_per_round(
-                self._strategy, x, y, num_local_steps
-            ),
-        }
+        def dispatch(x, y, data, state):
+            with tm.span("broadcast"):
+                rs = jax.block_until_ready(bcast(x, y, data, state))
+            with tm.span("exchange_corrections"):
+                rs = jax.block_until_ready(exch(rs, data))
+            with tm.span("local_steps"):
+                rs = jax.block_until_ready(local(rs, data))
+            with tm.span("aggregate"):
+                out = jax.block_until_ready(aggr(rs))
+            return out
+
+        return dispatch

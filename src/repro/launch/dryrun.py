@@ -384,6 +384,11 @@ def main() -> None:
     ap.add_argument("--q-block", type=int, default=None)
     ap.add_argument("--moe-dispatch", default=None, choices=["einsum", "scatter"])
     ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--telemetry", default=None, metavar="DIR",
+                    help="write a run ledger (repro.obs.RunLedger) under "
+                         "DIR: manifest with the resolved flags + one "
+                         "'dryrun' event per successful tag (lower / "
+                         "compile seconds, collectives, memory)")
     args = ap.parse_args()
 
     # an unset knob falls back to the registry's ACTIVE default for the
@@ -415,6 +420,13 @@ def main() -> None:
         assert args.arch and args.shape, "--arch and --shape (or --all)"
         pairs = [(args.arch, args.shape)]
     meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+
+    ledger = None
+    if args.telemetry:
+        from ..obs import RunLedger, run_manifest
+
+        ledger = RunLedger(args.telemetry)
+        ledger.write_manifest(run_manifest(config=vars(args)))
 
     failures = 0
     for arch, shape in pairs:
@@ -480,6 +492,14 @@ def main() -> None:
                 )
                 with open(path, "w") as f:
                     json.dump(rec, f, indent=1)
+                if ledger is not None:
+                    ledger.write({
+                        "kind": "event", "name": "dryrun", "tag": tag,
+                        "lower_s": rec["lower_s"],
+                        "compile_s": rec["compile_s"],
+                        "collectives": rec["collectives"],
+                        "memory": rec["memory_analysis"],
+                    })
                 ma = rec["memory_analysis"]
                 print(
                     f"  ok lower={rec['lower_s']:.1f}s compile={rec['compile_s']:.1f}s "
@@ -494,6 +514,8 @@ def main() -> None:
                 print(f"  FAILED {tag}\n{traceback.format_exc()}", flush=True)
             finally:
                 jax.clear_caches()  # bound process memory across 64 compiles
+    if ledger is not None:
+        ledger.close()
     if failures:
         raise SystemExit(f"{failures} dry-run failures")
 

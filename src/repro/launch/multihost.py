@@ -162,6 +162,7 @@ class MultiHostRunner:
         proj_y: Callable = identity_proj,
         devices: Optional[Sequence] = None,
         pod_map=None,
+        telemetry=None,
         **strategy_kwargs,
     ):
         self._strategy = resolve_strategy(strategy, **strategy_kwargs)
@@ -217,6 +218,10 @@ class MultiHostRunner:
         self._build_programs()
         self._state_s: Optional[List[Dict]] = None
         self._specs: Optional[Tuple[List[LeafSpec], List[LeafSpec]]] = None
+        #: repro.obs.Telemetry sink or None; the wire_log below predates
+        #: it and stays (telemetry ABSORBS it: every wire_log append also
+        #: lands in the sink as a "gathered_payload_bytes" counter)
+        self.telemetry = telemetry
         #: per-round wire accounting: gathered payload/total bytes
         self.wire_log: List[Dict[str, int]] = []
 
@@ -318,80 +323,116 @@ class MultiHostRunner:
         return stacked, payload_bytes, total_bytes
 
     # ------------------------------------------------------------- run loop
+    def _log_wire(self, payload_bytes: int, total_bytes: int) -> None:
+        """ONE owner of the per-round wire record: the legacy `wire_log`
+        entry plus (when a telemetry sink is attached) the
+        "gathered_payload_bytes" counter carrying the same numbers."""
+        self.wire_log.append(
+            {
+                "gathered_payload_bytes": payload_bytes,
+                "gathered_total_bytes": total_bytes,
+            }
+        )
+        if self.telemetry is not None:
+            self.telemetry.counter(
+                "gathered_payload_bytes", payload_bytes,
+                total_bytes=total_bytes,
+            )
+
     def run(self, x: Pytree, y: Pytree, num_rounds: int):
+        import time
+
+        from ..obs.telemetry import maybe_span
+
         x = jax.device_put(x, self._server)
         y = jax.device_put(y, self._server)
         if self._state_s is None:
             self._init_state(x, y)
         per = self._per
-        for _ in range(num_rounds):
-            bcast = [
-                (jax.device_put(x, d), jax.device_put(y, d))
-                for d in self._shard_devices
-            ]
-            gs = [
-                self._shard_grads(bx, by, data)
-                for (bx, by), data in zip(bcast, self._data_s)
-            ]
-            gx = self._concat_server([g[0] for g in gs])
-            gy = self._concat_server([g[1] for g in gs])
-            gbar_x = self._agent_mean_jit(gx)
-            gbar_y = self._agent_mean_jit(gy)
-            gb_s = [
-                (jax.device_put(gbar_x, d), jax.device_put(gbar_y, d))
-                for d in self._shard_devices
-            ]
-            enc = [
-                self._shard_encode(g[0], g[1], gbx, gby, st)
-                for g, (gbx, gby), st in zip(gs, gb_s, self._state_s)
-            ]
-            self._state_s = [
-                jax.device_put(e[2], d)
-                for e, d in zip(enc, self._shard_devices)
-            ]
-            if self._wire:
-                cx, pbx, tbx = self._gather_decode([e[0] for e in enc], 0)
-                cy, pby, tby = self._gather_decode([e[1] for e in enc], 1)
-                self.wire_log.append(
-                    {
-                        "gathered_payload_bytes": pbx + pby,
-                        "gathered_total_bytes": tbx + tby,
-                    }
+        tm = self.telemetry
+        for t in range(num_rounds):
+            t0 = time.perf_counter()
+            if tm is not None:
+                tm.begin_round(t)
+            with maybe_span(tm, "broadcast", dispatches=self._n_shards):
+                bcast = [
+                    (jax.device_put(x, d), jax.device_put(y, d))
+                    for d in self._shard_devices
+                ]
+            with maybe_span(tm, "exchange_corrections",
+                            dispatches=self._n_shards):
+                gs = [
+                    self._shard_grads(bx, by, data)
+                    for (bx, by), data in zip(bcast, self._data_s)
+                ]
+                gx = self._concat_server([g[0] for g in gs])
+                gy = self._concat_server([g[1] for g in gs])
+                gbar_x = self._agent_mean_jit(gx)
+                gbar_y = self._agent_mean_jit(gy)
+                gb_s = [
+                    (jax.device_put(gbar_x, d), jax.device_put(gbar_y, d))
+                    for d in self._shard_devices
+                ]
+                enc = [
+                    self._shard_encode(g[0], g[1], gbx, gby, st)
+                    for g, (gbx, gby), st in zip(gs, gb_s, self._state_s)
+                ]
+                self._state_s = [
+                    jax.device_put(e[2], d)
+                    for e, d in zip(enc, self._shard_devices)
+                ]
+                if self._wire:
+                    cx, pbx, tbx = self._gather_decode(
+                        [e[0] for e in enc], 0
+                    )
+                    cy, pby, tby = self._gather_decode(
+                        [e[1] for e in enc], 1
+                    )
+                    self._log_wire(pbx + pby, tbx + tby)
+                else:
+                    # dense strategies: the gathered "payload" is the
+                    # dense correction stack itself
+                    cx = self._concat_server([e[0] for e in enc])
+                    cy = self._concat_server([e[1] for e in enc])
+                    dense = sum(
+                        int(np.prod(u.shape)) * u.dtype.itemsize
+                        for u in jax.tree.leaves((cx, cy))
+                    )
+                    self._log_wire(dense, dense)
+            with maybe_span(tm, "local_steps", dispatches=self._n_shards):
+                sums = [
+                    self._shard_steps(
+                        bx, by, data,
+                        jax.device_put(
+                            jax.tree.map(
+                                lambda u: u[i * per:(i + 1) * per], cx
+                            ),
+                            d,
+                        ),
+                        jax.device_put(
+                            jax.tree.map(
+                                lambda u: u[i * per:(i + 1) * per], cy
+                            ),
+                            d,
+                        ),
+                        gbx, gby,
+                    )
+                    for i, ((bx, by), data, (gbx, gby), d) in enumerate(
+                        zip(bcast, self._data_s, gb_s, self._shard_devices)
+                    )
+                ]
+            with maybe_span(tm, "aggregate"):
+                x, y = self._server_combine(
+                    [jax.device_put(a, self._server) for a, _ in sums],
+                    [jax.device_put(b, self._server) for _, b in sums],
                 )
-            else:
-                # dense strategies: the gathered "payload" is the dense
-                # correction stack itself
-                cx = self._concat_server([e[0] for e in enc])
-                cy = self._concat_server([e[1] for e in enc])
-                dense = sum(
-                    int(np.prod(u.shape)) * u.dtype.itemsize
-                    for u in jax.tree.leaves((cx, cy))
+            if tm is not None:
+                tm.round_event(
+                    t, runtime="multihost",
+                    seconds=time.perf_counter() - t0,
+                    n_shards=self._n_shards,
                 )
-                self.wire_log.append(
-                    {
-                        "gathered_payload_bytes": dense,
-                        "gathered_total_bytes": dense,
-                    }
-                )
-            sums = [
-                self._shard_steps(
-                    bx, by, data,
-                    jax.device_put(
-                        jax.tree.map(lambda u: u[i * per:(i + 1) * per], cx), d
-                    ),
-                    jax.device_put(
-                        jax.tree.map(lambda u: u[i * per:(i + 1) * per], cy), d
-                    ),
-                    gbx, gby,
-                )
-                for i, ((bx, by), data, (gbx, gby), d) in enumerate(
-                    zip(bcast, self._data_s, gb_s, self._shard_devices)
-                )
-            ]
-            x, y = self._server_combine(
-                [jax.device_put(a, self._server) for a, _ in sums],
-                [jax.device_put(b, self._server) for _, b in sums],
-            )
+                tm.end_round(t)
         jax.block_until_ready((x, y))
         return x, y
 

@@ -18,6 +18,16 @@ iterates match the sync loop to fp tolerance.  `init_distributed` runs
 first either way, so a multi-process launch (JAX_COORDINATOR_ADDRESS set)
 spans hosts transparently.
 
+`--telemetry DIR` attaches the unified observability sink (`repro.obs`):
+a structured run ledger (JSONL event stream + run manifest with the
+resolved config, strategy signature, seed folds and schedule digest)
+plus per-round spans, wire-byte counters, opt-in invariant probes
+(`--telemetry-probes`) and sampled `jax.profiler` traces
+(`--profile-rounds`).  Probes are evaluated by the runner paths
+(`--population` and `--runtime async`); the raw fused sync loop emits
+round spans + wire-byte counters only.  Without the flag nothing is
+constructed and the runners execute their exact pre-telemetry traces.
+
     PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --reduced \
         --rounds 50 --local-steps 8 --agents 4 \
         [--algorithm quantized_gt --quantization-bits 8] [--runtime async]
@@ -106,6 +116,20 @@ def main() -> None:
                          "residuals) — expected to stall under churn")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--telemetry", default=None, metavar="DIR",
+                    help="write a structured run ledger (events.jsonl + "
+                         "manifest.json, repro.obs.RunLedger) under DIR "
+                         "and emit per-round spans / wire-byte counters")
+    ap.add_argument("--telemetry-probes", default="",
+                    help="comma-separated invariant probes to sample "
+                         "(repro.obs.probes: gt_residual, tracker_drift, "
+                         "ef_residual, priced_vs_measured, duality_gap)")
+    ap.add_argument("--telemetry-probe-every", type=int, default=1,
+                    help="sample the enabled probes every N rounds")
+    ap.add_argument("--profile-rounds", default="",
+                    help="comma-separated round indices to wrap in a "
+                         "jax.profiler trace (written under "
+                         "DIR/profile; requires --telemetry)")
     args = ap.parse_args()
 
     from .multihost import init_distributed
@@ -167,6 +191,31 @@ def main() -> None:
             f"churn_events={schedule.churn_events()} rebase={rebase}"
         )
 
+    telemetry = ledger = None
+    if args.telemetry:
+        import os
+
+        from ..obs import RunLedger, Telemetry, run_manifest
+
+        ledger = RunLedger(args.telemetry)
+        probes = tuple(p for p in args.telemetry_probes.split(",") if p)
+        prof = tuple(int(r) for r in args.profile_rounds.split(",") if r)
+        telemetry = Telemetry(
+            ledger=ledger, probes=probes,
+            probe_every=args.telemetry_probe_every,
+            profile_dir=(os.path.join(args.telemetry, "profile")
+                         if prof else None),
+            profile_rounds=prof,
+        )
+        ledger.write_manifest(run_manifest(
+            config=vars(args), strategy=strategy,
+            noise_seed=args.noise_seed,
+            availability_seed=(args.population_seed if args.population
+                               else None),
+            schedule=schedule,
+        ))
+        print(f"telemetry: ledger at {args.telemetry}")
+
     if args.runtime == "async":
         from ..fed import AsyncFederatedRunner
 
@@ -177,6 +226,7 @@ def main() -> None:
                 "loss": global_loss(x, y),
                 "delta_norm": jnp.linalg.norm(y["delta"]),
             },
+            telemetry=telemetry,
         )
         params, delta = runner.run(
             params, delta, args.rounds, log_every=args.log_every,
@@ -186,6 +236,8 @@ def main() -> None:
             save_checkpoint(
                 args.ckpt_dir, args.rounds, {"x": params, "y": delta}
             )
+        if ledger is not None:
+            ledger.close()
         print("done.")
         return
 
@@ -203,11 +255,14 @@ def main() -> None:
             },
             checkpoint_dir=args.ckpt_dir,
             checkpoint_every=50 if args.ckpt_dir else 0,
+            telemetry=telemetry,
         )
         params, delta = runner.run(
             params, delta, args.rounds, log_every=args.log_every,
             schedule=schedule, rebase=rebase,
         )
+        if ledger is not None:
+            ledger.close()
         print("done.")
         return
 
@@ -217,12 +272,32 @@ def main() -> None:
         proj_y=delta_projection(1.0), explicit_state=stateful,
     ))
     state = strategy.init_state(params, delta, args.agents) if stateful else None
+    per_agent = None
+    if telemetry is not None:
+        from ..fed.transport import measured_bytes_per_round
+
+        per_agent = int(measured_bytes_per_round(
+            strategy, params, delta, args.local_steps
+        ))
     t0 = time.time()
     for t in range(args.rounds):
+        rt0 = time.perf_counter()
+        if telemetry is not None:
+            telemetry.begin_round(t)
         if stateful:
             params, delta, state = rnd(params, delta, data, state)
         else:
             params, delta = rnd(params, delta, data)
+        if telemetry is not None:
+            jax.block_until_ready(params)
+            telemetry.round_event(
+                t, runtime="fused", seconds=time.perf_counter() - rt0
+            )
+            telemetry.counter(
+                "wire_bytes", per_agent * args.agents,
+                per_agent=per_agent, n_active=args.agents,
+            )
+            telemetry.end_round(t)
         if t % args.log_every == 0 or t == args.rounds - 1:
             lv = float(gl(params, delta))
             dn = float(jnp.linalg.norm(delta["delta"]))
@@ -235,6 +310,8 @@ def main() -> None:
                 # error-feedback buffers
                 payload["strategy_state"] = state
             save_checkpoint(args.ckpt_dir, t + 1, payload)
+    if ledger is not None:
+        ledger.close()
     print("done.")
 
 

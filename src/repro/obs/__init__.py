@@ -1,0 +1,37 @@
+"""Unified telemetry: phase spans, invariant probes, and the run ledger.
+
+One owner for observability across every runtime (`fed.runtime`,
+`fed.async_runtime`, `launch.multihost`, `sim.sparse`):
+
+  telemetry  the `Telemetry` event sink — per-round / per-phase spans
+             (named after `core.engine.make_phases`), counters (wire
+             bytes, active-set sizes, peak memory) and sampled probes;
+             off by default (`telemetry=None` runs the pre-telemetry
+             code verbatim — the bitwise pin, tests/test_obs.py)
+  probes     pure invariant probes: the GT identity residual
+             `||sum_i c_i||`, tracker-table vs `SparseTracker` drift,
+             EF residual norms, priced-vs-measured bytes, duality gap —
+             the same function on every runtime, so a mismatch
+             localizes the faulty layer
+  ledger     the structured export: JSONL event stream + run manifest
+             (resolved config, strategy knob signature, seed folds,
+             schedule digest), written by `launch.train --telemetry`
+             and consumed by `benchmarks/`
+  memory     `peak_memory` (moved from `benchmarks.common`, shim kept)
+
+The overhead gate lives in `benchmarks/obs.py`: telemetry enabled
+without probes must stay within 3% of disabled wall clock.
+"""
+from . import probes
+from .ledger import RunLedger, run_manifest
+from .memory import peak_memory
+from .telemetry import Telemetry, maybe_span
+
+__all__ = [
+    "RunLedger",
+    "Telemetry",
+    "maybe_span",
+    "peak_memory",
+    "probes",
+    "run_manifest",
+]

@@ -1,0 +1,60 @@
+"""Peak-memory measurement (moved from `benchmarks.common` — one owner).
+
+`benchmarks.common.peak_memory` remains as a re-export shim, so the
+elastic memory gate (`benchmarks/elastic.py --check-pods`) and ad-hoc
+callers keep working; new callers should import from `repro.obs` and
+pass a `Telemetry` sink so the measurement lands in the run ledger.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+
+def peak_memory(fn, *args, telemetry=None, label: Optional[str] = None,
+                **kwargs) -> Dict:
+    """Run fn(*args, **kwargs) and report its peak memory footprint:
+
+      host_peak_bytes    tracemalloc's peak traced python/numpy
+                         allocation during the call (deltas against the
+                         running baseline — tracing starts/stops here);
+      live_buffer_bytes  a census of live jax device buffers at the end
+                         of the call (`jax.live_arrays`), the device-
+                         side residency the traced-malloc peak misses;
+      result             fn's return value.
+
+    This is the measurement behind the O(active) memory gate: the mega
+    population run's peak must scale with the ACTIVE set (+ pods), not
+    with the m = 1e6 registry (`benchmarks/elastic.py --check`).
+
+    With a `telemetry` sink the measurement is also emitted as a
+    "peak_memory" counter event (value = host peak; the device census
+    rides as an attribute), so ledgers carry memory truth alongside
+    wire and timing truth."""
+    import tracemalloc
+
+    import jax
+
+    tracemalloc.start()
+    try:
+        result = fn(*args, **kwargs)
+        _, host_peak = tracemalloc.get_traced_memory()
+    finally:
+        tracemalloc.stop()
+    live = sum(
+        a.size * a.dtype.itemsize
+        for a in jax.live_arrays()
+        if hasattr(a, "size") and hasattr(a, "dtype")
+    )
+    rec = {
+        "host_peak_bytes": int(host_peak),
+        "live_buffer_bytes": int(live),
+        "result": result,
+    }
+    if telemetry is not None:
+        attrs = {"live_buffer_bytes": rec["live_buffer_bytes"]}
+        if label is not None:
+            attrs["label"] = label
+        telemetry.counter(
+            "peak_memory", rec["host_peak_bytes"], **attrs
+        )
+    return rec

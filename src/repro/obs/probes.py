@@ -1,0 +1,179 @@
+"""Invariant probes: pure functions over round state, shared by every runtime.
+
+The paper's guarantees are measurable invariants — FedGDA-GT's linear
+rate rests on the gradient-tracking identity `sum_i c_i = 0` holding
+every round (PAPER.md, Theorem 1), error-feedback compressors must keep
+their residual mass bounded, and the wire accounting must price what the
+buffers actually carry.  Each probe here is a PURE function of explicit
+inputs (correction stacks, tracker tables, strategy state, iterates) —
+no runtime handles, no hidden state — so the sync, async and sparse
+runtimes evaluate the SAME function on the state they hold, and a probe
+mismatch localizes the faulty layer instead of the faulty runner.
+
+Probe names (what runners emit under `Telemetry(probes=(...))`):
+
+  gt_residual         ||sum_i c_i|| over both correction trees — the GT
+                      invariant residual, ~fp-reduction noise when the
+                      tracker math is right (`gt_residual`,
+                      `corrections_from_table`, `anchor_corrections`)
+  tracker_drift       ||column-sum(dense table) - running sum|| — the
+                      `SparseTracker` running-sum representation vs the
+                      table it stands for (`tracker_drift`,
+                      `sparse_tracker_table`)
+  ef_residual         per-buffer norms of the strategy's error-feedback
+                      state ("ex" / "ey") (`ef_residual_norms`)
+  priced_vs_measured  analytic `bytes_per_round` next to the packed-
+                      buffer probe (`priced_vs_measured`)
+  duality_gap         a caller-supplied gap oracle at the current
+                      iterate (`duality_gap`)
+
+Probes run on the host against materialized values; they never alter
+the jitted round programs (sampling them cannot change iterates).
+Stochastic strategies are probed with the NOISELESS anchor oracle —
+the same convention `sim.init_tracker` pins.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+def _global_norm(*trees) -> float:
+    """l2 norm over every leaf of every tree, as one scalar.  Host-side
+    numpy accumulation: true float64 even when jax_enable_x64 is off
+    (float32 model runs), with no dtype-truncation warning."""
+    total = 0.0
+    for t in trees:
+        for u in jax.tree.leaves(t):
+            total += float(np.sum(np.square(np.asarray(u, np.float64))))
+    return float(np.sqrt(total))
+
+
+# ------------------------------------------------------------ GT invariant
+def gt_residual(cx: Pytree, cy: Pytree,
+                weights: Optional[jax.Array] = None) -> float:
+    """The gradient-tracking invariant residual `||sum_i c_i||` over
+    both correction trees (weighted when `weights` is given).  Exact
+    corrections sum to zero by construction; anything above fp-reduction
+    noise means the exchange (tracker table, re-anchoring, transform)
+    broke the identity."""
+    if weights is None:
+        s = lambda t: jax.tree.map(lambda u: jnp.sum(u, axis=0), t)
+    else:
+        w = jnp.asarray(weights)
+        s = lambda t: jax.tree.map(
+            lambda u: jnp.tensordot(w, u, axes=(0, 0)), t
+        )
+    return _global_norm(s(cx), s(cy))
+
+
+def corrections_from_table(tab_x: Pytree, tab_y: Pytree
+                           ) -> Tuple[Pytree, Pytree]:
+    """The uniform GT corrections a tracker table implies:
+    `c_i = mean_j(table_j) - table_i` — exactly the exchange identity
+    `sim.elastic.tracker_exchange` builds (before any strategy
+    transform), reconstructible from the table alone.  This is the
+    probe input every runtime can produce: the sync and async elastic
+    runners hold the table directly, the sparse engine materializes it
+    via `sparse_tracker_table`."""
+    mean = lambda t: jax.tree.map(lambda u: jnp.mean(u, axis=0), t)
+    gbar_x, gbar_y = mean(tab_x), mean(tab_y)
+    sub = lambda g, t: jax.tree.map(lambda gb, u: gb[None] - u, g, t)
+    return sub(gbar_x, tab_x), sub(gbar_y, tab_y)
+
+
+def anchor_corrections(gfn: Callable, x: Pytree, y: Pytree,
+                       agent_data: Pytree) -> Tuple[Pytree, Pytree]:
+    """The full-participation corrections at the current server iterate,
+    recomputed from scratch with the noiseless oracle (`gfn =
+    grad_xy(loss)`): `c_i = gbar - g_i(x, y)`.  The probe input for
+    non-elastic rounds, where no tracker table exists."""
+    g = jax.vmap(gfn, in_axes=(None, None, 0))(x, y, agent_data)
+    gbar_x = jax.tree.map(lambda u: jnp.mean(u, axis=0), g.gx)
+    gbar_y = jax.tree.map(lambda u: jnp.mean(u, axis=0), g.gy)
+    sub = lambda gb, t: jax.tree.map(lambda b, u: b[None] - u, gb, t)
+    return sub(gbar_x, g.gx), sub(gbar_y, g.gy)
+
+
+# ------------------------------------------------------- tracker vs sparse
+def tracker_drift(tab_x: Pytree, tab_y: Pytree,
+                  sum_gx: Pytree, sum_gy: Pytree) -> float:
+    """||column-sum(table) - running sum|| across both trees: how far a
+    `SparseTracker`'s incremental `sum += Σ(g_new - g_old)` has drifted
+    from the dense table it represents.  Zero up to accumulated fp
+    noise when commit/lookup bookkeeping is right."""
+    colsum = lambda t: jax.tree.map(lambda u: jnp.sum(u, axis=0), t)
+    diff = lambda a, b: jax.tree.map(jnp.subtract, colsum(a), b)
+    return _global_norm(diff(tab_x, sum_gx), diff(tab_y, sum_gy))
+
+
+def sparse_tracker_table(tracker, source, gfn: Callable,
+                         chunk: int = 8192) -> Tuple[Pytree, Pytree]:
+    """Materialize the dense tracker table a `sim.SparseTracker` stands
+    for: touched agents' stored rows, untouched agents' anchor gradient
+    recomputed at the tracker's init iterate (x0, y0) — the exact
+    noiseless oracle `SparseTracker.init` summed.  O(m) compute and
+    memory: a PROBE, deliberately not a runtime path."""
+    m = tracker.m
+    vgrad0 = jax.jit(
+        lambda x, y, d: jax.vmap(gfn, in_axes=(None, None, 0))(x, y, d)
+    )
+    tabs_x, tabs_y = [], []
+    chunk = max(1, min(int(chunk), m))
+    for lo in range(0, m, chunk):
+        ids = np.arange(lo, min(lo + chunk, m), dtype=np.int64)
+        touched, rows_gx, rows_gy = tracker.lookup(ids)
+        g0 = vgrad0(tracker.x0, tracker.y0, source.gather(ids))
+        mask = jnp.asarray(touched)
+        sel = lambda rows, anchors: jax.tree.map(
+            lambda r, a: jnp.where(
+                mask.reshape((-1,) + (1,) * (r.ndim - 1)), r, a
+            ),
+            rows, anchors,
+        )
+        tabs_x.append(sel(rows_gx, g0.gx))
+        tabs_y.append(sel(rows_gy, g0.gy))
+    cat = lambda parts: jax.tree.map(
+        lambda *u: jnp.concatenate(u, axis=0), *parts
+    )
+    return cat(tabs_x), cat(tabs_y)
+
+
+# ----------------------------------------------------------- EF residuals
+def ef_residual_norms(state: Optional[Dict]) -> Dict[str, float]:
+    """Per-buffer l2 norms of the strategy's error-feedback residuals
+    (the "ex" / "ey" entries compressing strategies carry).  Empty dict
+    for strategies without EF state — the probe is a no-op for them."""
+    out: Dict[str, float] = {}
+    for k in ("ex", "ey"):
+        if state and k in state:
+            out[k] = _global_norm(state[k])
+    return out
+
+
+# --------------------------------------------------------- wire accounting
+def priced_vs_measured(strategy, x: Pytree, y: Pytree,
+                       num_local_steps: int) -> Dict[str, int]:
+    """The analytic per-round price next to the packed-buffer probe —
+    the two byte accounts that must never silently drift
+    (`fed.transport`)."""
+    from ..fed.transport import measured_bytes_per_round
+
+    return {
+        "priced": int(strategy.bytes_per_round(x, y, num_local_steps)),
+        "measured": int(
+            measured_bytes_per_round(strategy, x, y, num_local_steps)
+        ),
+    }
+
+
+# -------------------------------------------------------------- optimality
+def duality_gap(gap_fn: Callable, x: Pytree, y: Pytree) -> float:
+    """Caller-supplied duality-gap / eps oracle at the current iterate
+    (e.g. `tree_sq_dist` to a known saddle on the quadratic game)."""
+    return float(gap_fn(x, y))

@@ -29,6 +29,7 @@ from .elastic import (
     ElasticAggregator,
     init_tracker,
     make_elastic_round,
+    per_agent_bytes,
     schedule_bytes,
     tracker_exchange,
 )
@@ -101,6 +102,7 @@ __all__ = [
     "init_tracker",
     "make_elastic_round",
     "make_population",
+    "per_agent_bytes",
     "renormalized_weights",
     "schedule_bytes",
     "tracker_exchange",

@@ -254,6 +254,33 @@ def make_elastic_round(
     return elastic_round
 
 
+def per_agent_bytes(
+    strategy,
+    x: Pytree,
+    y: Pytree,
+    num_local_steps: int,
+    *,
+    measured: bool = True,
+) -> int:
+    """One ACTIVE agent's per-round payload under an external schedule
+    (measured packed buffers by default, the analytic price with
+    measured=False).  Membership comes from the schedule, bypassing the
+    strategy's own client sampling, so a participation-discounted price
+    would double-discount — the price is taken at participation=1 (see
+    `schedule_bytes`, which multiplies this by each round's active
+    count).  ONE owner of that rule: `schedule_bytes`, the runners'
+    `wire_report`, and the telemetry wire counters all derive from it."""
+    from ..fed.transport import measured_bytes_per_round
+
+    if getattr(strategy, "participation", 1.0) < 1.0:
+        strategy = dataclasses.replace(strategy, participation=1.0)
+    return (
+        int(measured_bytes_per_round(strategy, x, y, num_local_steps))
+        if measured
+        else int(strategy.bytes_per_round(x, y, num_local_steps))
+    )
+
+
 def schedule_bytes(
     strategy,
     x: Pytree,
@@ -285,15 +312,10 @@ def schedule_bytes(
     (membership comes from the schedule), so a participation-discounted
     price (`PartialParticipation.bytes_per_round` scales by the expected
     sampled fraction) would double-discount: every active agent moves
-    the full payload.  The price is therefore taken at participation=1."""
-    from ..fed.transport import measured_bytes_per_round
-
-    if getattr(strategy, "participation", 1.0) < 1.0:
-        strategy = dataclasses.replace(strategy, participation=1.0)
-    per_agent = (
-        measured_bytes_per_round(strategy, x, y, num_local_steps)
-        if measured
-        else int(strategy.bytes_per_round(x, y, num_local_steps))
+    the full payload.  The price is therefore taken at participation=1
+    (`per_agent_bytes`)."""
+    per_agent = per_agent_bytes(
+        strategy, x, y, num_local_steps, measured=measured
     )
     per_pod = 0
     if pods is not None:

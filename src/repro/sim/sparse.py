@@ -290,6 +290,7 @@ class SparseElasticEngine:
         metric_fn: Optional[Callable] = None,
         init_chunk: int = 8192,
         dense_fallback_max_m: int = DENSE_FALLBACK_MAX_M,
+        telemetry=None,
     ):
         from ..fed.strategies import resolve_strategy
 
@@ -314,7 +315,13 @@ class SparseElasticEngine:
             loss, self._strategy, self._K, self._eta_x, self._eta_y,
             proj_x=proj_x, proj_y=proj_y,
         )
+        #: repro.obs.Telemetry sink or None (None = pre-telemetry code
+        #: verbatim); public so tests flip it on a built engine
+        self.telemetry = telemetry
         gfn = grad_xy(loss)
+        #: the noiseless anchor oracle — probes re-derive untouched
+        #: tracker rows with it (`obs.probes.sparse_tracker_table`)
+        self._gfn = gfn
         self._vgrad = jax.vmap(gfn, in_axes=(0, 0, 0))
         noise = getattr(self._strategy, "noise", None)
         self._noise = noise
@@ -428,12 +435,18 @@ class SparseElasticEngine:
                 f"schedule is for m={schedule.m}, source has "
                 f"{self._source.m}"
             )
-        if (
+        dense = bool(
             self._fallback_m
             and self._source.m <= self._fallback_m
             and hasattr(schedule, "densify")
             and hasattr(self._source, "materialize")
-        ):
+        )
+        if self.telemetry is not None:
+            self.telemetry.emit(
+                "event", "dense_fallback", round=None, value=dense,
+                m=self._source.m, max_m=self._fallback_m,
+            )
+        if dense:
             return self._run_dense(x, y, schedule, T, log_every, resume)
         return self._run_sparse(x, y, schedule, T, log_every, resume)
 
@@ -452,6 +465,9 @@ class SparseElasticEngine:
                 proj_x=self._proj_x, proj_y=self._proj_y,
             )
         runner = self._dense_runner
+        # refreshed every call so flipping the engine's sink (tests do)
+        # reaches an already-built dense runner
+        runner.telemetry = self.telemetry
         prev_n = len(runner.history)
         x, y = runner.run(
             x, y, T, log_every=log_every,
@@ -466,9 +482,26 @@ class SparseElasticEngine:
         return x, y
 
     def _run_sparse(self, x, y, schedule, T, log_every, resume):
+        import time
+
         from ..fed.pods import encode_pod_partials
 
         strategy = self._strategy
+        tm = self.telemetry
+        per_agent = None
+        if tm is not None:
+            from ..obs import probes as _p
+
+            if tm.probe_due("priced_vs_measured", 0):
+                tm.probe_value(
+                    "priced_vs_measured", 0,
+                    _p.priced_vs_measured(strategy, x, y, self._K),
+                )
+            # per-ACTIVE-agent payload — the same `sim.per_agent_bytes`
+            # account schedule_bytes and the runners' wire_report price
+            from .elastic import per_agent_bytes
+
+            per_agent = per_agent_bytes(strategy, x, y, self._K)
         if resume and self._tracker is None:
             raise ValueError("resume=True but no previous sparse run")
         if not resume:
@@ -487,9 +520,12 @@ class SparseElasticEngine:
             self._state = None
             self._prev_ids = None
         for t in range(T):
+            t0 = time.perf_counter()
             ev = schedule[t]
             ids = ev.active_ids
             n = len(ids)
+            if tm is not None:
+                tm.begin_round(t)
             data = self._source.gather(ids)
             if self._state is None:
                 self._state = (
@@ -505,6 +541,14 @@ class SparseElasticEngine:
                 self._state = strategy.realign_state_rows(
                     self._state, self._prev_ids, ids
                 )
+                if tm is not None:
+                    tm.emit(
+                        "event", "realign",
+                        n_continuing=int(
+                            len(np.intersect1d(self._prev_ids, ids))
+                        ),
+                        n_active=n,
+                    )
             touched, st_gx, st_gy = self._tracker.lookup(ids)
             pod_ids = (
                 jnp.asarray(self._pods.pod_of(ids))
@@ -541,6 +585,25 @@ class SparseElasticEngine:
                     {k: float(v) for k, v in self._metric_fn(x, y).items()}
                 )
             self.history.append(rec)
+            if tm is not None:
+                dt = time.perf_counter() - t0
+                tm.round_event(
+                    t, runtime="sparse", seconds=dt,
+                    n_active=n,
+                    **{
+                        k: rec[k]
+                        for k in ("live_pods", "pod_wire_bytes")
+                        if k in rec
+                    },
+                )
+                if per_agent is not None:
+                    wire = per_agent * n + rec.get("pod_wire_bytes", 0)
+                    tm.counter(
+                        "wire_bytes", wire,
+                        per_agent=per_agent, n_active=n,
+                    )
+                self._emit_sparse_probes(tm, t, x, y)
+                tm.end_round(t)
             if log_every and (t % log_every == 0 or t == T - 1):
                 msg = " ".join(
                     f"{k}={v:.3e}" if isinstance(v, float) else f"{k}={v}"
@@ -550,3 +613,38 @@ class SparseElasticEngine:
                 print(f"[sparse round {t:5d}] {msg}")
             self._prev_ids = ids
         return x, y
+
+    def _emit_sparse_probes(self, tm, t, x, y) -> None:
+        """Sampled invariant probes on the O(active) path.  The GT and
+        drift probes materialize the implied DENSE table
+        (`obs.probes.sparse_tracker_table` — O(m), a probe cost, never a
+        runtime one) so the probe function evaluated is the SAME one the
+        dense runtimes feed their tracker tables to: probe parity across
+        runtimes localizes a faulty layer (tests/test_obs.py)."""
+        from ..obs import probes as _p
+
+        want_gt = tm.probe_due("gt_residual", t)
+        want_drift = tm.probe_due("tracker_drift", t)
+        if self._use_corr and (want_gt or want_drift):
+            tab_x, tab_y = _p.sparse_tracker_table(
+                self._tracker, self._source, self._gfn
+            )
+            if want_gt:
+                cx, cy = _p.corrections_from_table(tab_x, tab_y)
+                tm.probe_value("gt_residual", t, _p.gt_residual(cx, cy))
+            if want_drift:
+                tm.probe_value(
+                    "tracker_drift", t,
+                    _p.tracker_drift(
+                        tab_x, tab_y,
+                        self._tracker.sum_gx, self._tracker.sum_gy,
+                    ),
+                )
+        if tm.probe_due("ef_residual", t):
+            norms = _p.ef_residual_norms(self._state)
+            if norms:
+                tm.probe_value("ef_residual", t, norms)
+        if tm.gap_fn is not None and tm.probe_due("duality_gap", t):
+            tm.probe_value(
+                "duality_gap", t, _p.duality_gap(tm.gap_fn, x, y)
+            )

@@ -56,6 +56,11 @@ def pytest_configure(config):
         "pods: O(active) sparse-state + two-level pod-aggregation "
         "suites (sim.sparse, fed.pods); select with -m pods",
     )
+    config.addinivalue_line(
+        "markers",
+        "obs: telemetry / observability suites (repro.obs: bitwise "
+        "pins, invariant probes, run ledger); select with -m obs",
+    )
 
 
 @pytest.fixture(scope="session")
